@@ -1,0 +1,98 @@
+"""Render FINAL_TABLE.md: baseline (paper-faithful, instrument v1) vs final
+(optimized, instrument v2) roofline terms per cell, both meshes."""
+import glob
+import json
+
+
+def load(paths):
+    rows = {}
+    for p in paths:
+        try:
+            data = json.load(open(p))
+        except (OSError, json.JSONDecodeError):
+            continue
+        for r in (data if isinstance(data, list) else [data]):
+            if r.get("status") == "ok":
+                rows[(r["arch"], r["shape"], r["mesh"])] = r
+    return rows
+
+
+def decode_mem_frac(r):
+    """Decode cells live on the memory roofline: ideal = one cache read per
+    token; frac_mem = ideal_mem_time / t_memory."""
+    from repro.configs.base import SHAPES, get_model_config
+    from repro.launch.analysis import HBM_BW
+    try:
+        cfg = get_model_config(r["arch"])
+        shape = SHAPES[r["shape"]]
+    except KeyError:
+        return None
+    if shape.kind != "decode":
+        return None
+    B, S = shape.global_batch, shape.seq_len
+    cache_bytes = 0.0
+    kinds = cfg.layer_kinds()
+    for k in kinds:
+        if k in ("attn", "local"):
+            cache_bytes += 2 * B * S * cfg.num_kv_heads * cfg.head_dim * 2
+        else:
+            d_in = cfg.ssm_expand * cfg.d_model
+            H = d_in // cfg.ssm_head_dim
+            cache_bytes += B * H * cfg.ssm_head_dim * cfg.ssm_state * 4
+    ideal = cache_bytes / (r["chips"] * HBM_BW)
+    return ideal / r["t_memory_s"] if r["t_memory_s"] else None
+
+
+def main():
+    base = load(["dryrun_single_pod.json", "dryrun_multi_pod.json"]
+                + glob.glob("dryrun_long500k_*.json"))
+    fin = load(["dryrun_final.json"])
+    out = ["# Final roofline table — baseline vs optimized",
+           "",
+           "bound = max(t_compute, t_memory, t_collective); frac = ideal/bound",
+           "(compute ideal = MODEL_FLOPS; decode cells additionally report",
+           "frac_mem = cache-read-per-token ideal / t_memory — decode's true",
+           "roofline is the memory side).  Baseline = paper-faithful system,",
+           "instrument v1; see EXPERIMENTS §Roofline.",
+           "", ]
+    for mesh in ("16x16", "2x16x16"):
+        out.append(f"\n## mesh {mesh}\n")
+        out.append("| arch | shape | t_cmp | t_mem | t_coll | dominant | "
+                   "frac | bound vs baseline |")
+        out.append("|---|---|---|---|---|---|---|---|")
+        for key in sorted(fin):
+            if key[2] != mesh:
+                continue
+            r = fin[key]
+            b = base.get(key)
+            bound = max(r["t_compute_s"], r["t_memory_s"], r["t_collective_s"])
+            if b:
+                bbound = max(b["t_compute_s"], b["t_memory_s"],
+                             b["t_collective_s"])
+                gain = f"{bbound / bound:.1f}x" if bound else "-"
+            else:
+                gain = "-"
+            mf = decode_mem_frac(r)
+            frac = (f"{r['roofline_fraction']:.3f}"
+                    if mf is None else f"mem:{mf:.3f}")
+            out.append(
+                f"| {r['arch']} | {r['shape']} | {r['t_compute_s']:.2f} "
+                f"| {r['t_memory_s']:.2f} | {r['t_collective_s']:.2f} "
+                f"| {r['dominant']} | {frac} | {gain} |")
+    # summary stats
+    singles = [r for k, r in fin.items() if k[2] == "16x16"]
+    if singles:
+        import statistics
+        fr = []
+        for r in singles:
+            mf = decode_mem_frac(r)
+            fr.append(r["roofline_fraction"] if mf is None else mf)
+        out.append(f"\ncells: {len(singles)} | median frac (decode=mem-frac) "
+                   f"{statistics.median(fr):.3f} | best {max(fr):.3f}")
+    text = "\n".join(out)
+    open("FINAL_TABLE.md", "w").write(text + "\n")
+    print(text)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,84 @@
+"""HLO profiler for hillclimbing: top collectives / traffic ops by
+(bytes x trip-count multiplier), attributed via op_name metadata.
+
+    PYTHONPATH=src python -m benchmarks.hlo_profile --arch llava-next-34b \
+        --shape prefill_32k [--multi-pod] [--top 15]
+"""
+import argparse
+import re
+
+from repro.launch import analysis as A
+
+_OPNAME = re.compile(r'op_name="([^"]*)"')
+
+
+def profile_cell(arch, shape, multi_pod=False, top=15):
+    import os
+    os.environ.setdefault("XLA_FLAGS",
+                          "--xla_force_host_platform_device_count=512")
+    from repro.launch.dryrun import make_run, lower_cell
+    from repro.launch.mesh import make_production_mesh
+    run = make_run(arch, shape, multi_pod)
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    lowered, compiled = lower_cell(run, mesh)
+    return profile_hlo(compiled.as_text(), top=top), compiled
+
+
+def profile_hlo(hlo_text, top=15):
+    cm = A.HloCost(hlo_text)
+    colls, traffic = [], []
+    for c in cm.comps.values():
+        me = cm.mult.get(c.name, 0.0)
+        mm = cm.mem_mult.get(c.name, 0.0)
+        for name, shape_str, opcode, line in c.ops:
+            tag = _OPNAME.search(line)
+            tag = tag.group(1)[-90:] if tag else "?"
+            if any(opcode.startswith(k) for k in A._COLLECTIVES) \
+                    and not opcode.endswith("-done") and me:
+                b = A.shape_bytes(shape_str)
+                if shape_str.startswith("("):
+                    b /= 2
+                colls.append((b * me, opcode, shape_str[:60], me, tag))
+            if opcode not in A._NO_TRAFFIC and not opcode.endswith("-done") \
+                    and mm:
+                t = A.shape_bytes(shape_str)
+                args = line.split("(", 1)[1] if "(" in line else ""
+                for ref in re.findall(r"%[\w\.\-]+", args):
+                    if ref in c.defs:
+                        t += A.shape_bytes(c.defs[ref])
+                traffic.append((t * mm, opcode, shape_str[:60], mm, tag))
+    out = {"summary": {
+        "flops": cm.flops, "bytes": cm.bytes,
+        "coll": cm.collectives().bytes_simple,
+        "by_tag": cm.by_tag(),
+        "coll_by_kind": cm.collectives().by_kind,
+    }}
+    out["top_collectives"] = sorted(colls, reverse=True)[:top]
+    out["top_traffic"] = sorted(traffic, reverse=True)[:top]
+    return out
+
+
+def render(prof):
+    s = prof["summary"]
+    print(f"per-dev: flops={s['flops']:.3e} bytes={s['bytes']:.3e} "
+          f"coll={s['coll']:.3e}")
+    print("coll by kind:", {k: f"{v:.2e}" for k, v in s["coll_by_kind"].items()})
+    print("by tag:", {k: {kk: f"{vv:.2e}" for kk, vv in v.items()}
+                      for k, v in s["by_tag"].items()})
+    print("\n-- top collectives (bytes x mult) --")
+    for b, op, shape, m, tag in prof["top_collectives"]:
+        print(f"  {b:.3e}  {op:18s} x{m:<6.0f} {shape:40s} {tag}")
+    print("\n-- top traffic ops --")
+    for b, op, shape, m, tag in prof["top_traffic"]:
+        print(f"  {b:.3e}  {op:18s} x{m:<6.0f} {shape:40s} {tag}")
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--shape", required=True)
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--top", type=int, default=15)
+    args = ap.parse_args()
+    prof, _ = profile_cell(args.arch, args.shape, args.multi_pod, args.top)
+    render(prof)

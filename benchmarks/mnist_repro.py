@@ -1,0 +1,44 @@
+"""Paper §3 / Fig. 3 reproduction: non-parallel vs parallel dropout on MNIST.
+
+Paper numbers (real MNIST, 10k iters): non-parallel 0.9535, parallel (20
+workers x batch 5, AllReduce, same global batch 100) 0.9713 — parallel
+*trains better*.  We reproduce the comparison at equal hyperparameters.
+
+Deviation note (recorded in EXPERIMENTS.md): the paper's eta=0.3 diverges
+with our init + (synthetic-fallback) data — with momentum 0.98 its effective
+step is 0.3/(1-0.98)=15.  We use eta=0.005, mu=0.98 (the paper's momentum,
+largest stable eta) for BOTH arms, so the comparison stays apples-to-apples.
+"""
+from __future__ import annotations
+
+import json
+import time
+
+
+def run(num_steps: int = 2000, eval_every: int = 500, quick: bool = False):
+    from repro.core.collective_trainer import paper_comparison
+    if quick:
+        num_steps, eval_every = 600, 300
+    t0 = time.time()
+    res = paper_comparison(num_steps=num_steps, eval_every=eval_every,
+                           lr=0.005, momentum=0.98, n_train=10000)
+    wall = time.time() - t0
+    np_acc = res["non_parallel"].final_accuracy
+    p_acc = res["parallel"].final_accuracy
+    rows = [
+        ("mnist_nonparallel_dropout", wall / 2 * 1e6 / num_steps,
+         f"acc={np_acc:.4f}"),
+        ("mnist_parallel_dropout_20x5", wall / 2 * 1e6 / num_steps,
+         f"acc={p_acc:.4f}"),
+        ("mnist_parallel_minus_nonparallel", 0.0,
+         f"delta={p_acc - np_acc:+.4f} (paper: +0.0178)"),
+    ]
+    detail = {k: v.row() for k, v in res.items()}
+    return rows, detail
+
+
+if __name__ == "__main__":
+    rows, detail = run()
+    for r in rows:
+        print(",".join(str(x) for x in r))
+    print(json.dumps(detail, indent=1))

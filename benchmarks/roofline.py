@@ -1,0 +1,61 @@
+"""Roofline table renderer: reads the dry-run JSONs and emits the
+EXPERIMENTS.md §Roofline table + one-line CSV rows for run.py."""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+
+def load_rows(paths=None):
+    paths = paths or (glob.glob("dryrun_*.json"))
+    rows = []
+    seen = set()
+    for p in sorted(paths):
+        try:
+            data = json.load(open(p))
+        except (OSError, json.JSONDecodeError):
+            continue
+        for r in (data if isinstance(data, list) else [data]):
+            key = (r.get("arch"), r.get("shape"), r.get("mesh"))
+            if r.get("status") == "ok" and key not in seen:
+                seen.add(key)
+                rows.append(r)
+    return rows
+
+
+def fmt_table(rows, mesh="16x16"):
+    out = ["| arch | shape | t_compute | t_memory | t_coll | dominant | "
+           "model/HLO flops | roofline frac |",
+           "|---|---|---|---|---|---|---|---|"]
+    for r in sorted(rows, key=lambda r: (r["arch"], r["shape"])):
+        if r["mesh"] != mesh:
+            continue
+        out.append(
+            f"| {r['arch']} | {r['shape']} | {r['t_compute_s']:.3f}s "
+            f"| {r['t_memory_s']:.3f}s | {r['t_collective_s']:.3f}s "
+            f"| {r['dominant']} | {r['useful_flops_ratio']:.2f} "
+            f"| {r['roofline_fraction']:.3f} |")
+    return "\n".join(out)
+
+
+def run():
+    rows = load_rows()
+    csv = []
+    for r in rows:
+        if r["mesh"] != "16x16":
+            continue
+        csv.append((f"roofline_{r['arch']}_{r['shape']}",
+                    r["bound_time_s"] * 1e6 if "bound_time_s" in r else
+                    max(r["t_compute_s"], r["t_memory_s"],
+                        r["t_collective_s"]) * 1e6,
+                    f"dominant={r['dominant']} "
+                    f"frac={r['roofline_fraction']:.3f}"))
+    return csv, {"n_cells": len(rows)}
+
+
+if __name__ == "__main__":
+    rows = load_rows()
+    print(fmt_table(rows))
+    print()
+    print(fmt_table(rows, mesh="2x16x16"))

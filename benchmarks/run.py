@@ -1,0 +1,51 @@
+"""Benchmark harness — one module per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV rows:
+  * mnist_repro      — paper §3 / Fig. 3 (parallel vs non-parallel dropout)
+  * throughput       — paper §3 timing claim (30 min / 10k iters)
+  * submodel_flops   — paper §2 compute/memory-saving claim
+  * roofline         — §Roofline terms from the multi-pod dry-run artifacts
+
+``python -m benchmarks.run [--quick]``
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+import time
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true")
+    ap.add_argument("--skip", default="", help="comma-list of benches to skip")
+    args = ap.parse_args()
+    skip = set(args.skip.split(",")) if args.skip else set()
+
+    from benchmarks import mnist_repro, roofline, submodel_flops, throughput
+    benches = [
+        ("mnist_repro", lambda: mnist_repro.run(quick=args.quick)),
+        ("throughput", throughput.run),
+        ("submodel_flops", submodel_flops.run),
+        ("roofline", roofline.run),
+    ]
+    print("name,us_per_call,derived")
+    failures = 0
+    for name, fn in benches:
+        if name in skip:
+            continue
+        t0 = time.time()
+        try:
+            rows, _detail = fn()
+            for r in rows:
+                print(",".join(str(x) for x in r))
+            print(f"# {name} done in {time.time() - t0:.1f}s", file=sys.stderr)
+        except Exception as e:  # pragma: no cover
+            failures += 1
+            print(f"# {name} FAILED: {type(e).__name__}: {e}", file=sys.stderr)
+    sys.exit(1 if failures else 0)
+
+
+if __name__ == "__main__":
+    main()

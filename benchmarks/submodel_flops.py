@@ -1,0 +1,39 @@
+"""Paper §2 claim: irregular sub-model partitioning "reduce[s] the size of
+model [and] improve[s] the computing performance".
+
+We quantify both on the TPU-adapted implementation:
+  * FLOP reduction — fraction of MXU tiles the dropout_matmul kernel skips
+    (exact, from the mask; = 1 - keep at steady state).
+  * Wall-time — dense einsum vs mask-aware kernel in interpret mode is NOT a
+    TPU timing; instead we report the analytic tile-skip ratio plus the
+    *memory* saving of the sub-model (weights touched).
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def run():
+    from repro.core.parallel_dropout import group_block_mask
+    rows = []
+    for keep in (0.8, 0.5, 0.25):
+        G, units, block = 8, 8192, 128
+        m = group_block_mask(jax.random.key(0), G, units, keep, block)
+        skipped = float((np.asarray(m) == 0).mean())
+        # each skipped 128-block skips K/bk MXU tiles in the kernel's K loop
+        rows.append((f"submodel_tile_skip_keep{keep}", 0.0,
+                     f"skipped_frac={skipped:.3f} flops_saved={skipped:.3f}"))
+    # sub-model weight footprint (units kept x d): memory claim
+    for keep in (0.5,):
+        rows.append((f"submodel_weight_touch_keep{keep}", 0.0,
+                     f"weights_touched_frac={keep:.2f}"))
+    return rows, {}
+
+
+if __name__ == "__main__":
+    for r in run()[0]:
+        print(",".join(str(x) for x in r))

@@ -1,0 +1,58 @@
+"""Paper §3 timing claim: "Both took 30 minutes or less until 10,000
+iterations" (2016 CPU cluster, 20 workers).  We measure our steps/s for the
+same experiment shape on this container's single CPU core and derive the
+projected 10k-iteration wall time.  Also measures the LM train-step
+throughput of the smallest assigned arch (reduced config) as the modern
+substrate datapoint.
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def run():
+    rows = []
+    # --- paper's MNIST shape: 20 groups x batch 5 ---
+    from repro.core.collective_trainer import train_mnist
+    t0 = time.time()
+    steps = 200
+    train_mnist(num_groups=20, batch_per_group=5, num_steps=steps,
+                eval_every=steps, n_train=2000, hidden=512, lr=0.005)
+    dt = time.time() - t0
+    per = dt / steps
+    rows.append(("mnist_20x5_step", per * 1e6,
+                 f"10k_iters_proj={per * 10000 / 60:.1f}min (paper: <=30min "
+                 f"on 20-node 2016 cluster)"))
+
+    # --- LM train step (reduced qwen3) ---
+    from repro.configs.base import (HornConfig, RunConfig, ShapeConfig,
+                                    get_model_config, reduced)
+    from repro.core import steps as S
+    from repro.launch.mesh import make_test_mesh
+    cfg = reduced(get_model_config("qwen3-1.7b"))
+    run_cfg = RunConfig(model=cfg, shape=ShapeConfig("b", "train", 256, 8),
+                        horn=HornConfig(enabled=True), optimizer="adamw",
+                        learning_rate=1e-3)
+    step_fn, sh = S.make_train_step(run_cfg, make_test_mesh())
+    state = jax.jit(lambda k: S.init_state(k, run_cfg))(jax.random.key(0))
+    batch = {"tokens": jnp.ones((8, 256), jnp.int32),
+             "labels": jnp.ones((8, 256), jnp.int32)}
+    state, _ = step_fn(state, batch)          # compile
+    t0 = time.time()
+    n = 5
+    for _ in range(n):
+        state, m = step_fn(state, batch)
+    jax.block_until_ready(m["loss"])
+    per = (time.time() - t0) / n
+    rows.append(("lm_train_step_qwen3_reduced", per * 1e6,
+                 f"tok_per_s={8 * 256 / per:,.0f} (1 CPU core)"))
+    return rows, {}
+
+
+if __name__ == "__main__":
+    for r in run()[0]:
+        print(",".join(str(x) for x in r))

@@ -1,0 +1,51 @@
+"""Paper §3 experiment, full driver: non-parallel vs parallel vs local-SGD
+(Downpour-style) vs int8-compressed merges — every Horn topology on MNIST.
+
+    PYTHONPATH=src python examples/mnist_parallel_dropout.py [--steps 2000]
+"""
+import argparse
+import json
+
+from repro.configs.base import HornConfig, TopologyConfig
+from repro.core.collective_trainer import train_mnist
+from repro.data.mnist import load_mnist
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=1500)
+    ap.add_argument("--eval-every", type=int, default=500)
+    args = ap.parse_args()
+    data = load_mnist(n_train=10000)
+    common = dict(num_steps=args.steps, eval_every=args.eval_every,
+                  lr=0.005, momentum=0.98, data=data)
+
+    runs = [
+        ("non-parallel (1x100)",
+         dict(num_groups=1, batch_per_group=100)),
+        ("parallel 20x5 AllReduce (paper)",
+         dict(num_groups=20, batch_per_group=5)),
+        ("parallel 20x5 local-SGD H=8 (Downpour analogue)",
+         dict(num_groups=20, batch_per_group=5,
+              topology=TopologyConfig(kind="local_sgd", local_sgd_period=8))),
+        ("parallel 20x5 int8-compressed merge",
+         dict(num_groups=20, batch_per_group=5,
+              topology=TopologyConfig(kind="allreduce",
+                                      grad_compression="int8"))),
+        ("parallel 20x5, NO dropout (ablation)",
+         dict(num_groups=20, batch_per_group=5,
+              horn_cfg=HornConfig(enabled=False))),
+    ]
+    results = {}
+    for name, kw in runs:
+        res = train_mnist(name=name, **common, **kw)
+        results[name] = res.row()
+        print(f"{name:50s} final_acc={res.final_accuracy:.4f} "
+              f"curve={[round(a, 3) for a in res.accuracy]}")
+    with open("mnist_results.json", "w") as f:
+        json.dump(results, f, indent=1)
+    print("wrote mnist_results.json  (paper: 0.9535 vs 0.9713 @10k iters)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,143 @@
+"""Neuron-centric programming model (paper §2), compiled to vectorized JAX.
+
+The paper's API::
+
+    nn.addLayer(512, ReLU.class, DropoutNeuron.class);
+
+lets the user define per-neuron ``forward()``/``backward()`` message handlers
+and an optional ``interlayer()`` normalization, while the *system* decides the
+partitioning.  Per-neuron scalar message passing is hostile to the TPU MXU, so
+— exactly as the paper's own Future Works proposes ("take a neuron-centric
+model, and compile it to … code that batches for speed") — we keep the
+declarative neuron-level API and compile it:
+
+  * ``forward``'s weighted-sum-of-messages  ->  one matmul per layer
+  * ``DropoutNeuron``'s per-neuron Bernoulli ->  Horn group masks
+    (`core.parallel_dropout`), one fused elementwise multiply
+  * ``interlayer`` normalization            ->  a vector->vector jnp function
+  * ``backward``'s gradient messages + push() -> jax.grad + the topology's
+    collective (AllReduce / ZeRO-1 / local-SGD merge)
+
+The partition plan (which mesh axis each layer's units shard over) comes from
+the same logical-axis rules the big models use.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Callable, List, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import parallel_dropout as pdrop
+from repro.models.params import ParamSpec, init_params, param_axes
+
+f32 = jnp.float32
+
+ACTIVATIONS = {
+    "relu": jax.nn.relu,
+    "tanh": jnp.tanh,
+    "sigmoid": jax.nn.sigmoid,
+    "identity": lambda x: x,
+}
+
+
+def softmax_interlayer(v):
+    """The paper's canonical interlayer(): normalized (softmax) units."""
+    return jax.nn.softmax(v, axis=-1)
+
+
+def divide_by_sum_interlayer(v):
+    """Literal paper example: output.divide(output.sum())."""
+    return v / jnp.clip(jnp.sum(v, axis=-1, keepdims=True), 1e-9)
+
+
+@dataclass(frozen=True)
+class LayerSpec:
+    units: int
+    activation: str = "relu"
+    neuron: str = "standard"          # standard | dropout  (DropoutNeuron.class)
+    keep: Optional[float] = None      # dropout keep-rate; None -> Horn default
+    interlayer: Optional[Callable] = None
+
+
+@dataclass
+class NeuronNetwork:
+    """Builder mirroring the paper's ``nn.addLayer(...)`` API."""
+
+    input_units: int
+    input_neuron: str = "standard"    # "dropout" to drop input units (paper: 0.8)
+    input_keep: Optional[float] = None
+    layers: List[LayerSpec] = field(default_factory=list)
+
+    def add_layer(self, units: int, activation: str = "relu",
+                  neuron: str = "standard", keep: Optional[float] = None,
+                  interlayer: Optional[Callable] = None) -> "NeuronNetwork":
+        self.layers.append(LayerSpec(units, activation, neuron, keep, interlayer))
+        return self
+
+    # -- compiled artifacts ---------------------------------------------------
+    def specs(self):
+        specs = {}
+        prev = self.input_units
+        for i, l in enumerate(self.layers):
+            specs[f"w{i}"] = ParamSpec((prev, l.units), ("embed", "ffn"),
+                                       "normal", 2.0)
+            specs[f"b{i}"] = ParamSpec((l.units,), ("ffn",), "zeros")
+            prev = l.units
+        return specs
+
+    def init(self, key):
+        return init_params(key, self.specs())
+
+    def axes(self):
+        return param_axes(self.specs())
+
+    def apply(self, params, x, horn: Optional[pdrop.HornState] = None):
+        """x: [B, input_units] -> output of last layer.
+
+        DropoutNeuron layers multiply by the group's sub-model mask — the
+        vectorized form of the paper's ``m2 = getBinomial(1, 0.5)`` neuron code.
+        Per-neuron granularity (block_size=1) is used here, exactly as in the
+        paper; the 128-block variant is the LM-scale beyond-paper option.
+        """
+        B = x.shape[0]
+        if self.input_neuron == "dropout":
+            m = pdrop.unit_mask(horn, 100_003, B, self.input_units,
+                                keep=self.input_keep or
+                                (horn.cfg.keep_input if horn else None),
+                                salt=7, block_size=1)
+            if m is not None:
+                x = x * m[:, 0]
+        for i, l in enumerate(self.layers):
+            x = x @ params[f"w{i}"] + params[f"b{i}"]       # sum of messages
+            x = ACTIVATIONS[l.activation](x)                # apply(sum)
+            last = i == len(self.layers) - 1
+            if l.neuron == "dropout" and not last:
+                m = pdrop.unit_mask(horn, i, B, l.units, keep=l.keep,
+                                    salt=5, block_size=1)
+                if m is not None:
+                    x = x * m[:, 0]                          # feedforward(out*m)
+            if l.interlayer is not None:
+                x = l.interlayer(x)
+        return x
+
+    def loss(self, params, batch, horn=None):
+        """Softmax cross-entropy (paper's Softmax + Cross Entropy head)."""
+        logits = self.apply(params, batch["x"], horn)
+        logp = jax.nn.log_softmax(logits.astype(f32), axis=-1)
+        nll = -jnp.take_along_axis(logp, batch["y"][:, None], axis=-1)[:, 0]
+        return nll.mean()
+
+    def accuracy(self, params, batch):
+        logits = self.apply(params, batch["x"], horn=None)
+        return jnp.mean((jnp.argmax(logits, -1) == batch["y"]).astype(f32))
+
+
+def paper_mnist_network(hidden: int = 512, depth: int = 2) -> NeuronNetwork:
+    """The MNIST MLP of paper §3: ReLU hiddens (DropoutNeuron), softmax head."""
+    nn = NeuronNetwork(input_units=784, input_neuron="dropout", input_keep=0.8)
+    for _ in range(depth):
+        nn.add_layer(hidden, "relu", neuron="dropout", keep=0.5)
+    nn.add_layer(10, "identity", neuron="standard")
+    return nn

@@ -1,0 +1,231 @@
+"""Step factories: pjit train_step / prefill / decode for every architecture.
+
+This is the production entry point used by the launcher, the multi-pod
+dry-run, and the benchmarks.  All distribution is expressed as logical-axis
+shardings (launch/mesh.py); Horn parallel dropout is threaded through as a
+first-class training feature; topology decides how group updates merge.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig, RunConfig, ShapeConfig
+from repro.core.parallel_dropout import make_horn_state
+from repro.launch.mesh import ShardingCtx, sharding_rules, tree_shardings
+from repro.models import api
+from repro.models import transformer as T
+from repro.models.params import cast_tree, param_axes
+from repro.optim.sgd import clip_by_global_norm, make_optimizer
+
+f32 = jnp.float32
+
+
+def make_ctx(model_cfg: ModelConfig, mesh, shape=None) -> ShardingCtx:
+    return ShardingCtx(mesh=mesh,
+                       rules=sharding_rules(model_cfg, mesh, shape))
+
+
+# ---------------------------------------------------------------------------
+# Train state
+# ---------------------------------------------------------------------------
+def init_state(key, run: RunConfig):
+    """{"params", "opt", "step", "rng"} — call under jit w/ out_shardings
+    (or inside jax.eval_shape for the dry run)."""
+    params = api.model_init(key, run.model)
+    params = cast_tree(params, run.param_dtype)
+    opt_init, _ = make_optimizer(run.optimizer)
+    return {
+        "params": params,
+        "opt": opt_init(params),
+        "step": jnp.zeros((), jnp.int32),
+        "rng": jax.random.key_data(jax.random.key(run.seed)),
+    }
+
+
+def state_axes(run: RunConfig):
+    paxes = api.model_axes(run.model)
+    opt_init, _ = make_optimizer(run.optimizer)
+    # optimizer-state leaves mirror param sharding (ZeRO-style: the "parameter
+    # server" state lives wherever the param shard lives)
+    if run.optimizer == "sgdm":
+        opt_axes = {"mom": paxes}
+    else:
+        opt_axes = {"m": paxes, "v": paxes, "t": ()}
+    return {"params": paxes, "opt": opt_axes, "step": (), "rng": (None,)}
+
+
+def state_shardings(run: RunConfig, mesh):
+    ctx = make_ctx(run.model, mesh, run.shape)
+    return tree_shardings(state_axes(run), ctx)
+
+
+# ---------------------------------------------------------------------------
+# Input specs — ShapeDtypeStruct stand-ins for every model input
+# ---------------------------------------------------------------------------
+def batch_axes(run: RunConfig) -> Dict[str, Tuple]:
+    cfg = run.model
+    ax: Dict[str, Tuple] = {"tokens": ("batch", "seq"),
+                            "labels": ("batch", "seq")}
+    if cfg.is_encoder_decoder:
+        ax["frames"] = ("batch", None, None)
+    if cfg.num_patches:
+        ax["patch_embeds"] = ("batch", None, None)
+    return ax
+
+
+def input_specs(run: RunConfig) -> Dict[str, jax.ShapeDtypeStruct]:
+    """Weak-type-correct, shardable stand-ins; no device allocation."""
+    cfg, shape = run.model, run.shape
+    B, S = shape.global_batch, shape.seq_len
+    text = S - (cfg.num_patches if cfg.num_patches else 0)
+    sd = jax.ShapeDtypeStruct
+    specs = {"tokens": sd((B, text), jnp.int32),
+             "labels": sd((B, text), jnp.int32)}
+    if cfg.is_encoder_decoder:
+        specs["frames"] = sd((B, cfg.encoder_seq, cfg.d_model), jnp.bfloat16)
+    if cfg.num_patches:
+        specs["patch_embeds"] = sd((B, cfg.num_patches, cfg.d_model),
+                                   jnp.bfloat16)
+    if shape.kind != "train":
+        specs.pop("labels")
+    return specs
+
+
+def batch_shardings(run: RunConfig, mesh):
+    ctx = make_ctx(run.model, mesh, run.shape)
+    ax = batch_axes(run)
+    if run.shape.kind != "train":
+        ax.pop("labels", None)
+    return {k: ctx.sharding(*v) for k, v in ax.items()}
+
+
+# ---------------------------------------------------------------------------
+# Train step
+# ---------------------------------------------------------------------------
+def make_train_step(run: RunConfig, mesh):
+    """Returns (jitted_step, shardings dict) — step(state, batch) -> (state, metrics)."""
+    cfg = run.model
+    ctx = make_ctx(cfg, mesh, run.shape)
+    _, opt_update = make_optimizer(run.optimizer)
+    dp = ctx.dp_size
+
+    def loss_fn(params, batch, rng, step):
+        horn = make_horn_state(jax.random.wrap_key_data(rng), run.horn, dp, step)
+        return api.model_loss(params, batch, cfg, ctx, horn=horn,
+                              remat=run.remat != "none")
+
+    def train_step(state, batch):
+        params, rng, step = state["params"], state["rng"], state["step"]
+        cparams = cast_tree(params, run.compute_dtype)
+        M = max(1, run.microbatches)
+        if M == 1:
+            (loss, metrics), grads = jax.value_and_grad(
+                loss_fn, has_aux=True)(cparams, batch, rng, step)
+        else:
+            def split(x):
+                return x.reshape((M, x.shape[0] // M) + x.shape[1:])
+            mb = jax.tree.map(split, batch)
+
+            def acc_fn(carry, mb_i):
+                g_acc, l_acc = carry
+                (l, m), g = jax.value_and_grad(loss_fn, has_aux=True)(
+                    cparams, mb_i, rng, step)
+                return (jax.tree.map(jnp.add, g_acc, g), l_acc + l), m
+
+            g0 = jax.tree.map(lambda p: jnp.zeros(p.shape, f32), cparams)
+            (grads, loss), metrics = jax.lax.scan(
+                acc_fn, (g0, jnp.zeros((), f32)), mb)
+            grads = jax.tree.map(lambda g: g / M, grads)
+            loss = loss / M
+            metrics = jax.tree.map(lambda x: jnp.mean(x, 0), metrics)
+
+        grads, gnorm = clip_by_global_norm(grads, 1.0)
+        new_params, new_opt = opt_update(
+            grads, state["opt"], params, lr=run.learning_rate,
+            momentum=run.momentum, weight_decay=run.weight_decay
+        ) if run.optimizer == "sgdm" else opt_update(
+            grads, state["opt"], params, lr=run.learning_rate,
+            weight_decay=run.weight_decay)
+        metrics = dict(metrics)
+        metrics["grad_norm"] = gnorm
+        new_state = {"params": new_params, "opt": new_opt,
+                     "step": step + 1, "rng": rng}
+        return new_state, metrics
+
+    s_shard = tree_shardings(state_axes(run), ctx)
+    b_shard = batch_shardings(run, mesh)
+    jitted = jax.jit(train_step,
+                     in_shardings=(s_shard, b_shard),
+                     out_shardings=(s_shard, None),
+                     donate_argnums=(0,))
+    return jitted, {"state": s_shard, "batch": b_shard}
+
+
+# ---------------------------------------------------------------------------
+# Serving steps
+# ---------------------------------------------------------------------------
+def make_prefill_step(run: RunConfig, mesh):
+    cfg = run.model
+    ctx = make_ctx(cfg, mesh, run.shape)
+
+    def prefill_step(params, batch):
+        cparams = cast_tree(params, run.compute_dtype)
+        logits, cache, enc = api.prefill(cparams, batch, cfg, ctx)
+        return logits, cache, enc
+
+    paxes = api.model_axes(cfg)
+    p_shard = tree_shardings(paxes, ctx)
+    b_shard = batch_shardings(run, mesh)
+    jitted = jax.jit(prefill_step, in_shardings=(p_shard, b_shard),
+                     out_shardings=None)
+    return jitted, {"params": p_shard, "batch": b_shard}
+
+
+def decode_cache_specs(run: RunConfig):
+    """ShapeDtypeStructs for the decode cache at this shape cell."""
+    cfg, shape = run.model, run.shape
+    return jax.eval_shape(
+        lambda: T.init_cache(cfg, shape.global_batch, shape.seq_len))
+
+
+def make_decode_step(run: RunConfig, mesh):
+    cfg = run.model
+    ctx = make_ctx(cfg, mesh, run.shape)
+
+    def decode_step(params, cache, tokens, pos, encoder_out=None):
+        cparams = cast_tree(params, run.compute_dtype)
+        return api.decode_step(cparams, cache, tokens, pos, cfg, ctx,
+                               encoder_out=encoder_out)
+
+    paxes = api.model_axes(cfg)
+    p_shard = tree_shardings(paxes, ctx)
+    from repro.launch.mesh import is_axes_leaf
+    cache_struct = decode_cache_specs(run)
+    c_axes = T.cache_logical_axes(cfg, cache_struct)
+    c_shard = jax.tree.map(lambda ax: ctx.sharding(*ax), c_axes,
+                           is_leaf=is_axes_leaf)
+    tok_shard = ctx.sharding("batch", None)
+    enc_shard = ctx.sharding("batch", None, None) if cfg.is_encoder_decoder else None
+    in_sh = (p_shard, c_shard, tok_shard, None) + (
+        (enc_shard,) if cfg.is_encoder_decoder else ())
+    jitted = jax.jit(decode_step, in_shardings=in_sh,
+                     out_shardings=(None, c_shard),
+                     donate_argnums=(1,))
+    return jitted, {"params": p_shard, "cache": c_shard,
+                    "cache_struct": cache_struct}
+
+
+def decode_input_specs(run: RunConfig):
+    """(tokens, pos, [encoder_out]) ShapeDtypeStructs for decode cells."""
+    cfg, shape = run.model, run.shape
+    B = shape.global_batch
+    sd = jax.ShapeDtypeStruct
+    out = {"tokens": sd((B, 1), jnp.int32), "pos": sd((), jnp.int32)}
+    if cfg.is_encoder_decoder:
+        out["encoder_out"] = sd((B, cfg.encoder_seq, cfg.d_model), jnp.bfloat16)
+    return out

@@ -1,0 +1,93 @@
+"""Irregular sub-model partitioning (paper §2, Fig. 2 right).
+
+Horn partitions the parent model into "multiple disconnected sub-models ...
+[that] have the same input and output layers and share the weights", to
+"reduce the size of model, improve the computing performance, and to get more
+randomness".  This module is the planner around the per-step masks in
+``parallel_dropout``:
+
+  * :func:`plan` — given a model config + Horn config, the per-layer unit
+    axes that sub-models are drawn over, block-aligned for the TPU kernel;
+  * :func:`materialize` — extract group g's *actual smaller weights* (the
+    paper's memory claim: a keep-0.5 sub-model's FFN weights are half-size) —
+    used for sub-model export / distillation-style deployment;
+  * :func:`stats` — compute/memory savings of a drawn sub-model (reported by
+    ``benchmarks/submodel_flops.py``).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Dict, List, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import HornConfig, ModelConfig
+from repro.core import parallel_dropout as pdrop
+
+
+@dataclass(frozen=True)
+class SubmodelAxis:
+    """One unit axis a sub-model is drawn over."""
+
+    name: str            # e.g. "ffn_hidden", "ssm_channels", "moe_hidden"
+    units: int
+    keep: float
+    block_size: int
+
+    @property
+    def n_blocks(self) -> int:
+        return max(1, self.units // max(1, self.block_size))
+
+
+def plan(cfg: ModelConfig, horn: HornConfig) -> List[SubmodelAxis]:
+    """The sub-model axes for an architecture (DESIGN.md §5 table)."""
+    axes: List[SubmodelAxis] = []
+    bs = horn.block_size
+    if cfg.d_ff > 0:
+        axes.append(SubmodelAxis("ffn_hidden", cfg.d_ff, horn.keep_hidden, bs))
+    if cfg.num_experts:
+        axes.append(SubmodelAxis("moe_hidden", cfg.moe_ff, horn.keep_hidden, bs))
+    if cfg.ssm_state:
+        d_in = cfg.ssm_expand * cfg.d_model
+        axes.append(SubmodelAxis("ssm_channels", d_in, horn.keep_hidden, bs))
+    if horn.mask_attention_heads and cfg.has_attention:
+        axes.append(SubmodelAxis("attn_heads", cfg.num_heads,
+                                 horn.keep_hidden, 1))
+    axes.append(SubmodelAxis("input_embed", cfg.d_model, horn.keep_input, bs))
+    return axes
+
+
+def draw(key, axis: SubmodelAxis, num_groups: int) -> jnp.ndarray:
+    """[G, n_blocks] sub-model membership (values {0, 1/keep})."""
+    return pdrop.group_block_mask(key, num_groups, axis.units, axis.keep,
+                                  axis.block_size)
+
+
+def materialize(wi: jnp.ndarray, wo: jnp.ndarray, mask_blocks: jnp.ndarray,
+                block_size: int) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Group g's *physically smaller* FFN weights.
+
+    wi: [d, ff]; wo: [ff, d]; mask_blocks: [n_blocks] for ONE group.
+    Returns (wi_kept [d, ff_kept], wo_kept [ff_kept, d]) — the paper's
+    "reduction of memory usage": only the kept neurons' weights exist.
+    """
+    keep_cols = np.repeat(np.asarray(mask_blocks) > 0, block_size)
+    keep_cols = keep_cols[: wi.shape[1]]
+    idx = np.nonzero(keep_cols)[0]
+    return jnp.take(wi, idx, axis=1), jnp.take(wo, idx, axis=0)
+
+
+def stats(cfg: ModelConfig, horn: HornConfig, key=None,
+          num_groups: int = 8) -> Dict[str, float]:
+    """Measured (not nominal) compute/memory savings of drawn sub-models."""
+    key = key if key is not None else jax.random.key(0)
+    out: Dict[str, float] = {}
+    for i, axis in enumerate(plan(cfg, horn)):
+        m = np.asarray(draw(jax.random.fold_in(key, i), axis, num_groups))
+        dropped = float((m == 0).mean())
+        out[f"{axis.name}_dropped_frac"] = dropped
+        out[f"{axis.name}_flops_saved"] = dropped     # tiles skipped by kernel
+        out[f"{axis.name}_weights_saved"] = dropped   # via materialize()
+    return out

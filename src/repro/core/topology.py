@@ -1,0 +1,37 @@
+"""Topology selection — the paper's cluster-configuration knob (§2).
+
+"By configuring the cluster topology, it also allows the user to use
+different synchronous and asynchronous training techniques, such as
+AllReduce and Downpour SGD."  The mapping to execution lives in
+``group_sync`` / ``steps``; this module is the declarative surface:
+
+    topo = TopologyConfig(kind="local_sgd", local_sgd_period=8,
+                          grad_compression="int8")
+"""
+from __future__ import annotations
+
+from repro.configs.base import TopologyConfig
+
+DESCRIPTIONS = {
+    "allreduce": "synchronous batch averaging every step (paper's MNIST mode)",
+    "zero1": "sharded parameter-server: optimizer state sharded with params "
+             "(reduce-scatter grads, shard-local update, all-gather params)",
+    "local_sgd": "Downpour-SGD analogue: groups step independently for H "
+                 "steps, then merge+broadcast (straggler-tolerant)",
+}
+
+
+def describe(topo: TopologyConfig) -> str:
+    base = DESCRIPTIONS[topo.kind]
+    if topo.kind == "local_sgd":
+        base += f" (H={topo.local_sgd_period})"
+    if topo.grad_compression != "none":
+        base += f" + {topo.grad_compression} compressed merges w/ error feedback"
+    return base
+
+
+def validate(topo: TopologyConfig) -> TopologyConfig:
+    assert topo.kind in DESCRIPTIONS, topo.kind
+    assert topo.local_sgd_period >= 1
+    assert topo.grad_compression in ("none", "int8")
+    return topo

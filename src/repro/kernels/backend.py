@@ -1,0 +1,45 @@
+"""Kernel backend switch.
+
+  * "pallas"    — compiled pallas_call, TPU target (production).
+  * "interpret" — pallas_call(interpret=True): the kernel body executes in
+                  Python on CPU; used by correctness tests in this container.
+  * "ref"       — pure-jnp oracle (ref.py); used by the 512-device dry-run
+                  (Pallas cannot lower to the CPU backend) and as the
+                  allclose reference.
+"""
+from __future__ import annotations
+
+import os
+
+import jax
+
+_BACKEND = None
+
+
+def default_backend() -> str:
+    env = os.environ.get("REPRO_KERNEL_BACKEND")
+    if env:
+        return env
+    try:
+        if jax.devices()[0].platform == "tpu":
+            return "pallas"
+    except Exception:
+        pass
+    return "ref"
+
+
+def get_backend() -> str:
+    global _BACKEND
+    if _BACKEND is None:
+        _BACKEND = default_backend()
+    return _BACKEND
+
+
+def set_backend(name: str) -> None:
+    assert name in ("pallas", "interpret", "ref"), name
+    global _BACKEND
+    _BACKEND = name
+
+
+def interpret_mode() -> bool:
+    return get_backend() == "interpret"

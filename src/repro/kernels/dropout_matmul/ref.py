@@ -1,0 +1,22 @@
+"""Pure-jnp oracle for the block-sparse dropout matmul.
+
+Semantics: ``y[g] = (x[g] @ w) * expand(mask[g])`` where ``mask[g]`` holds one
+value in {0, 1/keep} per contiguous block of ``block_n`` output units — Horn's
+irregular sub-model: group g's sub-model simply lacks the dropped neurons.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def dropout_matmul_ref(x, w, mask_blocks, *, block_n: int):
+    """x: [G, M, K]; w: [K, N]; mask_blocks: [G, N // block_n] in {0, 1/keep}.
+
+    Returns [G, M, N] float32.
+    """
+    G, M, K = x.shape
+    N = w.shape[1]
+    y = jnp.einsum("gmk,kn->gmn", x.astype(jnp.float32),
+                   w.astype(jnp.float32))
+    mask = jnp.repeat(mask_blocks.astype(jnp.float32), block_n, axis=-1)
+    return y * mask[:, None, :]

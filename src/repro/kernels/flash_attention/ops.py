@@ -1,0 +1,19 @@
+"""Backend-switched flash attention wrapper ([B,H,S,D] layout)."""
+from __future__ import annotations
+
+from typing import Optional
+
+from repro.kernels.backend import get_backend
+from repro.kernels.flash_attention.kernel import flash_attention as _pallas
+from repro.kernels.flash_attention.ref import attention_ref
+
+
+def flash_attention(q, k, v, *, scale: float, causal: bool = True,
+                    window: Optional[int] = None,
+                    softcap: Optional[float] = None, **kw):
+    backend = kw.pop("backend", None) or get_backend()
+    if backend == "ref":
+        return attention_ref(q, k, v, scale=scale, causal=causal,
+                             window=window, softcap=softcap)
+    return _pallas(q, k, v, scale=scale, causal=causal, window=window,
+                   softcap=softcap, interpret=backend == "interpret", **kw)

@@ -1,0 +1,34 @@
+"""Pure-jnp oracle for the flash attention kernel: naive full-scores
+attention with identical masking/softcap semantics (small shapes only)."""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+f32 = jnp.float32
+
+
+def attention_ref(q, k, v, *, scale: float, causal: bool = True,
+                  window: Optional[int] = None,
+                  softcap: Optional[float] = None):
+    """q: [B, H, Sq, D]; k, v: [B, KH, Skv, D] (H = KH * G). -> [B, H, Sq, D]"""
+    B, H, Sq, D = q.shape
+    KH, Skv = k.shape[1], k.shape[2]
+    G = H // KH
+    qg = q.reshape(B, KH, G, Sq, D).astype(f32)
+    s = jnp.einsum("bhgqd,bhkd->bhgqk", qg, k.astype(f32)) * scale
+    if softcap:
+        s = jnp.tanh(s / softcap) * softcap
+    qi = jnp.arange(Sq)[:, None]
+    ki = jnp.arange(Skv)[None, :]
+    mask = jnp.zeros((Sq, Skv), f32)
+    if causal:
+        mask = jnp.where(ki > qi, -1e30, mask)
+    if window is not None:
+        mask = jnp.where(ki <= qi - window, -1e30, mask)
+    s = s + mask
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bhgqk,bhkd->bhgqd", p, v.astype(f32))
+    return o.reshape(B, H, Sq, D).astype(q.dtype)

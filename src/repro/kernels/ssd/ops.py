@@ -1,0 +1,15 @@
+"""Backend-switched SSD chunk-scan wrapper."""
+from __future__ import annotations
+
+from repro.kernels.backend import get_backend
+from repro.kernels.ssd.kernel import ssd_chunk_scan as _pallas
+from repro.kernels.ssd.ref import ssd_ref
+
+
+def ssd_chunk_scan(x, dt, A, Bm, Cm, *, chunk: int = 256, **kw):
+    backend = kw.pop("backend", None) or get_backend()
+    if backend == "ref":
+        y, _ = ssd_ref(x, dt, A, Bm, Cm)
+        return y
+    return _pallas(x, dt, A, Bm, Cm, chunk=chunk,
+                   interpret=backend == "interpret", **kw)

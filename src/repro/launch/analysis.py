@@ -1,0 +1,613 @@
+"""Roofline analysis from compiled dry-run artifacts.
+
+Three terms per (arch x shape x mesh), per the methodology in EXPERIMENTS.md:
+
+    compute    = HLO_FLOPs / (chips * PEAK_FLOPS)
+    memory     = HLO_bytes / (chips * HBM_BW)
+    collective = collective_bytes / (chips * LINK_BW)
+
+IMPORTANT: ``compiled.cost_analysis()`` visits each while-loop *body once*,
+so everything inside lax.scan (i.e. the entire layer stack) is undercounted
+by its trip count.  We therefore implement our own HLO-text cost model
+(:class:`HloCost`): it parses computations, builds the call graph
+(while bodies x trip count, fusions/calls x 1), and accumulates
+
+  * matmul FLOPs from ``dot`` ops (2 * output_elems * contracted_dim),
+  * an HBM-traffic proxy (operand + output bytes of top-level ops; fusion
+    internals are free, matching real fusion behaviour),
+  * collective wire bytes per op kind (simple = output bytes, matching the
+    assignment formula; ring = (n-1)/n scaling, 2x for all-reduce).
+
+The compiled module is the per-device SPMD program, so every figure is
+per-chip; the roofline terms divide by per-chip peaks, which equals the
+assignment's global/(chips * peak) formulation.
+"""
+from __future__ import annotations
+
+import math
+import re
+from dataclasses import dataclass, field
+from typing import Dict, Optional
+
+# --- TPU v5e hardware constants (assignment-specified) ----------------------
+PEAK_FLOPS = 197e12        # bf16 FLOP/s per chip
+HBM_BW = 819e9             # bytes/s per chip
+LINK_BW = 50e9             # bytes/s per ICI link (one link-equivalent per chip)
+
+DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "s32": 4, "u32": 4,
+    "s64": 8, "u64": 8, "f16": 2, "bf16": 2, "f32": 4, "f64": 8,
+    "c64": 8, "c128": 16, "f8e4m3fn": 1, "f8e5m2": 1, "s4": 1, "u4": 1,
+}
+
+_COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+                "collective-permute", "ragged-all-to-all")
+
+# `%x = bf16[2,128]{1,0} all-gather(...)` or tuple shapes
+_OP_RE = re.compile(
+    r"=\s*((?:\([^)]*\))|(?:[a-z0-9]+\[[^\]]*\](?:\{[^}]*\})?))\s*"
+    r"(all-reduce|all-gather|reduce-scatter|all-to-all|collective-permute|"
+    r"ragged-all-to-all)(?:-start|-done)?\(", re.I)
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+_GROUPS_RE = re.compile(r"replica_groups=\{\{([0-9, ]+)\}")
+_GROUPS_IOTA_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+
+
+def shape_bytes(shape_str: str) -> int:
+    """Total bytes of all array shapes in a (possibly tuple) shape string."""
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(shape_str):
+        if dt not in DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d.strip():
+                n *= int(d)
+        total += n * DTYPE_BYTES[dt]
+    return total
+
+
+@dataclass
+class CollectiveStats:
+    bytes_simple: int = 0              # sum of output bytes (assignment formula)
+    bytes_ring: float = 0.0            # ring-model wire bytes
+    count: int = 0
+    by_kind: Dict[str, int] = field(default_factory=dict)
+    by_kind_count: Dict[str, int] = field(default_factory=dict)
+
+
+# ---------------------------------------------------------------------------
+# HLO-text cost model (trip-count aware)
+# ---------------------------------------------------------------------------
+_COMP_HDR_RE = re.compile(r"^(?:ENTRY\s+)?(%[\w\.\-]+)\s*\(.*\{\s*$")
+_OP_LINE_RE = re.compile(
+    r"^\s+(?:ROOT\s+)?(%[\w\.\-]+)\s*=\s*"
+    r"((?:\([^()]*\))|(?:[a-z0-9]+\[[^\]]*\](?:\{[^}]*\})?))\s*"
+    r"([\w\-]+)\(")
+_CALLEE_RE = re.compile(r"(?:calls|to_apply|body)=(%[\w\.\-]+)")
+_COND_RE = re.compile(r"condition=(%[\w\.\-]+)")
+_BRANCHES_RE = re.compile(r"branch_computations=\{([^}]*)\}")
+_LHS_CONTRACT_RE = re.compile(r"lhs_contracting_dims=\{([0-9,]*)\}")
+_INT_CONST_RE = re.compile(r"constant\((\d+)\)")
+_OPNAME_RE = re.compile(r'op_name="([^"]*)"')
+
+# Scope tags for attribution (jax.named_scope markers in model code).  Ops
+# whose op_name contains a tag get attributed to it — used to quantify e.g.
+# how much HBM traffic the Pallas flash-attention kernel would collapse.
+SCOPE_TAGS = ("flash_attn", "ssd_chunk", "moe_ffn", "xent_chunk", "mlp_block")
+
+_ELEMWISE = {
+    "add", "subtract", "multiply", "divide", "maximum", "minimum", "power",
+    "exponential", "tanh", "log", "rsqrt", "sqrt", "negate", "abs", "compare",
+    "select", "and", "or", "xor", "clamp", "floor", "ceil", "sign",
+    "exponential-minus-one", "log-plus-one", "cosine", "sine", "atan2",
+}
+_NO_TRAFFIC = {
+    "parameter", "constant", "tuple", "get-tuple-element", "bitcast",
+    "after-all", "reshape", "while", "call", "conditional", "fusion-marker",
+    "partition-id", "replica-id", "custom-call-marker",
+}
+
+
+class _Comp:
+    __slots__ = ("name", "ops", "defs", "flops", "bytes", "coll_simple",
+                 "coll_ring", "coll_by_kind", "coll_count", "callees",
+                 "tag_flops", "tag_bytes")
+
+    def __init__(self, name):
+        self.name = name
+        self.ops = []           # (name, shape_str, opcode, line)
+        self.defs = {}          # name -> shape_str
+        self.flops = 0.0
+        self.bytes = 0.0
+        self.coll_simple = 0.0
+        self.coll_ring = 0.0
+        self.coll_by_kind = {}
+        self.coll_count = 0
+        self.callees = []       # (callee_name, multiplier, is_fusion)
+        self.tag_flops = {}
+        self.tag_bytes = {}
+
+
+def _elems(shape_str: str) -> int:
+    n = 0
+    for dt, dims in _SHAPE_RE.findall(shape_str):
+        if dt not in DTYPE_BYTES:
+            continue
+        k = 1
+        for d in dims.split(","):
+            if d.strip():
+                k *= int(d)
+        n += k
+    return n
+
+
+def _dims_of(shape_str: str):
+    m = _SHAPE_RE.search(shape_str)
+    if not m:
+        return []
+    return [int(d) for d in m.group(2).split(",") if d.strip()]
+
+
+class HloCost:
+    """Trip-count-aware cost model over post-optimization HLO text."""
+
+    def __init__(self, hlo_text: str):
+        self.comps: Dict[str, _Comp] = {}
+        self.entry: Optional[str] = None
+        self.cast_bytes_local: Dict[str, float] = {}
+        self._parse(hlo_text)
+        self._analyze_ops()
+        self.mult, self.mem_mult = self._multipliers()
+
+    @staticmethod
+    def _is_pure_cast(comp, shape_str: str, opcode: str, line: str) -> bool:
+        """convert, or a convert/copy/transpose-only fusion: one non-scalar
+        operand with the same dims but different byte-width."""
+        if opcode == "convert":
+            return True
+        if opcode != "fusion":
+            return False
+        if not any(k in line for k in ("convert", "copy", "transpose")):
+            return False
+        out_dims = sorted(_dims_of(shape_str))
+        out_b = shape_bytes(shape_str)
+        args = line.split("(", 1)[1] if "(" in line else ""
+        big = [r for r in re.findall(r"%[\w\.\-]+", args)
+               if r in comp.defs and shape_bytes(comp.defs[r]) > 1024]
+        if len(big) != 1:
+            return False
+        od = sorted(_dims_of(comp.defs[big[0]]))
+        return od == out_dims and shape_bytes(comp.defs[big[0]]) != out_b
+
+    # -- parsing --------------------------------------------------------
+    def _parse(self, text: str) -> None:
+        cur: Optional[_Comp] = None
+        for raw in text.splitlines():
+            hdr = _COMP_HDR_RE.match(raw)
+            if hdr:
+                cur = _Comp(hdr.group(1))
+                self.comps[cur.name] = cur
+                if raw.startswith("ENTRY"):
+                    self.entry = cur.name
+                continue
+            if cur is None:
+                continue
+            if raw.startswith("}"):
+                cur = None
+                continue
+            m = _OP_LINE_RE.match(raw)
+            if m:
+                name, shape_str, opcode = m.group(1), m.group(2), m.group(3)
+                cur.defs[name] = shape_str
+                cur.ops.append((name, shape_str, opcode.lower(), raw))
+
+    @staticmethod
+    def _is_inplace_update(comp, shape_str: str, line: str) -> bool:
+        """Detect aliased-update fusions: explicit dynamic_update_slice, or
+        the scan ys-stacking signature (one operand shaped exactly like the
+        output, another shaped like the output minus its leading dim)."""
+        if "dynamic_update_slice" in line or "dynamic-update-slice" in line:
+            return True
+        out_dims = tuple(_dims_of(shape_str))
+        if len(out_dims) < 2:
+            return False
+        args = line.split("(", 1)[1] if "(" in line else ""
+        shapes = [tuple(_dims_of(comp.defs[r]))
+                  for r in re.findall(r"%[\w\.\-]+", args) if r in comp.defs]
+        if out_dims not in shapes:
+            return False
+        # update operand: output minus leading dim, or leading dim -> 1
+        return (out_dims[1:] in shapes) or ((1,) + out_dims[1:] in shapes)
+
+    def _trip_count(self, cond_name: str) -> int:
+        comp = self.comps.get(cond_name)
+        if not comp:
+            return 1
+        best = 1
+        for _, _, _, line in comp.ops:
+            for c in _INT_CONST_RE.findall(line):
+                best = max(best, int(c))
+        return best
+
+    # -- per-computation local costs -------------------------------------
+    def _analyze_ops(self) -> None:
+        for comp in self.comps.values():
+            for name, shape_str, opcode, line in comp.ops:
+                if opcode == "dot":
+                    out_elems = _elems(shape_str)
+                    lc = _LHS_CONTRACT_RE.search(line)
+                    contracted = 1
+                    if lc:
+                        # lhs operand = first %name inside the op parens
+                        args = line.split("(", 1)[1]
+                        ops_in = re.findall(r"%[\w\.\-]+", args)
+                        if ops_in:
+                            lhs_shape = comp.defs.get(ops_in[0], "")
+                            dims = _dims_of(lhs_shape)
+                            for di in lc.group(1).split(","):
+                                if di.strip() and int(di) < len(dims):
+                                    contracted *= dims[int(di)]
+                    flops_here = 2.0 * out_elems * contracted
+                    comp.flops += flops_here
+                    mtag = _OPNAME_RE.search(line)
+                    if mtag:
+                        nm = mtag.group(1)
+                        for tag in SCOPE_TAGS:
+                            if tag in nm:
+                                comp.tag_flops[tag] = (
+                                    comp.tag_flops.get(tag, 0.0) + flops_here)
+                                break
+                elif opcode in _ELEMWISE:
+                    comp.flops += _elems(shape_str)
+                elif opcode.startswith(_COLLECTIVES) or any(
+                        opcode == c or opcode == c + "-start"
+                        for c in _COLLECTIVES):
+                    if opcode.endswith("-done"):
+                        continue
+                    kind = opcode.replace("-start", "")
+                    nbytes = shape_bytes(shape_str)
+                    if kind in ("all-gather", "all-to-all", "all-reduce"):
+                        # output includes the gathered result; for -start the
+                        # tuple holds (input, output): take half for those
+                        if shape_str.startswith("(") and kind != "all-reduce":
+                            nbytes = nbytes  # tuple(in,out): keep sum/2 below
+                    n = 0
+                    g = _GROUPS_RE.search(line)
+                    if g:
+                        n = len([t for t in g.group(1).split(",") if t.strip()])
+                    else:
+                        gi = _GROUPS_IOTA_RE.search(line)
+                        if gi:
+                            n = int(gi.group(2))
+                    n = max(n, 2)
+                    if shape_str.startswith("("):
+                        nbytes = nbytes / 2.0   # async start tuple (in, out)
+                    if kind == "all-reduce":
+                        ring = 2 * nbytes * (n - 1) / n
+                    elif kind == "collective-permute":
+                        ring = nbytes
+                    else:
+                        ring = nbytes * (n - 1) / n
+                    comp.coll_simple += nbytes
+                    comp.coll_ring += ring
+                    comp.coll_count += 1
+                    comp.coll_by_kind[kind] = (
+                        comp.coll_by_kind.get(kind, 0) + nbytes)
+
+                # ---- HBM-traffic proxy ----
+                if opcode not in _NO_TRAFFIC and not opcode.endswith("-done"):
+                    if opcode in ("dynamic-slice", "slice", "gather"):
+                        # reads only the sliced window, not the whole operand
+                        # (a scan body dynamic-slicing stacked weights would
+                        # otherwise be charged the full stack every trip)
+                        traffic = 2 * shape_bytes(shape_str)
+                    elif opcode in ("dynamic-update-slice", "scatter"):
+                        # in-place aliased update: touches ~2x the update
+                        # region; the full buffer is NOT rewritten
+                        args = line.split("(", 1)[1] if "(" in line else ""
+                        refs = re.findall(r"%[\w\.\-]+", args)
+                        upd = (shape_bytes(comp.defs.get(refs[1], ""))
+                               if len(refs) > 1 else 0)
+                        traffic = 2 * upd if upd else shape_bytes(shape_str)
+                    elif opcode == "fusion" and self._is_inplace_update(
+                            comp, shape_str, line):
+                        # fused in-place update (explicit DUS or scan
+                        # ys-stacking): buffer operand is aliased; true
+                        # traffic ~ 2x the update operand, not the buffer
+                        args = line.split("(", 1)[1] if "(" in line else ""
+                        ops_b = sorted(
+                            shape_bytes(comp.defs[r])
+                            for r in re.findall(r"%[\w\.\-]+", args)
+                            if r in comp.defs)
+                        traffic = 2 * sum(ops_b[:-1]) if len(ops_b) > 1 \
+                            else shape_bytes(shape_str)
+                    elif self._is_pure_cast(comp, shape_str, opcode, line):
+                        # dtype-cast of a tensor (bf16<->f32): on CPU these
+                        # are materialized around every dot (no native bf16
+                        # matmul); on the TPU MXU they are free/fused.
+                        # Counted at 0 here, tallied in cast_bytes.
+                        traffic = 0
+                        self.cast_bytes_local[comp.name] = (
+                            self.cast_bytes_local.get(comp.name, 0.0)
+                            + shape_bytes(shape_str))
+                    else:
+                        out_b = shape_bytes(shape_str)
+                        traffic = out_b
+                        args = line.split("(", 1)[1] if "(" in line else ""
+                        for ref in re.findall(r"%[\w\.\-]+", args):
+                            if ref in comp.defs:
+                                # cap: a fused dynamic-slice of a large stack
+                                # reads a window, not the whole operand
+                                traffic += min(shape_bytes(comp.defs[ref]),
+                                               8 * max(out_b, 1))
+                    comp.bytes += traffic
+                    mtag = _OPNAME_RE.search(line)
+                    if mtag:
+                        nm = mtag.group(1)
+                        for tag in SCOPE_TAGS:
+                            if tag in nm:
+                                comp.tag_bytes[tag] = (
+                                    comp.tag_bytes.get(tag, 0.0) + traffic)
+                                break
+
+                # ---- call graph ----
+                if opcode == "while":
+                    body = _CALLEE_RE.search(line)
+                    cond = _COND_RE.search(line)
+                    trips = self._trip_count(cond.group(1)) if cond else 1
+                    if body:
+                        comp.callees.append((body.group(1), trips, False))
+                    if cond:
+                        comp.callees.append((cond.group(1), trips, False))
+                elif opcode in ("fusion", "call", "map", "reduce",
+                                "reduce-window", "scatter", "sort",
+                                "select-and-scatter", "all-reduce",
+                                "all-reduce-start", "reduce-scatter"):
+                    cal = _CALLEE_RE.search(line)
+                    if cal and opcode in ("fusion", "call", "map"):
+                        comp.callees.append(
+                            (cal.group(1), 1, opcode == "fusion"))
+                    # to_apply of reduce/all-reduce is a scalar comp: skip
+                elif opcode == "conditional":
+                    br = _BRANCHES_RE.search(line)
+                    if br:
+                        for b in br.group(1).split(","):
+                            b = b.strip()
+                            if b:
+                                comp.callees.append((b, 1, False))
+
+    # -- call-graph multipliers -------------------------------------------
+    def _multipliers(self):
+        """Returns (exec_mult, mem_mult): exec follows all edges (flops,
+        collectives); mem stops at fusion edges (fused internals are free,
+        the fusion node's own operands/outputs carry the traffic)."""
+        mult: Dict[str, float] = {c: 0.0 for c in self.comps}
+        mem: Dict[str, float] = {c: 0.0 for c in self.comps}
+        if self.entry is None:
+            return mult, mem
+        mult[self.entry] = 1.0
+        mem[self.entry] = 1.0
+        order = []
+        seen = set()
+
+        def dfs(name):
+            if name in seen or name not in self.comps:
+                return
+            seen.add(name)
+            for callee, _, _ in self.comps[name].callees:
+                dfs(callee)
+            order.append(name)
+
+        dfs(self.entry)
+        for name in reversed(order):
+            m, mm = mult.get(name, 0.0), mem.get(name, 0.0)
+            if m == 0.0 and mm == 0.0:
+                continue
+            for callee, k, is_fusion in self.comps[name].callees:
+                if callee in mult:
+                    mult[callee] += m * k
+                    if not is_fusion:
+                        mem[callee] += mm * k
+        return mult, mem
+
+    # -- totals -------------------------------------------------------------
+    def _total(self, attr: str) -> float:
+        return sum(getattr(c, attr) * self.mult.get(c.name, 0.0)
+                   for c in self.comps.values())
+
+    @property
+    def flops(self) -> float:
+        return self._total("flops")
+
+    @property
+    def bytes(self) -> float:
+        return sum(c.bytes * self.mem_mult.get(c.name, 0.0)
+                   for c in self.comps.values())
+
+    @property
+    def cast_bytes(self) -> float:
+        """Total dtype-cast traffic excluded from `bytes` (CPU-backend
+        bf16<->f32 legalization around dots; free on the TPU MXU)."""
+        return sum(v * self.mem_mult.get(k, 0.0)
+                   for k, v in self.cast_bytes_local.items())
+
+    def by_tag(self):
+        """{tag: {"flops": x, "bytes": y}} attributed via named_scope tags.
+        bytes use mem multipliers; flops use exec multipliers."""
+        out = {}
+        for c in self.comps.values():
+            me, mm = self.mult.get(c.name, 0.0), self.mem_mult.get(c.name, 0.0)
+            for t, v in c.tag_flops.items():
+                out.setdefault(t, {"flops": 0.0, "bytes": 0.0})
+                out[t]["flops"] += v * me
+            for t, v in c.tag_bytes.items():
+                out.setdefault(t, {"flops": 0.0, "bytes": 0.0})
+                out[t]["bytes"] += v * mm
+        return out
+
+    def collectives(self) -> CollectiveStats:
+        st = CollectiveStats()
+        for c in self.comps.values():
+            m = self.mult.get(c.name, 0.0)
+            st.bytes_simple += c.coll_simple * m
+            st.bytes_ring += c.coll_ring * m
+            st.count += int(c.coll_count * m)
+            for k, v in c.coll_by_kind.items():
+                st.by_kind[k] = st.by_kind.get(k, 0) + v * m
+                st.by_kind_count[k] = st.by_kind_count.get(k, 0) + int(m)
+        return st
+
+
+def parse_collectives(hlo_text: str) -> CollectiveStats:
+    stats = CollectiveStats()
+    for line in hlo_text.splitlines():
+        if "-start" in line and "-done" not in line:
+            pass  # count the start (has the shape); skip matching -done below
+        if "-done(" in line:
+            continue
+        m = _OP_RE.search(line)
+        if not m:
+            continue
+        shape_str, kind = m.group(1), m.group(2).lower()
+        nbytes = shape_bytes(shape_str)
+        # replica group size for the ring model
+        n = 0
+        g = _GROUPS_RE.search(line)
+        if g:
+            n = len([t for t in g.group(1).split(",") if t.strip()])
+        else:
+            gi = _GROUPS_IOTA_RE.search(line)
+            if gi:
+                n = int(gi.group(2))
+        n = max(n, 2)
+        if kind == "all-reduce":
+            ring = 2 * nbytes * (n - 1) / n
+        elif kind == "collective-permute":
+            ring = nbytes
+        else:
+            ring = nbytes * (n - 1) / n
+        stats.bytes_simple += nbytes
+        stats.bytes_ring += ring
+        stats.count += 1
+        stats.by_kind[kind] = stats.by_kind.get(kind, 0) + nbytes
+        stats.by_kind_count[kind] = stats.by_kind_count.get(kind, 0) + 1
+    return stats
+
+
+@dataclass
+class Roofline:
+    arch: str
+    shape: str
+    mesh: str
+    chips: int
+    hlo_flops: float
+    hlo_bytes: float
+    coll_bytes: float
+    coll_ring: float
+    coll_count: int
+    coll_by_kind: Dict[str, int]
+    model_flops: float
+    per_device_mem: Optional[float]
+    raw_cost_flops: float = 0.0       # compiled.cost_analysis() (loop bodies x1)
+    raw_cost_bytes: float = 0.0
+    cast_bytes: float = 0.0           # excluded CPU-legalization cast traffic
+
+    @property
+    def t_compute(self) -> float:
+        return self.hlo_flops / (self.chips * PEAK_FLOPS)
+
+    @property
+    def t_memory(self) -> float:
+        return self.hlo_bytes / (self.chips * HBM_BW)
+
+    @property
+    def t_collective(self) -> float:
+        return self.coll_bytes / (self.chips * LINK_BW)
+
+    @property
+    def dominant(self) -> str:
+        terms = {"compute": self.t_compute, "memory": self.t_memory,
+                 "collective": self.t_collective}
+        return max(terms, key=terms.get)
+
+    @property
+    def bound_time(self) -> float:
+        return max(self.t_compute, self.t_memory, self.t_collective)
+
+    @property
+    def useful_flops_ratio(self) -> float:
+        return self.model_flops / self.hlo_flops if self.hlo_flops else 0.0
+
+    @property
+    def roofline_fraction(self) -> float:
+        """How close the step is to the compute roofline: time the chips are
+        doing model math vs total bound time (higher is better)."""
+        ideal = self.model_flops / (self.chips * PEAK_FLOPS)
+        return ideal / self.bound_time if self.bound_time else 0.0
+
+    def row(self) -> dict:
+        return {
+            "arch": self.arch, "shape": self.shape, "mesh": self.mesh,
+            "chips": self.chips,
+            "hlo_flops": self.hlo_flops, "hlo_bytes": self.hlo_bytes,
+            "coll_bytes": self.coll_bytes, "coll_ring": self.coll_ring,
+            "coll_count": self.coll_count, "coll_by_kind": self.coll_by_kind,
+            "model_flops": self.model_flops,
+            "t_compute_s": self.t_compute, "t_memory_s": self.t_memory,
+            "t_collective_s": self.t_collective, "dominant": self.dominant,
+            "useful_flops_ratio": self.useful_flops_ratio,
+            "roofline_fraction": self.roofline_fraction,
+            "per_device_mem_bytes": self.per_device_mem,
+            "raw_cost_flops": self.raw_cost_flops,
+            "raw_cost_bytes": self.raw_cost_bytes,
+            "cast_bytes": self.cast_bytes,
+        }
+
+
+def analyze(arch: str, shape: str, mesh_name: str, chips: int, compiled,
+            lowered, model_flops: float) -> Roofline:
+    """Roofline terms from the compiled per-device SPMD module.
+
+    Primary figures come from the trip-count-aware :class:`HloCost`;
+    ``compiled.cost_analysis()`` raw values (which undercount loop bodies)
+    are preserved in the row for cross-reference.
+    """
+    hlo = compiled.as_text()
+    cm = HloCost(hlo)
+    per_dev_flops = cm.flops
+    per_dev_bytes = cm.bytes
+    stats = cm.collectives()
+    mem = None
+    try:
+        ma = compiled.memory_analysis()
+        if ma is not None:
+            mem = (getattr(ma, "argument_size_in_bytes", 0)
+                   + getattr(ma, "output_size_in_bytes", 0)
+                   + getattr(ma, "temp_size_in_bytes", 0))
+    except Exception:
+        pass
+    r = Roofline(arch=arch, shape=shape, mesh=mesh_name, chips=chips,
+                 hlo_flops=per_dev_flops * chips,
+                 hlo_bytes=per_dev_bytes * chips,
+                 coll_bytes=stats.bytes_simple * chips,
+                 coll_ring=stats.bytes_ring * chips,
+                 coll_count=stats.count, coll_by_kind=stats.by_kind,
+                 model_flops=model_flops, per_device_mem=mem)
+    cost = compiled.cost_analysis() or {}
+    r.raw_cost_flops = float(cost.get("flops", 0.0))
+    r.raw_cost_bytes = float(cost.get("bytes accessed", 0.0))
+    r.cast_bytes = cm.cast_bytes * chips
+    return r
+
+
+def model_flops_estimate(cfg, shape) -> float:
+    """6*N*D train / 2*N*D inference with N = active params, D = tokens."""
+    n_active = cfg.param_count(active_only=True)
+    if shape.kind == "train":
+        tokens = shape.global_batch * shape.seq_len
+        return 6.0 * n_active * tokens
+    if shape.kind == "prefill":
+        tokens = shape.global_batch * shape.seq_len
+        return 2.0 * n_active * tokens
+    return 2.0 * n_active * shape.global_batch      # decode: one token/seq

@@ -1,0 +1,153 @@
+import os
+os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "")
+                           + " --xla_force_host_platform_device_count=512")
+# ^ MUST precede any jax import: jax locks the device count on first init.
+"""Multi-pod dry-run: lower + compile every (architecture x input-shape) cell
+on the production mesh and extract memory/cost/collective roofline terms.
+
+    PYTHONPATH=src python -m repro.launch.dryrun --arch qwen3-1.7b \
+        --shape train_4k [--multi-pod] [--out results.json]
+
+Proves the distribution config is coherent without hardware: sharding
+mismatches, compile-time OOM, or unsupported collectives all fail here.
+"""
+import argparse
+import json
+import sys
+import time
+import traceback
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import (SHAPES, HornConfig, RunConfig, get_model_config,
+                                list_archs)
+from repro.core import steps
+from repro.launch import analysis
+from repro.launch.mesh import make_production_mesh
+
+# long_500k applicability (DESIGN.md §Arch-applicability): run only for archs
+# with sub-quadratic / windowed sequence structure.
+LONG_OK = {"mamba2-2.7b", "jamba-1.5-large-398b", "gemma2-27b", "gemma3-4b"}
+
+
+def applicable(arch: str, shape_name: str):
+    if shape_name == "long_500k" and arch not in LONG_OK:
+        return False, "pure full-attention arch: 500k ctx skipped (DESIGN.md)"
+    if arch == "whisper-base" and shape_name == "long_500k":
+        return False, "enc-dec audio: 500k decoder ctx is architecturally moot"
+    return True, ""
+
+
+def make_run(arch: str, shape_name: str, multi_pod: bool) -> RunConfig:
+    cfg = get_model_config(arch)
+    shape = SHAPES[shape_name]
+    # Horn parallel dropout is a training-time feature; serving cells run eval.
+    horn = HornConfig(enabled=shape.kind == "train")
+    return RunConfig(model=cfg, shape=shape, horn=horn, optimizer="adamw",
+                     learning_rate=3e-4, momentum=0.9, multi_pod=multi_pod)
+
+
+def lower_cell(run: RunConfig, mesh):
+    """Returns (lowered, compiled) for the cell's step function."""
+    kind = run.shape.kind
+    if kind == "train":
+        jitted, _ = steps.make_train_step(run, mesh)
+        state = jax.eval_shape(lambda: steps.init_state(
+            jax.random.key(0), run))
+        batch = steps.input_specs(run)
+        with mesh:
+            lowered = jitted.lower(state, batch)
+    elif kind == "prefill":
+        jitted, _ = steps.make_prefill_step(run, mesh)
+        pstruct = jax.eval_shape(
+            lambda: steps.init_state(jax.random.key(0), run))["params"]
+        batch = steps.input_specs(run)
+        with mesh:
+            lowered = jitted.lower(pstruct, batch)
+    else:  # decode
+        jitted, info = steps.make_decode_step(run, mesh)
+        pstruct = jax.eval_shape(
+            lambda: steps.init_state(jax.random.key(0), run))["params"]
+        dspec = steps.decode_input_specs(run)
+        args = (pstruct, info["cache_struct"], dspec["tokens"], dspec["pos"])
+        if run.model.is_encoder_decoder:
+            args = args + (dspec["encoder_out"],)
+        with mesh:
+            lowered = jitted.lower(*args)
+    compiled = lowered.compile()
+    return lowered, compiled
+
+
+def run_cell(arch: str, shape_name: str, multi_pod: bool, verbose: bool = True):
+    ok, why = applicable(arch, shape_name)
+    mesh_name = "2x16x16" if multi_pod else "16x16"
+    if not ok:
+        return {"arch": arch, "shape": shape_name, "mesh": mesh_name,
+                "status": "skipped", "reason": why}
+    t0 = time.time()
+    try:
+        run = make_run(arch, shape_name, multi_pod)
+        mesh = make_production_mesh(multi_pod=multi_pod)
+        chips = mesh.devices.size
+        lowered, compiled = lower_cell(run, mesh)
+        mf = analysis.model_flops_estimate(run.model, run.shape)
+        roof = analysis.analyze(arch, shape_name, mesh_name, chips,
+                                compiled, lowered, mf)
+        row = roof.row()
+        row["status"] = "ok"
+        row["compile_s"] = time.time() - t0
+        try:
+            ma = compiled.memory_analysis()
+            row["memory_analysis"] = str(ma)
+        except Exception:
+            row["memory_analysis"] = None
+        if verbose:
+            print(f"[{arch} x {shape_name} x {mesh_name}] OK "
+                  f"compile={row['compile_s']:.1f}s "
+                  f"flops={row['hlo_flops']:.3e} bytes={row['hlo_bytes']:.3e} "
+                  f"coll={row['coll_bytes']:.3e} ({row['coll_count']} ops) "
+                  f"dominant={row['dominant']}")
+            print("  memory_analysis:", row["memory_analysis"])
+        return row
+    except Exception as e:
+        if verbose:
+            traceback.print_exc()
+        return {"arch": arch, "shape": shape_name, "mesh": mesh_name,
+                "status": "error", "error": f"{type(e).__name__}: {e}",
+                "compile_s": time.time() - t0}
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="all")
+    ap.add_argument("--shape", default="all")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--out", default=None)
+    args = ap.parse_args()
+
+    archs = ([a for a in list_archs() if a != "horn-mnist"]
+             if args.arch == "all" else [args.arch])
+    shapes = list(SHAPES) if args.shape == "all" else [args.shape]
+    meshes = [False, True] if args.both_meshes else [args.multi_pod]
+
+    rows = []
+    for arch in archs:
+        for shape in shapes:
+            for mp in meshes:
+                rows.append(run_cell(arch, shape, mp))
+    n_ok = sum(r["status"] == "ok" for r in rows)
+    n_err = sum(r["status"] == "error" for r in rows)
+    n_skip = sum(r["status"] == "skipped" for r in rows)
+    print(f"\ndry-run cells: {n_ok} ok, {n_skip} skipped (documented), "
+          f"{n_err} errors")
+    if args.out:
+        with open(args.out, "w") as f:
+            json.dump(rows, f, indent=1, default=str)
+        print("wrote", args.out)
+    sys.exit(1 if n_err else 0)
+
+
+if __name__ == "__main__":
+    main()

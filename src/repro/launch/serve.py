@@ -1,0 +1,112 @@
+"""Serving launcher: batched prefill + decode loop.
+
+    PYTHONPATH=src python -m repro.launch.serve --arch qwen3-1.7b \
+        --batch 4 --prompt-len 64 --gen 16
+
+Runs the real production serving path (pjit prefill -> pjit one-token decode
+with donated sharded KV cache) on reduced configs in this container; the
+full-config versions are proven by the decode cells of the dry-run.
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import (HornConfig, RunConfig, ShapeConfig,
+                                get_model_config, list_archs, reduced)
+from repro.core import steps as S
+from repro.launch.mesh import make_test_mesh
+from repro.models import api
+from repro.models import transformer as T
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True, choices=list_archs())
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=64)
+    ap.add_argument("--gen", type=int, default=16)
+    ap.add_argument("--full-config", action="store_true")
+    ap.add_argument("--temperature", type=float, default=0.0)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+
+    cfg = get_model_config(args.arch)
+    if not args.full_config:
+        cfg = reduced(cfg)
+    if cfg.family == "mlp":
+        raise SystemExit("horn-mnist is a classifier; use launch.train")
+    max_len = args.prompt_len + args.gen
+    mesh = make_test_mesh()
+    run = RunConfig(model=cfg,
+                    shape=ShapeConfig("serve", "decode", max_len, args.batch),
+                    horn=HornConfig(enabled=False))
+
+    params = api.model_init(jax.random.key(args.seed), cfg)
+    rng = np.random.default_rng(args.seed)
+    text_len = args.prompt_len - (cfg.num_patches or 0)
+    batch = {"tokens": jnp.asarray(
+        rng.integers(0, cfg.vocab_size, (args.batch, max(1, text_len))),
+        jnp.int32)}
+    if cfg.is_encoder_decoder:
+        batch["frames"] = jnp.zeros((args.batch, cfg.encoder_seq, cfg.d_model),
+                                    jnp.bfloat16)
+    if cfg.num_patches:
+        batch["patch_embeds"] = jnp.zeros(
+            (args.batch, cfg.num_patches, cfg.d_model), jnp.bfloat16)
+
+    pre, _ = S.make_prefill_step(run, mesh)
+    t0 = time.time()
+    logits, prefill_cache, enc = pre(params, batch)
+    logits.block_until_ready()
+    print(f"prefill [{args.batch} x {args.prompt_len}]: "
+          f"{time.time() - t0:.2f}s")
+
+    # right-pad the prefill cache into the decode buffer
+    dec, info = S.make_decode_step(run, mesh)
+    cache = jax.tree.map(lambda s: jnp.zeros(s.shape, s.dtype),
+                         info["cache_struct"])
+
+    def splice(buf, pre_arr):
+        if (buf.ndim == pre_arr.ndim and buf.ndim >= 4
+                and pre_arr.shape[-2:] == buf.shape[-2:]):
+            seq_ax = buf.ndim - 3
+            if pre_arr.shape[seq_ax] <= buf.shape[seq_ax]:
+                pad = [(0, 0)] * buf.ndim
+                pad[seq_ax] = (0, buf.shape[seq_ax] - pre_arr.shape[seq_ax])
+                return jnp.pad(pre_arr, pad).astype(buf.dtype)
+        return pre_arr.astype(buf.dtype)   # SSM states / conv tails: as-is
+
+    cache = jax.tree.map(splice, cache, prefill_cache)
+
+    def sample(lg, key):
+        if args.temperature <= 0:
+            return jnp.argmax(lg, -1)
+        return jax.random.categorical(key, lg / args.temperature)
+
+    token = sample(logits, jax.random.key(1))[:, None].astype(jnp.int32)
+    out_tokens = [token]
+    t0 = time.time()
+    for i in range(args.gen - 1):
+        pos = jnp.asarray(args.prompt_len + i, jnp.int32)
+        dargs = (params, cache, token, pos)
+        if cfg.is_encoder_decoder:
+            dargs = dargs + (enc.astype(jnp.bfloat16),)
+        lg, cache = dec(*dargs)
+        token = sample(lg, jax.random.fold_in(jax.random.key(1), i)
+                       )[:, None].astype(jnp.int32)
+        out_tokens.append(token)
+    jax.block_until_ready(token)
+    dt = time.time() - t0
+    gen = np.concatenate([np.asarray(t) for t in out_tokens], axis=1)
+    print(f"decode: {args.gen - 1} steps in {dt:.2f}s "
+          f"({args.batch * (args.gen - 1) / max(dt, 1e-9):.1f} tok/s)")
+    print("generated token ids (first row):", gen[0][:16].tolist())
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,103 @@
+"""Unified model API over all assigned architectures.
+
+``batch`` dict keys by family:
+  all:    tokens [B, S_text] int32, labels [B, S_text] int32
+  audio:  frames [B, encoder_seq, d_model]      (stub frontend)
+  vlm:    patch_embeds [B, num_patches, d_model] (stub frontend; prefix fusion)
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.launch.mesh import ShardingCtx
+from repro.models import transformer as T
+from repro.models import encdec as ED
+from repro.models.params import param_axes
+
+f32 = jnp.float32
+
+
+def model_specs(cfg: ModelConfig):
+    if cfg.is_encoder_decoder:
+        return ED.encdec_specs(cfg)
+    return T.lm_specs(cfg)
+
+
+def model_init(key, cfg: ModelConfig):
+    if cfg.is_encoder_decoder:
+        return ED.encdec_init(key, cfg)
+    return T.lm_init(key, cfg)
+
+
+def model_axes(cfg: ModelConfig):
+    return param_axes(model_specs(cfg))
+
+
+def _decoder_params(params, cfg):
+    return params["decoder"] if cfg.is_encoder_decoder else params
+
+
+def forward_hidden(params, batch: Dict[str, Any], cfg: ModelConfig,
+                   ctx: ShardingCtx, *, horn=None, mode: str = "train",
+                   remat: bool = True, cache=None, cache_index=None,
+                   encoder_out=None):
+    """Returns (hidden, new_cache, aux, encoder_out)."""
+    if cfg.is_encoder_decoder:
+        hidden, new_cache, aux, enc = ED.encdec_forward(
+            params, batch.get("frames"), batch["tokens"], cfg, ctx, horn=horn,
+            cache=cache, cache_index=cache_index, mode=mode, remat=remat,
+            encoder_out=encoder_out)
+        return hidden, new_cache, aux, enc
+    hidden, new_cache, aux = T.lm_forward(
+        params, batch["tokens"], cfg, ctx, horn=horn,
+        patch_embeds=batch.get("patch_embeds"), cache=cache,
+        cache_index=cache_index, mode=mode, remat=remat)
+    return hidden, new_cache, aux, None
+
+
+def model_loss(params, batch, cfg: ModelConfig, ctx: ShardingCtx, *,
+               horn=None, remat: bool = True,
+               lb_coef: float = 0.01, z_coef: float = 1e-3):
+    """Scalar loss + metrics.  Labels cover the text positions only."""
+    hidden, _, aux, _ = forward_hidden(params, batch, cfg, ctx, horn=horn,
+                                       mode="train", remat=remat)
+    if cfg.num_patches and "patch_embeds" in batch:
+        hidden = hidden[:, batch["patch_embeds"].shape[1]:]
+    dec_params = _decoder_params(params, cfg)
+    xent = T.chunked_xent(hidden, dec_params, batch["labels"], cfg, ctx)
+    loss = xent
+    if cfg.num_experts:
+        loss = loss + lb_coef * aux["load_balance_loss"] \
+                    + z_coef * aux["router_z_loss"]
+    metrics = {"loss": loss, "xent": xent, **aux}
+    return loss, metrics
+
+
+def prefill(params, batch, cfg: ModelConfig, ctx: ShardingCtx):
+    """Full-sequence forward for serving; returns last-position logits + cache."""
+    hidden, cache, _, enc = forward_hidden(params, batch, cfg, ctx,
+                                           mode="prefill", remat=False)
+    dec_params = _decoder_params(params, cfg)
+    logits = T.lm_logits(dec_params, hidden[:, -1:], cfg, ctx)
+    return logits[:, 0], cache, enc
+
+
+def decode_step(params, cache, tokens, cache_index, cfg: ModelConfig,
+                ctx: ShardingCtx, *, encoder_out=None):
+    """One-token decode.  tokens: [B, 1]; cache_index: scalar int32 position.
+
+    Returns (logits [B, vocab], new_cache).
+    """
+    batch = {"tokens": tokens}
+    if cfg.is_encoder_decoder and encoder_out is None:
+        raise ValueError("enc-dec decode requires encoder_out")
+    hidden, new_cache, _, _ = forward_hidden(
+        params, batch, cfg, ctx, mode="decode", remat=False, cache=cache,
+        cache_index=cache_index, encoder_out=encoder_out)
+    dec_params = _decoder_params(params, cfg)
+    logits = T.lm_logits(dec_params, hidden, cfg, ctx)
+    return logits[:, 0], new_cache

@@ -1,0 +1,86 @@
+"""Single-source-of-truth parameter declaration.
+
+Each layer declares its parameters once as ``ParamSpec``s (shape + logical axes
++ initializer); both the init function and the logical-axes tree derive from the
+same specs, so sharding metadata can never drift from the arrays.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Callable, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclass(frozen=True)
+class ParamSpec:
+    shape: Tuple[int, ...]
+    axes: Tuple[Optional[str], ...]       # logical axis names, len == ndim
+    init: str = "normal"                  # normal | zeros | ones | scaled
+    scale: float = 1.0                    # stddev for normal / value scale
+    dtype: str = "float32"
+    fan_in: Optional[int] = None          # explicit fan-in (survives stacking)
+
+    def __post_init__(self):
+        assert len(self.shape) == len(self.axes), (self.shape, self.axes)
+
+
+def _init_leaf(key, spec: ParamSpec):
+    dt = jnp.dtype(spec.dtype)
+    if spec.init == "zeros":
+        return jnp.zeros(spec.shape, dt)
+    if spec.init == "ones":
+        return jnp.ones(spec.shape, dt) * spec.scale
+    if spec.init == "normal":
+        fan_in = spec.fan_in or (spec.shape[0] if spec.shape else 1)
+        std = spec.scale / np.sqrt(max(1, fan_in))
+        return (jax.random.normal(key, spec.shape, jnp.float32) * std).astype(dt)
+    if spec.init == "uniform":
+        return jax.random.uniform(key, spec.shape, dt, -spec.scale, spec.scale)
+    raise ValueError(spec.init)
+
+
+def is_spec(x) -> bool:
+    return isinstance(x, ParamSpec)
+
+
+def init_params(key, specs):
+    """Materialize a pytree of ParamSpec into arrays (deterministic per-path keys)."""
+    leaves, treedef = jax.tree.flatten(specs, is_leaf=is_spec)
+    keys = jax.random.split(key, len(leaves))
+    arrs = [_init_leaf(k, s) for k, s in zip(keys, leaves)]
+    return jax.tree.unflatten(treedef, arrs)
+
+
+def param_axes(specs):
+    """The logical-axes pytree matching ``init_params``'s output structure."""
+    return jax.tree.map(lambda s: tuple(s.axes), specs, is_leaf=is_spec)
+
+
+def param_shapes(specs):
+    return jax.tree.map(lambda s: s.shape, specs, is_leaf=is_spec)
+
+
+def stack_specs(specs, n: int, axis_name: str = "layers"):
+    """Prepend a stacked (scanned) leading dim to every spec in the tree.
+
+    Preserves fan-in so e.g. a (d, ff) matrix stacked to (L, d, ff) still
+    initializes with std ~ 1/sqrt(d), not 1/sqrt(L).
+    """
+    def f(s: ParamSpec) -> ParamSpec:
+        fan = s.fan_in or (s.shape[0] if s.shape else 1)
+        return ParamSpec((n,) + s.shape, (axis_name,) + s.axes, s.init,
+                         s.scale, s.dtype, fan)
+    return jax.tree.map(f, specs, is_leaf=is_spec)
+
+
+def count_params(tree) -> int:
+    return sum(int(np.prod(x.shape)) for x in jax.tree.leaves(tree))
+
+
+def cast_tree(tree, dtype):
+    dt = jnp.dtype(dtype)
+    return jax.tree.map(
+        lambda x: x.astype(dt) if jnp.issubdtype(x.dtype, jnp.floating) else x, tree)

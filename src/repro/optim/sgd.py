@@ -1,0 +1,87 @@
+"""Optimizers (pure pytree functions): momentum SGD (the paper's optimizer)
+and AdamW for the LM-scale configs.  No optax dependency by design.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+
+f32 = jnp.float32
+
+
+# ---------------------------------------------------------------------------
+# Momentum SGD — paper §3: eta = 0.3, alpha (momentum) = 0.98
+# ---------------------------------------------------------------------------
+def sgdm_init(params):
+    return {"mom": jax.tree.map(lambda p: jnp.zeros_like(p, f32), params)}
+
+
+def sgdm_update(grads, state, params, *, lr, momentum=0.98, weight_decay=0.0):
+    def upd(g, m, p):
+        g = g.astype(f32)
+        if weight_decay:
+            g = g + weight_decay * p.astype(f32)
+        m_new = momentum * m + g
+        p_new = p.astype(f32) - lr * m_new
+        return p_new.astype(p.dtype), m_new
+
+    flat = jax.tree.map(upd, grads, state["mom"], params)
+    new_params = jax.tree.map(lambda t: t[0], flat,
+                              is_leaf=lambda x: isinstance(x, tuple))
+    new_mom = jax.tree.map(lambda t: t[1], flat,
+                           is_leaf=lambda x: isinstance(x, tuple))
+    return new_params, {"mom": new_mom}
+
+
+# ---------------------------------------------------------------------------
+# AdamW
+# ---------------------------------------------------------------------------
+def adamw_init(params):
+    z = lambda p: jnp.zeros_like(p, f32)
+    return {"m": jax.tree.map(z, params), "v": jax.tree.map(z, params),
+            "t": jnp.zeros((), jnp.int32)}
+
+
+def adamw_update(grads, state, params, *, lr, b1=0.9, b2=0.95, eps=1e-8,
+                 weight_decay=0.0):
+    t = state["t"] + 1
+    tf = t.astype(f32)
+
+    def upd(g, m, v, p):
+        g = g.astype(f32)
+        m_new = b1 * m + (1 - b1) * g
+        v_new = b2 * v + (1 - b2) * jnp.square(g)
+        mhat = m_new / (1 - b1 ** tf)
+        vhat = v_new / (1 - b2 ** tf)
+        step = mhat / (jnp.sqrt(vhat) + eps)
+        if weight_decay:
+            step = step + weight_decay * p.astype(f32)
+        return (p.astype(f32) - lr * step).astype(p.dtype), m_new, v_new
+
+    flat = jax.tree.map(upd, grads, state["m"], state["v"], params)
+    pick = lambda i: jax.tree.map(lambda t_: t_[i], flat,
+                                  is_leaf=lambda x: isinstance(x, tuple))
+    return pick(0), {"m": pick(1), "v": pick(2), "t": t}
+
+
+OPTIMIZERS = {
+    "sgdm": (sgdm_init, sgdm_update),
+    "adamw": (adamw_init, adamw_update),
+}
+
+
+def make_optimizer(name: str):
+    return OPTIMIZERS[name]
+
+
+def global_norm(tree) -> jnp.ndarray:
+    leaves = [jnp.sum(jnp.square(x.astype(f32))) for x in jax.tree.leaves(tree)]
+    return jnp.sqrt(sum(leaves))
+
+
+def clip_by_global_norm(tree, max_norm: float):
+    norm = global_norm(tree)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(norm, 1e-9))
+    return jax.tree.map(lambda x: (x.astype(f32) * scale).astype(x.dtype), tree), norm

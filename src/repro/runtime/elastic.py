@@ -1,0 +1,40 @@
+"""Elastic scaling: continue a run on a different mesh.
+
+A v5e pod losing a host drops 8 chips; the job restarts on e.g. (14, 16) or a
+half-pod (8, 16).  Because all shardings are *logical*, remeshing is:
+
+    new_mesh  = make_mesh(new_shape)
+    new_rules = sharding_rules(cfg, new_mesh)   # divisibility-aware fallbacks
+    state     = remesh_state(state, axes, new_ctx)
+
+The divisibility fallbacks in ``sharding_rules`` mean a dimension that no
+longer divides (e.g. 16 kv-heads on a 12-way model axis) degrades to
+replication instead of failing — the run continues, just less sharded.
+"""
+from __future__ import annotations
+
+import jax
+
+from repro.launch.mesh import ShardingCtx, sharding_rules, tree_shardings
+
+
+def remesh_state(state, state_axes, new_ctx: ShardingCtx):
+    """Re-lay-out a (possibly host-resident) state pytree onto a new mesh."""
+    sh = tree_shardings(state_axes, new_ctx)
+
+    def put(x, s):
+        if s is None:
+            return jax.device_put(x)
+        return jax.device_put(x, s)
+
+    return jax.tree.map(put, state, sh,
+                        is_leaf=lambda x: not isinstance(x, dict))
+
+
+def valid_meshes(n_devices: int):
+    """Factorizations (data, model) usable after losing nodes."""
+    out = []
+    for model in (1, 2, 4, 8, 16):
+        if n_devices % model == 0:
+            out.append((n_devices // model, model))
+    return out

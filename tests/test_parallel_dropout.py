@@ -1,0 +1,86 @@
+"""Property tests (hypothesis) for Horn's parallel dropout invariants."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.configs.base import HornConfig
+from repro.core import parallel_dropout as pdrop
+
+SETTINGS = dict(max_examples=25, deadline=None)
+
+
+@given(groups=st.integers(1, 8), units=st.integers(8, 300),
+       keep=st.floats(0.2, 0.9), block=st.sampled_from([1, 4, 16, 128]),
+       seed=st.integers(0, 2**31 - 1))
+@settings(**SETTINGS)
+def test_mask_values_and_connectivity(groups, units, keep, block, seed):
+    """Masks take values in {0, 1/keep} and never kill an entire layer."""
+    m = pdrop.group_block_mask(jax.random.key(seed), groups, units, keep, block)
+    vals = np.unique(np.asarray(m))
+    ok = np.isclose(vals, 0.0) | np.isclose(vals, 1.0 / keep, rtol=1e-5)
+    assert ok.all(), vals
+    assert (np.asarray(m).max(axis=-1) > 0).all(), "a group lost all blocks"
+
+
+@given(keep=st.floats(0.3, 0.9), seed=st.integers(0, 2**31 - 1))
+@settings(**SETTINGS)
+def test_inverted_dropout_unbiased(keep, seed):
+    """E[mask] ~= 1: train-time inverted scaling == paper's eval-time scaling
+    in expectation (the equivalence noted in DESIGN.md §4)."""
+    m = pdrop.group_block_mask(jax.random.key(seed), 512, 1024, keep, 1)
+    assert abs(float(np.asarray(m).mean()) - 1.0) < 0.05
+
+
+@given(seed=st.integers(0, 2**31 - 1))
+@settings(**SETTINGS)
+def test_groups_draw_different_submodels(seed):
+    """Different groups get different sub-models (the whole point)."""
+    m = np.asarray(pdrop.group_block_mask(jax.random.key(seed), 8, 512, 0.5, 1))
+    distinct = {tuple(row) for row in (m > 0).astype(int)}
+    assert len(distinct) >= 7     # collisions astronomically unlikely
+
+
+def test_mask_deterministic_per_step_and_layer():
+    cfg = HornConfig(enabled=True, num_groups=4)
+    s1 = pdrop.make_horn_state(jax.random.key(0), cfg, 4, step=3)
+    s2 = pdrop.make_horn_state(jax.random.key(0), cfg, 4, step=3)
+    m1 = pdrop.unit_mask(s1, 2, 8, 256)
+    m2 = pdrop.unit_mask(s2, 2, 8, 256)
+    np.testing.assert_array_equal(np.asarray(m1), np.asarray(m2))
+    s3 = pdrop.make_horn_state(jax.random.key(0), cfg, 4, step=4)
+    m3 = pdrop.unit_mask(s3, 2, 8, 256)
+    assert not np.array_equal(np.asarray(m1), np.asarray(m3))
+
+
+def test_expand_mask_group_to_sample():
+    mb = jnp.asarray([[2.0, 0.0], [0.0, 2.0]])
+    m = np.asarray(pdrop.expand_mask(mb, 8, 4))    # [4, 1, 8]
+    assert m.shape == (4, 1, 8)
+    np.testing.assert_array_equal(m[0], m[1])      # samples of group 0 match
+    assert not np.array_equal(m[0], m[2])
+
+
+def test_eval_mode_returns_none():
+    assert pdrop.unit_mask(None, 0, 4, 128) is None
+    cfg = HornConfig(enabled=False)
+    assert pdrop.make_horn_state(jax.random.key(0), cfg, 4, 0) is None
+
+
+def test_batch_averaging_equals_large_batch_sgd():
+    """Horn's claim basis: averaging G groups' grads on B/G samples each ==
+    the gradient of the full batch (for a shared model, no dropout)."""
+    from repro.core.neuron_centric import paper_mnist_network
+    nn = paper_mnist_network(hidden=16, depth=1)
+    nn.input_neuron = "standard"
+    params = nn.init(jax.random.key(0))
+    x = jax.random.normal(jax.random.key(1), (16, 784))
+    y = jax.random.randint(jax.random.key(2), (16,), 0, 10)
+    full = jax.grad(nn.loss)(params, {"x": x, "y": y})
+    gs = [jax.grad(nn.loss)(params, {"x": x[i::4], "y": y[i::4]})
+          for i in range(4)]
+    avg = jax.tree.map(lambda *g: sum(g) / 4, *gs)
+    for a, b in zip(jax.tree.leaves(full), jax.tree.leaves(avg)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   atol=1e-5, rtol=1e-4)

@@ -1,0 +1,62 @@
+"""Property test: sharding rules are valid for EVERY (arch x shape x mesh
+factorization) — the elastic-scaling guarantee that a resized cluster never
+produces an invalid sharding, only degraded (replicated) ones."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.configs.base import SHAPES, get_model_config, list_archs
+from repro.launch.mesh import sharding_rules
+
+ARCHS = [a for a in list_archs() if a != "horn-mnist"]
+
+
+class _FakeMesh:
+    def __init__(self, data, model, pod=None):
+        sizes = {"data": data, "model": model}
+        if pod:
+            sizes = {"pod": pod, **sizes}
+        self.axis_names = tuple(sizes)
+        self.devices = np.empty(tuple(sizes.values()))
+
+
+def _dims(cfg, shape):
+    d_in = cfg.ssm_expand * cfg.d_model
+    return {
+        "heads": cfg.num_heads, "kv_heads": cfg.num_kv_heads,
+        "head_dim": cfg.head_dim, "kv_head_dim": cfg.head_dim,
+        "ffn": cfg.d_ff, "act_ffn": cfg.d_ff, "moe_ffn": cfg.moe_ff,
+        "embed": cfg.d_model, "vocab": cfg.vocab_size,
+        "experts": cfg.num_experts,
+        "ssm_inner": d_in, "ssm_heads": d_in // cfg.ssm_head_dim,
+        "kv_seq": shape.seq_len, "sp_seq": shape.seq_len,
+        "seq": shape.seq_len,
+    }
+
+
+@given(arch=st.sampled_from(ARCHS),
+       shape_name=st.sampled_from(list(SHAPES)),
+       data=st.sampled_from([1, 2, 4, 8, 12, 14, 16]),
+       model=st.sampled_from([1, 2, 4, 8, 12, 16]),
+       pod=st.sampled_from([None, 2, 3]))
+@settings(max_examples=120, deadline=None)
+def test_rules_always_divisible(arch, shape_name, data, model, pod):
+    cfg = get_model_config(arch)
+    shape = SHAPES[shape_name]
+    mesh = _FakeMesh(data, model, pod)
+    rules = sharding_rules(cfg, mesh, shape)
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    dims = _dims(cfg, shape)
+    for axis, mapped in rules.items():
+        if mapped is None or axis not in dims or dims[axis] <= 0:
+            continue
+        for m in (mapped if isinstance(mapped, tuple) else (mapped,)):
+            assert dims[axis] % sizes[m] == 0, \
+                (arch, shape_name, axis, dims[axis], m, sizes[m])
+    # batch rule: either divisible or dropped
+    dp = sizes.get("data", 1) * sizes.get("pod", 1)
+    if rules["batch"] is not None and dp > 1:
+        covered = 1
+        for m in rules["batch"]:
+            covered *= sizes[m]
+        assert shape.global_batch % covered == 0

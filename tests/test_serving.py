@@ -1,0 +1,65 @@
+"""Serving-path integration: token-by-token decode must reproduce the
+prefill (teacher-forced) logits — validates KV/SSM cache math end-to-end,
+including the flash-decode attention rewrite and shard_map cache updates.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import get_model_config, reduced
+from repro.core.steps import make_ctx
+from repro.models import api
+from repro.models import transformer as T
+
+
+@pytest.mark.parametrize("arch", ["qwen3-1.7b", "mamba2-2.7b", "gemma2-27b",
+                                  "jamba-1.5-large-398b"])
+def test_decode_matches_teacher_forcing(arch):
+    # capacity_factor high enough that no token is capacity-dropped: capacity
+    # MoE drops late tokens under teacher forcing but never in one-token
+    # decode — an inherent (documented) train/serve asymmetry, not a bug.
+    cfg = reduced(get_model_config(arch), capacity_factor=8.0)
+    ctx = make_ctx(cfg, None)
+    params = api.model_init(jax.random.key(0), cfg)
+    B, S = 2, 8
+    tokens = jax.random.randint(jax.random.key(1), (B, S), 0, cfg.vocab_size)
+
+    # teacher-forced full forward -> logits at every position
+    hidden, _, _, _ = api.forward_hidden(params, {"tokens": tokens}, cfg, ctx,
+                                         mode="train", remat=False)
+    full_logits = T.lm_logits(params, hidden, cfg, ctx)
+
+    # token-by-token decode from a zero cache
+    cache = T.init_cache(cfg, B, S + 4, dtype=jnp.float32)
+    logits_seq = []
+    for i in range(S):
+        lg, cache = api.decode_step(params, cache, tokens[:, i:i + 1],
+                                    jnp.asarray(i, jnp.int32), cfg, ctx)
+        logits_seq.append(lg)
+    dec_logits = jnp.stack(logits_seq, axis=1)
+
+    np.testing.assert_allclose(
+        np.asarray(dec_logits, np.float32),
+        np.asarray(full_logits, np.float32), atol=5e-2, rtol=5e-2)
+
+
+def test_prefill_cache_matches_decode_cache_contents():
+    """Prefill's returned KV equals what decode writes token-by-token."""
+    cfg = reduced(get_model_config("qwen3-1.7b"))
+    ctx = make_ctx(cfg, None)
+    params = api.model_init(jax.random.key(0), cfg)
+    B, S = 1, 6
+    tokens = jax.random.randint(jax.random.key(2), (B, S), 0, cfg.vocab_size)
+    _, pre_cache, _ = api.prefill(params, {"tokens": tokens}, cfg, ctx)
+
+    cache = T.init_cache(cfg, B, S, dtype=jnp.float32)
+    for i in range(S):
+        _, cache = api.decode_step(params, cache, tokens[:, i:i + 1],
+                                   jnp.asarray(i, jnp.int32), cfg, ctx)
+    # compare K buffers of the first scanned superblock position
+    k_pre = np.asarray(pre_cache["blocks"]["l0"][0], np.float32)
+    k_dec = np.asarray(cache["blocks"]["l0"][0], np.float32)
+    np.testing.assert_allclose(k_pre, k_dec[:, :, :S][:, :, :k_pre.shape[2]]
+                               if k_dec.ndim == k_pre.ndim else k_dec,
+                               atol=2e-2, rtol=2e-2)

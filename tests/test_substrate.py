@@ -1,0 +1,142 @@
+"""Substrate tests: data determinism, optimizers, neuron-centric engine,
+MNIST trainer wiring, topology validation."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.configs.base import HornConfig, TopologyConfig
+from repro.core.neuron_centric import (NeuronNetwork, divide_by_sum_interlayer,
+                                       paper_mnist_network,
+                                       softmax_interlayer)
+from repro.core.parallel_dropout import HornState
+from repro.data.pipeline import (MnistBatcher, SyntheticTokenPipeline,
+                                 TokenPipelineConfig)
+from repro.optim.sgd import adamw_init, adamw_update, sgdm_init, sgdm_update
+
+
+# ---------------------------------------------------------------------------
+# data pipeline: the fault-tolerance determinism contract
+# ---------------------------------------------------------------------------
+def test_token_pipeline_deterministic_by_step():
+    cfg = TokenPipelineConfig(vocab_size=1000, seq_len=32, global_batch=4)
+    p1, p2 = SyntheticTokenPipeline(cfg), SyntheticTokenPipeline(cfg)
+    for step in (0, 7, 1234):
+        b1, b2 = p1.batch_at(step), p2.batch_at(step)
+        np.testing.assert_array_equal(b1["tokens"], b2["tokens"])
+    assert not np.array_equal(p1.batch_at(0)["tokens"],
+                              p1.batch_at(1)["tokens"])
+
+
+def test_token_pipeline_host_slicing_partitions_batch():
+    cfg = TokenPipelineConfig(vocab_size=100, seq_len=8, global_batch=8,
+                              num_hosts=4, host_id=2)
+    pipe = SyntheticTokenPipeline(cfg)
+    full = pipe.batch_at(3)["tokens"]
+    mine = pipe.host_slice(3)["tokens"]
+    np.testing.assert_array_equal(mine, full[4:6])
+
+
+def test_labels_are_next_tokens():
+    cfg = TokenPipelineConfig(vocab_size=64, seq_len=16, global_batch=2)
+    b = SyntheticTokenPipeline(cfg).batch_at(0)
+    assert b["tokens"].shape == b["labels"].shape == (2, 16)
+
+
+def test_mnist_batcher_group_split():
+    x = np.arange(200, dtype=np.float32).reshape(100, 2)
+    y = np.arange(100, dtype=np.int32)
+    b = MnistBatcher(x, y, batch=20).group_batch_at(0, num_groups=4)
+    assert b["x"].shape == (4, 5, 2)
+    assert b["y"].shape == (4, 5)
+
+
+# ---------------------------------------------------------------------------
+# optimizers
+# ---------------------------------------------------------------------------
+def test_sgdm_matches_manual():
+    p = {"w": jnp.asarray([1.0, 2.0])}
+    g = {"w": jnp.asarray([0.5, -0.5])}
+    st_ = sgdm_init(p)
+    p2, st2 = sgdm_update(g, st_, p, lr=0.1, momentum=0.9)
+    np.testing.assert_allclose(np.asarray(p2["w"]), [0.95, 2.05])
+    p3, _ = sgdm_update(g, st2, p2, lr=0.1, momentum=0.9)
+    # v = 0.9*0.5 + 0.5 = 0.95 -> w = 0.95 - 0.095
+    np.testing.assert_allclose(np.asarray(p3["w"]), [0.855, 2.145], rtol=1e-6)
+
+
+def test_adamw_step_direction():
+    p = {"w": jnp.zeros(3)}
+    g = {"w": jnp.asarray([1.0, -1.0, 0.0])}
+    st_ = adamw_init(p)
+    p2, st2 = adamw_update(g, st_, p, lr=0.1)
+    out = np.asarray(p2["w"])
+    assert out[0] < 0 and out[1] > 0 and out[2] == 0
+    assert int(st2["t"]) == 1
+
+
+@given(lr=st.floats(1e-4, 1e-1), mu=st.floats(0.0, 0.99),
+       seed=st.integers(0, 1000))
+@settings(max_examples=20, deadline=None)
+def test_sgdm_descends_quadratic(lr, mu, seed):
+    """Momentum SGD reduces a convex quadratic (paper's optimizer sanity)."""
+    rng = np.random.default_rng(seed)
+    target = jnp.asarray(rng.normal(size=4), jnp.float32)
+    p = {"w": jnp.zeros(4)}
+    opt = sgdm_init(p)
+    loss = lambda p: jnp.sum((p["w"] - target) ** 2)
+    l0 = float(loss(p))
+    for _ in range(50):
+        g = jax.grad(loss)(p)
+        p, opt = sgdm_update(g, opt, p, lr=lr * (1 - mu), momentum=mu)
+    assert float(loss(p)) < l0
+
+
+# ---------------------------------------------------------------------------
+# neuron-centric engine
+# ---------------------------------------------------------------------------
+def test_interlayer_normalization():
+    """Paper's interlayer() example normalizes positive (ReLU) activations."""
+    nn = NeuronNetwork(input_units=4)
+    nn.add_layer(8, "relu", interlayer=divide_by_sum_interlayer)
+    params = nn.init(jax.random.key(3))
+    out = np.asarray(nn.apply(params, jnp.abs(
+        jax.random.normal(jax.random.key(1), (2, 4)))))
+    np.testing.assert_allclose(out.sum(-1), [1.0, 1.0], atol=1e-5)
+    assert (out >= 0).all()
+
+    nn2 = NeuronNetwork(input_units=4)
+    nn2.add_layer(4, "identity", interlayer=softmax_interlayer)
+    p2 = nn2.init(jax.random.key(0))
+    out2 = np.asarray(nn2.apply(p2, jnp.ones((2, 4))))
+    np.testing.assert_allclose(out2.sum(-1), [1.0, 1.0], atol=1e-5)
+
+
+def test_dropout_neuron_masks_only_in_training():
+    nn = paper_mnist_network(hidden=32, depth=1)
+    params = nn.init(jax.random.key(0))
+    x = jnp.ones((4, 784))
+    eval_out = nn.apply(params, x, horn=None)
+    np.testing.assert_array_equal(np.asarray(eval_out),
+                                  np.asarray(nn.apply(params, x, horn=None)))
+    horn = HornState(key=jax.random.key(1),
+                     cfg=HornConfig(enabled=True, block_size=1), num_groups=2)
+    train_out = nn.apply(params, x, horn=horn)
+    assert not np.array_equal(np.asarray(eval_out), np.asarray(train_out))
+
+
+def test_mnist_parallel_beats_chance_quickly():
+    from repro.core.collective_trainer import train_mnist
+    res = train_mnist(num_groups=4, batch_per_group=16, num_steps=200,
+                      eval_every=200, n_train=2000, hidden=64, lr=0.005)
+    assert res.final_accuracy > 0.3, res.final_accuracy
+
+
+def test_topology_validation():
+    from repro.core.topology import describe, validate
+    t = validate(TopologyConfig(kind="local_sgd", local_sgd_period=8,
+                                grad_compression="int8"))
+    assert "H=8" in describe(t) and "int8" in describe(t)
+    with pytest.raises(AssertionError):
+        validate(TopologyConfig(kind="gossip"))
