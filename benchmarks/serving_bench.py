@@ -1,0 +1,107 @@
+"""Serving benchmark: continuous-batching engine under a fixed synthetic
+load; emits ``BENCH_serving.json`` so the perf trajectory is recorded per PR.
+
+    PYTHONPATH=src python benchmarks/serving_bench.py [--arch qwen3-1.7b]
+        [--requests 32] [--out BENCH_serving.json]
+
+Metrics (virtual arrival clock at --rate req/s, wall-clock service times):
+  decode_tok_s   generated tokens / wall time of the measured phase
+  tok_per_step   mean decode-batch occupancy (continuous-batching win)
+  ttft_p50/p99   arrival -> first token (s)
+  lat_p50/p99    arrival -> completion (s)
+  peak_util      page-pool peak utilization
+
+A warmup pass (same buckets) runs first so compile time doesn't pollute the
+steady-state numbers.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import time
+
+import numpy as np
+
+
+def run(arch: str = "qwen3-1.7b", requests: int = 32, rate: float = 16.0,
+        slots: int = 8, pages: int = 512, page_size: int = 16,
+        max_prompt: int = 64, gen: int = 16, seed: int = 0):
+    import jax
+    from repro.configs.base import get_model_config, reduced
+    from repro.launch.serve import make_requests
+    from repro.models import api
+    from repro.serving import Engine, EngineConfig
+
+    cfg = reduced(get_model_config(arch))
+    params = api.model_init(jax.random.key(seed), cfg)
+    ecfg = EngineConfig(
+        num_slots=slots, num_pages=pages, page_size=page_size,
+        max_prompt_len=-(-max_prompt // page_size) * page_size,
+        max_new_tokens=gen, seed=seed, policy="on_demand")
+    rng = np.random.default_rng(seed)
+
+    def load(n):
+        return make_requests(n, cfg.vocab_size, rng, rate=rate,
+                             max_prompt=max_prompt, gen=gen)
+
+    def drive(engine, reqs):
+        """Arrivals on the same wall clock as serve.py, except that when the
+        engine fully drains the next future arrival is pulled forward —
+        measures service, not idle waiting."""
+        t0 = time.monotonic()
+        pending = list(reqs)
+        while pending or engine.sched.has_work():
+            now = time.monotonic() - t0
+            while pending and pending[0][0] <= now:
+                at, prompt, g = pending.pop(0)
+                engine.submit(prompt, g, arrival_time=at)
+            if not engine.sched.has_work() and pending:
+                at, prompt, g = pending.pop(0)
+                engine.submit(prompt, g, arrival_time=min(at, now))
+            engine.step(time.monotonic() - t0,
+                        tick_clock=lambda: time.monotonic() - t0)
+        return time.monotonic() - t0
+
+    # warmup: populate the prefill-bucket + decode compile caches
+    warm = Engine(cfg, params, ecfg)
+    drive(warm, load(max(4, slots // 2)))
+
+    engine = Engine(cfg, params, ecfg)
+    wall = drive(engine, load(requests))
+    done = engine.sched.finished
+    ttft = np.asarray([r.t_first_token - r.arrival_time for r in done])
+    lat = np.asarray([r.t_done - r.arrival_time for r in done])
+    total_new = sum(len(r.out_tokens) for r in done)
+    return {
+        "arch": arch, "requests": requests, "slots": slots,
+        "pages": pages, "page_size": page_size,
+        "wall_s": round(wall, 3),
+        "decode_tok_s": round(total_new / max(wall, 1e-9), 2),
+        "tok_per_step": round(engine.generated_tokens
+                              / max(engine.steps, 1), 2),
+        "ttft_p50_s": round(float(np.percentile(ttft, 50)), 4),
+        "ttft_p99_s": round(float(np.percentile(ttft, 99)), 4),
+        "lat_p50_s": round(float(np.percentile(lat, 50)), 4),
+        "lat_p99_s": round(float(np.percentile(lat, 99)), 4),
+        "peak_util": round(engine.peak_utilization, 4),
+    }
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen3-1.7b")
+    ap.add_argument("--requests", type=int, default=32)
+    ap.add_argument("--rate", type=float, default=16.0)
+    ap.add_argument("--slots", type=int, default=8)
+    ap.add_argument("--out", default="BENCH_serving.json")
+    args = ap.parse_args()
+    res = run(arch=args.arch, requests=args.requests, rate=args.rate,
+              slots=args.slots)
+    with open(args.out, "w") as f:
+        json.dump(res, f, indent=2)
+        f.write("\n")
+    print(json.dumps(res, indent=2))
+
+
+if __name__ == "__main__":
+    main()

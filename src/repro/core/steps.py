@@ -220,6 +220,64 @@ def make_decode_step(run: RunConfig, mesh):
                     "cache_struct": cache_struct}
 
 
+# ---------------------------------------------------------------------------
+# Paged serving steps (continuous batching — see repro.serving)
+# ---------------------------------------------------------------------------
+def make_serve_prefill_step(run: RunConfig, mesh):
+    """Batch-1 prefill for the serving engine: prompts are right-padded to a
+    bucket length, so the sampled position is ``last_index`` (prompt_len - 1),
+    not -1.  Returns step(params, batch, last_index) -> (logits, kv_cache)."""
+    cfg = run.model
+    ctx = make_ctx(cfg, mesh, run.shape)
+
+    def prefill_step(params, batch, last_index):
+        cparams = cast_tree(params, run.compute_dtype)
+        logits, cache, _ = api.prefill(cparams, batch, cfg, ctx,
+                                       last_index=last_index)
+        return logits, cache
+
+    paxes = api.model_axes(cfg)
+    p_shard = tree_shardings(paxes, ctx)
+    jitted = jax.jit(prefill_step, in_shardings=(p_shard, None, None),
+                     out_shardings=None)
+    return jitted, {"params": p_shard}
+
+
+def make_paged_decode_step(run: RunConfig, mesh, *, num_pages: int,
+                           page_size: int):
+    """Continuous-batching decode: every slot advances one token against the
+    shared page pool.  step(params, cache, tokens [B,1], positions [B],
+    block_tables [B, maxp]) -> (logits [B, V], cache).  The pool is donated
+    so the per-step write is in-place."""
+    cfg = run.model
+    ctx = make_ctx(cfg, mesh, run.shape)
+
+    def decode_step(params, cache, tokens, positions, block_tables):
+        cparams = cast_tree(params, run.compute_dtype)
+        return api.paged_decode_step(cparams, cache, tokens, positions,
+                                     block_tables, cfg, ctx)
+
+    paxes = api.model_axes(cfg)
+    p_shard = tree_shardings(paxes, ctx)
+    cache_struct = jax.eval_shape(
+        lambda: T.init_paged_cache(cfg, num_pages, page_size))
+    jitted = jax.jit(decode_step,
+                     in_shardings=(p_shard, None, None, None, None),
+                     out_shardings=None, donate_argnums=(1,))
+    return jitted, {"params": p_shard, "cache_struct": cache_struct}
+
+
+def make_prefill_write_step(run: RunConfig, page_size: int):
+    """jitted (paged_cache, prefill_kv, page_ids) -> paged_cache scatter
+    (donated pool: the prefill KV lands in-place)."""
+
+    def write(paged_cache, prefill_cache, page_ids):
+        return T.write_prefill_to_pages(paged_cache, prefill_cache, page_ids,
+                                        page_size)
+
+    return jax.jit(write, donate_argnums=(0,))
+
+
 def decode_input_specs(run: RunConfig):
     """(tokens, pos, [encoder_out]) ShapeDtypeStructs for decode cells."""
     cfg, shape = run.model, run.shape

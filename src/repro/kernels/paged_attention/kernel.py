@@ -1,0 +1,120 @@
+"""Paged-attention decode Pallas kernel (TPU): block-table K/V gather in VMEM.
+
+One query token per sequence attends over that sequence's KV pages, addressed
+through a per-sequence block table (the vLLM technique: KV lives in a shared
+pool of fixed-size pages, so sequences of wildly different lengths pack the
+HBM densely and join/leave a decode batch without reshuffling).
+
+Grid: (B, KH, maxp) — pages innermost (sequential).  The block table and the
+per-sequence lengths ride in as *scalar-prefetch* operands
+(``pltpu.PrefetchScalarGridSpec``) so the K/V ``index_map`` can resolve
+``block_tables[b, p]`` before the DMA is issued: the gather costs zero extra
+HBM traffic versus a contiguous cache.  Running (max, sum, acc) live in VMEM
+scratch across page iterations (online softmax, as in flash_attention).
+
+GQA: the grid iterates kv heads; each step processes the whole [G, D] group
+of query heads that share the kv head — no materialized K/V repeat.  Pages
+past ``ceil(len / psize)`` are skipped via ``pl.when`` (no DMA is wasted on
+them being masked; they still occupy grid steps, which is the price of a
+static grid).  Sequences with ``length == 0`` (empty decode slots) emit
+zeros.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+f32 = jnp.float32
+NEG_INF = -1e30
+
+
+def _kernel(bt_ref, len_ref, q_ref, k_ref, v_ref, o_ref,
+            acc_ref, m_ref, l_ref, *, scale: float, window: Optional[int],
+            softcap: Optional[float], psize: int, n_pages: int):
+    b, p = pl.program_id(0), pl.program_id(2)
+
+    @pl.when(p == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    length = len_ref[b]
+    live = p * psize < length
+
+    @pl.when(live)
+    def _page():
+        q = q_ref[0, 0].astype(f32)                     # [G, D]
+        k = k_ref[0, :, 0].astype(f32)                  # [psize, D]
+        v = v_ref[0, :, 0].astype(f32)
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=f32) * scale
+        if softcap:
+            s = jnp.tanh(s / softcap) * softcap
+        kpos = p * psize + jax.lax.broadcasted_iota(
+            jnp.int32, s.shape, 1)                      # [G, psize]
+        mask = jnp.where(kpos >= length, NEG_INF, 0.0)
+        if window is not None:
+            mask = jnp.where(kpos <= length - 1 - window, NEG_INF, mask)
+        s = s + mask
+        m_prev = m_ref[...]
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1, keepdims=True))
+        prob = jnp.exp(s - m_new)
+        corr = jnp.exp(m_prev - m_new)
+        l_ref[...] = l_ref[...] * corr + jnp.sum(prob, -1, keepdims=True)
+        acc_ref[...] = acc_ref[...] * corr + jax.lax.dot_general(
+            prob, v, (((1,), (0,)), ((), ())), preferred_element_type=f32)
+        m_ref[...] = m_new
+
+    @pl.when(p == n_pages - 1)
+    def _emit():
+        o_ref[0, 0] = (acc_ref[...]
+                       / jnp.maximum(l_ref[...], 1e-30)).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "scale", "window", "softcap", "interpret"))
+def paged_attention(q, k_pages, v_pages, block_tables, lengths, *,
+                    scale: float, window: Optional[int] = None,
+                    softcap: Optional[float] = None,
+                    interpret: bool = False):
+    """q: [B, H, D]; k/v_pages: [P, psize, KH, D]; block_tables: [B, maxp];
+    lengths: [B] -> [B, H, D]."""
+    B, H, D = q.shape
+    psize, KH = k_pages.shape[1], k_pages.shape[2]
+    maxp = block_tables.shape[1]
+    G = H // KH
+    qg = q.reshape(B, KH, G, D)
+
+    kernel = functools.partial(
+        _kernel, scale=scale, window=window, softcap=softcap,
+        psize=psize, n_pages=maxp)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(B, KH, maxp),
+        in_specs=[
+            pl.BlockSpec((1, 1, G, D), lambda b, h, p, bt, ln: (b, h, 0, 0)),
+            pl.BlockSpec((1, psize, 1, D),
+                         lambda b, h, p, bt, ln: (bt[b, p], 0, h, 0)),
+            pl.BlockSpec((1, psize, 1, D),
+                         lambda b, h, p, bt, ln: (bt[b, p], 0, h, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, G, D),
+                               lambda b, h, p, bt, ln: (b, h, 0, 0)),
+        scratch_shapes=[pltpu.VMEM((G, D), f32),
+                        pltpu.VMEM((G, 1), f32),
+                        pltpu.VMEM((G, 1), f32)],
+    )
+    out = pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((B, KH, G, D), q.dtype),
+        interpret=interpret,
+    )(block_tables.astype(jnp.int32), lengths.astype(jnp.int32),
+      qg, k_pages, v_pages)
+    return out.reshape(B, H, D)

@@ -1,0 +1,37 @@
+"""Backend-switched paged attention + the paged KV-pool scatter update."""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax.numpy as jnp
+
+from repro.kernels.backend import get_backend
+from repro.kernels.paged_attention.kernel import paged_attention as _pallas
+from repro.kernels.paged_attention.ref import paged_attention_ref
+
+
+def paged_attention(q, k_pages, v_pages, block_tables, lengths, *,
+                    scale: float, window: Optional[int] = None,
+                    softcap: Optional[float] = None, **kw):
+    """Dispatch [B, H, D] paged decode attention to pallas / interpret / ref."""
+    backend = kw.pop("backend", None) or get_backend()
+    if backend == "ref":
+        return paged_attention_ref(q, k_pages, v_pages, block_tables, lengths,
+                                   scale=scale, window=window, softcap=softcap)
+    return _pallas(q, k_pages, v_pages, block_tables, lengths, scale=scale,
+                   window=window, softcap=softcap,
+                   interpret=backend == "interpret", **kw)
+
+
+def paged_pool_update(pool, new, block_tables, positions):
+    """Write one token per sequence into its page at ``positions``.
+
+    pool: [P, psize, KH, D]; new: [B, KH, D]; block_tables: [B, maxp];
+    positions: [B] absolute write positions.  Empty slots must point at the
+    reserved null page 0 (their garbage writes land there harmlessly).
+    """
+    psize = pool.shape[1]
+    page = jnp.take_along_axis(
+        block_tables, (positions // psize)[:, None], axis=1)[:, 0]
+    slot = positions % psize
+    return pool.at[page, slot].set(new.astype(pool.dtype))

@@ -1,0 +1,56 @@
+"""Pure-jnp oracle for the paged-attention decode kernel.
+
+Gathers the K/V pages named by each sequence's block table into a contiguous
+[B, maxp * psize, KH, D] view and runs a masked single-token softmax — the
+same math the Pallas kernel performs page-by-page in VMEM.  Used on CPU
+(where Pallas cannot lower) and as the allclose reference in tests.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+f32 = jnp.float32
+NEG_INF = -1e30
+
+
+def paged_attention_ref(q, k_pages, v_pages, block_tables, lengths, *,
+                        scale: float, window: Optional[int] = None,
+                        softcap: Optional[float] = None):
+    """Single-token decode attention over a block-paged KV pool.
+
+    q:            [B, H, D]   one query token per sequence
+    k/v_pages:    [P, psize, KH, D]  shared page pool (page 0 = null page)
+    block_tables: [B, maxp] int32    page ids per sequence, 0-padded
+    lengths:      [B] int32          valid KV tokens per sequence (incl. the
+                                     token just written at position len-1)
+    Returns [B, H, D].
+    """
+    B, H, D = q.shape
+    psize, KH = k_pages.shape[1], k_pages.shape[2]
+    maxp = block_tables.shape[1]
+    G = H // KH
+    S = maxp * psize
+
+    k = k_pages[block_tables].reshape(B, S, KH, D).astype(f32)
+    v = v_pages[block_tables].reshape(B, S, KH, D).astype(f32)
+    qg = q.reshape(B, KH, G, D).astype(f32)
+
+    s = jnp.einsum("bhgd,bshd->bhgs", qg, k) * scale
+    if softcap:
+        s = jnp.tanh(s / softcap) * softcap
+    kp = jnp.arange(S)[None, :]
+    mask = jnp.where(kp >= lengths[:, None], NEG_INF, 0.0)
+    if window is not None:
+        qpos = (lengths - 1)[:, None]
+        mask = jnp.where(kp <= qpos - window, NEG_INF, mask)
+    s = s + mask[:, None, None]
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bhgs,bshd->bhgd", p, v)
+    # empty slots (length 0): softmax's shift-invariance would turn the
+    # all-masked row into a uniform average of garbage — emit zeros like
+    # the kernel (whose l accumulator stays 0) instead
+    out = jnp.where(lengths[:, None, None, None] > 0, out, 0.0)
+    return out.reshape(B, H, D).astype(q.dtype)

@@ -19,6 +19,18 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 from repro.configs.base import ModelConfig
 
 
+def shard_map(fn, *, mesh, in_specs, out_specs, check_vma: bool = True):
+    """Version-compat shard_map: newer jax exposes ``jax.shard_map`` with
+    ``check_vma``; 0.4.x has ``jax.experimental.shard_map.shard_map`` with
+    ``check_rep``.  Model code calls this wrapper only."""
+    if hasattr(jax, "shard_map"):
+        return jax.shard_map(fn, mesh=mesh, in_specs=in_specs,
+                             out_specs=out_specs, check_vma=check_vma)
+    from jax.experimental.shard_map import shard_map as _sm
+    return _sm(fn, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+               check_rep=check_vma)
+
+
 def make_production_mesh(*, multi_pod: bool = False):
     """The target deployment mesh (function, so importing never inits jax)."""
     shape = (2, 16, 16) if multi_pod else (16, 16)

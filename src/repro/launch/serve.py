@@ -1,37 +1,73 @@
-"""Serving launcher: batched prefill + decode loop.
+"""Serving launcher: continuous-batching engine under a synthetic load.
 
     PYTHONPATH=src python -m repro.launch.serve --arch qwen3-1.7b \
-        --batch 4 --prompt-len 64 --gen 16
+        --stream poisson --requests 32
 
-Runs the real production serving path (pjit prefill -> pjit one-token decode
-with donated sharded KV cache) on reduced configs in this container; the
-full-config versions are proven by the decode cells of the dry-run.
+Drives ``repro.serving.Engine`` (paged KV cache + FCFS continuous batching)
+from a synthetic request stream: Poisson arrivals with mixed prompt lengths,
+each request joining the decode batch the moment a slot and pages free up
+and leaving on completion.  Reports decode tok/s, time-to-first-token, and
+p50/p99 end-to-end latency.
+
+``--stream batch`` submits everything at t=0 (a closed-loop throughput
+measurement); ``--stream poisson`` is the open-loop latency measurement.
+Exits with status 2 on page-pool OOM (only reachable with
+``--policy on_demand`` and an undersized ``--pages``).
 """
 from __future__ import annotations
 
 import argparse
+import sys
 import time
 
-import jax
-import jax.numpy as jnp
 import numpy as np
 
-from repro.configs.base import (HornConfig, RunConfig, ShapeConfig,
-                                get_model_config, list_archs, reduced)
-from repro.core import steps as S
-from repro.launch.mesh import make_test_mesh
+from repro.configs.base import get_model_config, list_archs, reduced
 from repro.models import api
-from repro.models import transformer as T
+from repro.serving import Engine, EngineConfig, EngineOOM
+
+
+def make_requests(n: int, vocab_size: int, rng: np.random.Generator, *,
+                  stream: str = "poisson", rate: float = 16.0,
+                  max_prompt: int = 64, gen: int = 16):
+    """(arrival_time, prompt, max_new) triples: Poisson arrivals (or all at
+    t=0 for ``stream="batch"``), mixed prompt lengths (log-uniform between 4
+    and ``max_prompt``), per-request max_new drawn in [gen/2, gen].  Shared
+    by the launcher and benchmarks/serving_bench.py so their loads stay
+    comparable."""
+    out, t = [], 0.0
+    for _ in range(n):
+        if stream == "poisson":
+            t += rng.exponential(1.0 / rate)
+        lo, hi = np.log(4), np.log(max_prompt)
+        plen = int(np.exp(rng.uniform(lo, hi)))
+        prompt = rng.integers(0, vocab_size, (max(1, plen),)).astype(np.int32)
+        g = int(rng.integers(max(1, gen // 2), gen + 1))
+        out.append((t, prompt, g))
+    return out
+
+
+def percentile(xs, p):
+    return float(np.percentile(np.asarray(xs), p)) if xs else float("nan")
 
 
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", required=True, choices=list_archs())
-    ap.add_argument("--batch", type=int, default=4)
-    ap.add_argument("--prompt-len", type=int, default=64)
-    ap.add_argument("--gen", type=int, default=16)
-    ap.add_argument("--full-config", action="store_true")
+    ap.add_argument("--stream", choices=["poisson", "batch"], default="poisson")
+    ap.add_argument("--requests", type=int, default=32)
+    ap.add_argument("--rate", type=float, default=16.0,
+                    help="poisson arrival rate (requests/s)")
+    ap.add_argument("--slots", type=int, default=8)
+    ap.add_argument("--pages", type=int, default=512)
+    ap.add_argument("--page-size", type=int, default=16)
+    ap.add_argument("--max-prompt", type=int, default=64)
+    ap.add_argument("--gen", type=int, default=16,
+                    help="max new tokens (per-request draw in [gen/2, gen])")
+    ap.add_argument("--policy", choices=["reserve", "on_demand"],
+                    default="on_demand")
     ap.add_argument("--temperature", type=float, default=0.0)
+    ap.add_argument("--full-config", action="store_true")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
 
@@ -40,72 +76,69 @@ def main() -> None:
         cfg = reduced(cfg)
     if cfg.family == "mlp":
         raise SystemExit("horn-mnist is a classifier; use launch.train")
-    max_len = args.prompt_len + args.gen
-    mesh = make_test_mesh()
-    run = RunConfig(model=cfg,
-                    shape=ShapeConfig("serve", "decode", max_len, args.batch),
-                    horn=HornConfig(enabled=False))
 
+    ecfg = EngineConfig(
+        num_slots=args.slots, num_pages=args.pages, page_size=args.page_size,
+        max_prompt_len=-(-args.max_prompt // args.page_size) * args.page_size,
+        max_new_tokens=args.gen, temperature=args.temperature,
+        seed=args.seed, policy=args.policy)
+    import jax
     params = api.model_init(jax.random.key(args.seed), cfg)
+    try:
+        engine = Engine(cfg, params, ecfg)
+    except ValueError as e:
+        raise SystemExit(f"{args.arch}: {e}")
+
     rng = np.random.default_rng(args.seed)
-    text_len = args.prompt_len - (cfg.num_patches or 0)
-    batch = {"tokens": jnp.asarray(
-        rng.integers(0, cfg.vocab_size, (args.batch, max(1, text_len))),
-        jnp.int32)}
-    if cfg.is_encoder_decoder:
-        batch["frames"] = jnp.zeros((args.batch, cfg.encoder_seq, cfg.d_model),
-                                    jnp.bfloat16)
-    if cfg.num_patches:
-        batch["patch_embeds"] = jnp.zeros(
-            (args.batch, cfg.num_patches, cfg.d_model), jnp.bfloat16)
+    pending = make_requests(args.requests, cfg.vocab_size, rng,
+                            stream=args.stream, rate=args.rate,
+                            max_prompt=args.max_prompt, gen=args.gen)
+    print(f"serving {args.requests} requests ({args.stream} stream, "
+          f"{args.slots} slots, {args.pages}x{args.page_size}-token pages, "
+          f"policy={args.policy})")
 
-    pre, _ = S.make_prefill_step(run, mesh)
-    t0 = time.time()
-    logits, prefill_cache, enc = pre(params, batch)
-    logits.block_until_ready()
-    print(f"prefill [{args.batch} x {args.prompt_len}]: "
-          f"{time.time() - t0:.2f}s")
+    t0 = time.monotonic()
+    max_running = 0
+    try:
+        while pending or engine.sched.has_work():
+            now = time.monotonic() - t0
+            while pending and pending[0][0] <= now:
+                at, prompt, gen = pending.pop(0)
+                try:
+                    engine.submit(prompt, gen, arrival_time=at)
+                except ValueError as e:
+                    print(f"FATAL: infeasible request — {e}", file=sys.stderr)
+                    sys.exit(2)
+            if not engine.sched.has_work():
+                time.sleep(min(0.005, max(0.0, pending[0][0] - now)))
+                continue
+            for req in engine.step(time.monotonic() - t0,
+                                   tick_clock=lambda: time.monotonic() - t0):
+                print(f"  req {req.id:3d} done: prompt {req.prompt_len:3d} "
+                      f"+{len(req.out_tokens):3d} tok  "
+                      f"ttft {req.t_first_token - req.arrival_time:6.3f}s  "
+                      f"latency {req.t_done - req.arrival_time:6.3f}s")
+            max_running = max(max_running, len(engine.sched.running))
+    except EngineOOM as e:
+        print(f"FATAL: page pool OOM — {e}", file=sys.stderr)
+        sys.exit(2)
+    wall = time.monotonic() - t0
 
-    # right-pad the prefill cache into the decode buffer
-    dec, info = S.make_decode_step(run, mesh)
-    cache = jax.tree.map(lambda s: jnp.zeros(s.shape, s.dtype),
-                         info["cache_struct"])
-
-    def splice(buf, pre_arr):
-        if (buf.ndim == pre_arr.ndim and buf.ndim >= 4
-                and pre_arr.shape[-2:] == buf.shape[-2:]):
-            seq_ax = buf.ndim - 3
-            if pre_arr.shape[seq_ax] <= buf.shape[seq_ax]:
-                pad = [(0, 0)] * buf.ndim
-                pad[seq_ax] = (0, buf.shape[seq_ax] - pre_arr.shape[seq_ax])
-                return jnp.pad(pre_arr, pad).astype(buf.dtype)
-        return pre_arr.astype(buf.dtype)   # SSM states / conv tails: as-is
-
-    cache = jax.tree.map(splice, cache, prefill_cache)
-
-    def sample(lg, key):
-        if args.temperature <= 0:
-            return jnp.argmax(lg, -1)
-        return jax.random.categorical(key, lg / args.temperature)
-
-    token = sample(logits, jax.random.key(1))[:, None].astype(jnp.int32)
-    out_tokens = [token]
-    t0 = time.time()
-    for i in range(args.gen - 1):
-        pos = jnp.asarray(args.prompt_len + i, jnp.int32)
-        dargs = (params, cache, token, pos)
-        if cfg.is_encoder_decoder:
-            dargs = dargs + (enc.astype(jnp.bfloat16),)
-        lg, cache = dec(*dargs)
-        token = sample(lg, jax.random.fold_in(jax.random.key(1), i)
-                       )[:, None].astype(jnp.int32)
-        out_tokens.append(token)
-    jax.block_until_ready(token)
-    dt = time.time() - t0
-    gen = np.concatenate([np.asarray(t) for t in out_tokens], axis=1)
-    print(f"decode: {args.gen - 1} steps in {dt:.2f}s "
-          f"({args.batch * (args.gen - 1) / max(dt, 1e-9):.1f} tok/s)")
-    print("generated token ids (first row):", gen[0][:16].tolist())
+    done = engine.sched.finished
+    assert len(done) == args.requests, (len(done), args.requests)
+    ttft = [r.t_first_token - r.arrival_time for r in done]
+    lat = [r.t_done - r.arrival_time for r in done]
+    total_new = sum(len(r.out_tokens) for r in done)
+    print(f"\n{len(done)} requests in {wall:.2f}s  "
+          f"(max {max_running}/{args.slots} slots concurrent)")
+    print(f"throughput: {total_new / max(wall, 1e-9):.1f} tok/s "
+          f"({engine.steps} decode steps, "
+          f"{engine.generated_tokens / max(engine.steps, 1):.1f} tok/step)")
+    print(f"TTFT    p50 {percentile(ttft, 50):.3f}s  "
+          f"p99 {percentile(ttft, 99):.3f}s")
+    print(f"latency p50 {percentile(lat, 50):.3f}s  "
+          f"p99 {percentile(lat, 99):.3f}s")
+    print(f"page-pool peak utilization: {engine.peak_utilization:.0%}")
 
 
 if __name__ == "__main__":

@@ -44,9 +44,11 @@ def _decoder_params(params, cfg):
 def forward_hidden(params, batch: Dict[str, Any], cfg: ModelConfig,
                    ctx: ShardingCtx, *, horn=None, mode: str = "train",
                    remat: bool = True, cache=None, cache_index=None,
-                   encoder_out=None):
+                   encoder_out=None, block_tables=None):
     """Returns (hidden, new_cache, aux, encoder_out)."""
     if cfg.is_encoder_decoder:
+        if block_tables is not None:
+            raise ValueError("paged decode is decoder-LM-only")
         hidden, new_cache, aux, enc = ED.encdec_forward(
             params, batch.get("frames"), batch["tokens"], cfg, ctx, horn=horn,
             cache=cache, cache_index=cache_index, mode=mode, remat=remat,
@@ -55,7 +57,8 @@ def forward_hidden(params, batch: Dict[str, Any], cfg: ModelConfig,
     hidden, new_cache, aux = T.lm_forward(
         params, batch["tokens"], cfg, ctx, horn=horn,
         patch_embeds=batch.get("patch_embeds"), cache=cache,
-        cache_index=cache_index, mode=mode, remat=remat)
+        cache_index=cache_index, mode=mode, remat=remat,
+        block_tables=block_tables)
     return hidden, new_cache, aux, None
 
 
@@ -77,13 +80,40 @@ def model_loss(params, batch, cfg: ModelConfig, ctx: ShardingCtx, *,
     return loss, metrics
 
 
-def prefill(params, batch, cfg: ModelConfig, ctx: ShardingCtx):
-    """Full-sequence forward for serving; returns last-position logits + cache."""
+def prefill(params, batch, cfg: ModelConfig, ctx: ShardingCtx, *,
+            last_index=None):
+    """Full-sequence forward for serving; returns last-position logits + cache.
+
+    ``last_index`` ([B] int32, optional) selects the position whose logits
+    are returned — needed when prompts are right-padded to a bucket length
+    (the serving engine), where position -1 is a pad token.
+    """
     hidden, cache, _, enc = forward_hidden(params, batch, cfg, ctx,
                                            mode="prefill", remat=False)
+    if last_index is None:
+        h_last = hidden[:, -1:]
+    else:
+        h_last = jnp.take_along_axis(
+            hidden, last_index[:, None, None].astype(jnp.int32), axis=1)
     dec_params = _decoder_params(params, cfg)
-    logits = T.lm_logits(dec_params, hidden[:, -1:], cfg, ctx)
+    logits = T.lm_logits(dec_params, h_last, cfg, ctx)
     return logits[:, 0], cache, enc
+
+
+def paged_decode_step(params, cache, tokens, positions, block_tables,
+                      cfg: ModelConfig, ctx: ShardingCtx):
+    """One continuous-batching decode step over paged KV pools.
+
+    tokens: [B, 1]; positions: [B] per-slot write positions; block_tables:
+    [B, maxp] page ids (empty slots: all-zero rows -> null page).
+    Returns (logits [B, vocab], new_cache).
+    """
+    hidden, new_cache, _, _ = forward_hidden(
+        params, {"tokens": tokens}, cfg, ctx, mode="decode", remat=False,
+        cache=cache, cache_index=positions, block_tables=block_tables)
+    dec_params = _decoder_params(params, cfg)
+    logits = T.lm_logits(dec_params, hidden, cfg, ctx)
+    return logits[:, 0], new_cache
 
 
 def decode_step(params, cache, tokens, cache_index, cfg: ModelConfig,

@@ -165,9 +165,10 @@ def cache_update(buf, new, pos, ctx: ShardingCtx):
             b, n.astype(b.dtype), lp, axis=1)
         return jnp.where(in_range, updated, b)
 
-    fn = jax.shard_map(upd, mesh=ctx.mesh,
-                       in_specs=(buf_spec, new_spec, P()),
-                       out_specs=buf_spec, check_vma=False)
+    from repro.launch.mesh import shard_map
+    fn = shard_map(upd, mesh=ctx.mesh,
+                   in_specs=(buf_spec, new_spec, P()),
+                   out_specs=buf_spec, check_vma=False)
     return fn(buf, new, jnp.asarray(pos, jnp.int32))
 
 
@@ -224,7 +225,7 @@ def _project_qkv(params, x, kv_x, cfg: ModelConfig, positions, kv_positions,
 def attn_apply(params, x, cfg: ModelConfig, ctx: ShardingCtx, *,
                kind: str = "attn", positions=None, cache=None, cache_index=None,
                kv_x=None, cross: bool = False, head_mask=None,
-               causal: bool = True):
+               causal: bool = True, block_tables=None):
     """Attention sublayer.
 
     Modes:
@@ -232,6 +233,10 @@ def attn_apply(params, x, cfg: ModelConfig, ctx: ShardingCtx, *,
         new_kv=(k, v) so prefill can build a cache.
       - decode: ``cache=(k_buf, v_buf)`` [B, S_max, KH, D] and ``cache_index``
         scalar -> one-token update, returns (out, updated cache).
+      - paged decode: ``block_tables`` [B, maxp] given, ``cache`` is a
+        (k_pages, v_pages) [P, psize, KH, D] pool pair and ``cache_index`` is
+        a *per-sequence* [B] position vector (continuous batching: every slot
+        sits at its own depth).  One-token pool write + paged attention.
       - cross-attention: ``kv_x`` given, no cache/rope on kv side.
     """
     B, Sq, _ = x.shape
@@ -272,6 +277,23 @@ def attn_apply(params, x, cfg: ModelConfig, ctx: ShardingCtx, *,
                 window=window, softcap=cfg.attn_logit_softcap,
                 q_positions=positions, k_positions=kv_positions)
         new_kv = (k, v)
+    elif block_tables is not None:
+        # paged decode: per-sequence positions, block-table-addressed pool
+        from repro.kernels.paged_attention.ops import (paged_attention,
+                                                       paged_pool_update)
+        k_pages, v_pages = cache
+        q, k_new, v_new = _project_qkv(
+            params, x, kv_src, cfg, positions, positions,
+            use_rope=use_rope, rope_theta=theta)
+        k_pages = paged_pool_update(k_pages, k_new[:, 0], block_tables,
+                                    cache_index)
+        v_pages = paged_pool_update(v_pages, v_new[:, 0], block_tables,
+                                    cache_index)
+        out = paged_attention(
+            q[:, 0], k_pages, v_pages, block_tables, cache_index + 1,
+            scale=scale, window=window,
+            softcap=cfg.attn_logit_softcap)[:, None]
+        new_kv = (k_pages, v_pages)
     else:
         # single-token decode against a preallocated cache
         k_buf, v_buf = cache

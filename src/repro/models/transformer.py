@@ -89,7 +89,8 @@ def lm_axes(cfg: ModelConfig, *, cross: bool = False):
 # ---------------------------------------------------------------------------
 def _block_apply(bp, x, cfg: ModelConfig, ctx: ShardingCtx, *, kind: str,
                  is_moe: bool, layer_idx, horn, positions, cache,
-                 cache_index, encoder_out=None, causal: bool = True):
+                 cache_index, encoder_out=None, causal: bool = True,
+                 block_tables=None):
     """Returns (x, new_mix_cache, aux)."""
     B = x.shape[0]
     aux: Dict[str, Any] = {}
@@ -98,7 +99,8 @@ def _block_apply(bp, x, cfg: ModelConfig, ctx: ShardingCtx, *, kind: str,
         hm = pdrop.head_mask(horn, layer_idx, B, cfg.num_heads)
         out, new_mix_cache = attn_apply(
             bp["attn"], h, cfg, ctx, kind=kind, positions=positions,
-            cache=cache, cache_index=cache_index, head_mask=hm, causal=causal)
+            cache=cache, cache_index=cache_index, head_mask=hm, causal=causal,
+            block_tables=block_tables)
     else:
         d_in = ssm_dims(cfg)[0]
         cm = pdrop.unit_mask(horn, layer_idx, B, d_in, salt=3)
@@ -168,6 +170,58 @@ def init_cache(cfg: ModelConfig, batch: int, max_len: int, dtype=jnp.bfloat16):
     return cache
 
 
+def init_paged_cache(cfg: ModelConfig, num_pages: int, page_size: int,
+                     dtype=jnp.bfloat16):
+    """Block-paged decode caches: every attention layer gets a pool of
+    ``num_pages`` fixed-size pages [P, psize, KH, D] addressed through a
+    shared per-sequence block table (page ids are layer-agnostic: page j of
+    layer 0 and page j of layer 7 belong to the same sequence).  Page 0 is
+    reserved as the null page for empty decode slots.  Structured to match
+    the superblock scan, like ``init_cache``."""
+    kv, hd = cfg.num_kv_heads, cfg.head_dim
+
+    def mix_cache(kind):
+        if kind not in (ATTN, LOCAL):
+            raise ValueError(
+                f"paged KV cache supports attention mixers only, got {kind!r} "
+                "(SSM states are slot-resident, not paged — see ROADMAP)")
+        return (jnp.zeros((num_pages, page_size, kv, hd), dtype),
+                jnp.zeros((num_pages, page_size, kv, hd), dtype))
+
+    R = cfg.pattern_repeats
+    cache: Dict[str, Any] = {}
+    if R:
+        sb = {f"l{i}": mix_cache(k) for i, k in enumerate(cfg.layer_pattern)}
+        cache["blocks"] = jax.tree.map(
+            lambda x: jnp.broadcast_to(x[None], (R,) + x.shape), sb)
+    if cfg.pattern_remainder:
+        cache["rem"] = {f"r{i}": mix_cache(cfg.layer_pattern[i])
+                        for i in range(cfg.pattern_remainder)}
+    return cache
+
+
+def write_prefill_to_pages(paged_cache, prefill_cache, page_ids,
+                           page_size: int):
+    """Scatter a batch-1 prefill KV cache into the page pool.
+
+    prefill KV leaves are [..., 1, S, KH, D] with S a multiple of
+    ``page_size``; ``page_ids`` is [S // page_size] int32 with entries past
+    the sequence's allocated pages set to 0 (pad-token KV lands in the null
+    page and is never read — attention masks by true length)."""
+
+    def scatter(pool, pre):
+        pre = jnp.squeeze(pre, axis=-4)                # drop batch-1 axis
+        S = pre.shape[-3]
+        npg = S // page_size
+        tiles = pre.reshape(pre.shape[:-3] + (npg, page_size) + pre.shape[-2:])
+        tiles = tiles.astype(pool.dtype)
+        if pool.ndim == 5:                             # stacked superblock
+            return pool.at[:, page_ids].set(tiles)
+        return pool.at[page_ids].set(tiles)
+
+    return jax.tree.map(scatter, paged_cache, prefill_cache)
+
+
 def cache_logical_axes(cfg: ModelConfig, cache):
     """Logical-axes pytree matching ``init_cache`` output (for shardings)."""
     if cfg.ssm_state:
@@ -198,11 +252,15 @@ def cache_logical_axes(cfg: ModelConfig, cache):
 def lm_forward(params, tokens, cfg: ModelConfig, ctx: ShardingCtx, *,
                horn=None, patch_embeds=None, cache=None, cache_index=None,
                mode: str = "train", remat: bool = True, encoder_out=None,
-               causal: bool = True):
+               causal: bool = True, block_tables=None):
     """Returns (hidden [B,S,d], new_cache or None, aux dict).
 
     mode: "train" (no cache out, remat on) | "prefill" (cache out = full-seq
     KV / final SSM states) | "decode" (cache required, S must be 1).
+
+    Paged decode: pass ``block_tables`` [B, maxp] and a per-sequence [B]
+    ``cache_index`` (each slot at its own depth); ``cache`` must come from
+    ``init_paged_cache``.
     """
     decode = mode == "decode"
     x = L.embed_apply(params["embed"], tokens, cfg, ctx)
@@ -221,8 +279,11 @@ def lm_forward(params, tokens, cfg: ModelConfig, ctx: ShardingCtx, *,
     if im is not None:
         x = x * im.astype(x.dtype)
 
-    positions = (jnp.full((B, 1), cache_index) if decode
-                 else jnp.arange(Stot)[None, :])
+    if decode:
+        ci = jnp.asarray(cache_index)
+        positions = ci[:, None] if ci.ndim == 1 else jnp.full((B, 1), ci)
+    else:
+        positions = jnp.arange(Stot)[None, :]
     pat = cfg.layer_pattern
     R = cfg.pattern_repeats
     new_cache: Dict[str, Any] = {}
@@ -238,7 +299,7 @@ def lm_forward(params, tokens, cfg: ModelConfig, ctx: ShardingCtx, *,
                 positions=positions,
                 cache=None if sb_cache is None else sb_cache[f"l{i}"],
                 cache_index=cache_index, encoder_out=encoder_out,
-                causal=causal)
+                causal=causal, block_tables=block_tables)
             caches_out[f"l{i}"] = mix_c
             aux_acc = jax.tree.map(jnp.add, aux_acc, _pad_aux(aux))
         return x, aux_acc, caches_out
@@ -274,7 +335,7 @@ def lm_forward(params, tokens, cfg: ModelConfig, ctx: ShardingCtx, *,
                 positions=positions,
                 cache=None if not decode else cache["rem"][f"r{i}"],
                 cache_index=cache_index, encoder_out=encoder_out,
-                causal=causal)
+                causal=causal, block_tables=block_tables)
             rem_cache[f"r{i}"] = mix_c
             aux0 = jax.tree.map(jnp.add, aux0, _pad_aux(aux))
         if mode != "train":

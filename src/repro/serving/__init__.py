@@ -1,0 +1,21 @@
+"""Continuous-batching serving engine (paged KV cache + FCFS scheduler).
+
+Layering (each importable on its own):
+
+  kv_cache.py   host-side page-pool bookkeeping: free list, per-sequence
+                page tables, utilization accounting.  Pure Python — the
+                device-side pools live in the model cache pytree.
+  scheduler.py  FCFS admission queue + decode-slot lifecycle (join on
+                admission, evict on completion / max length).
+  engine.py     ties them to the model: bucketed batch-1 prefill scattered
+                into pages, one fused paged-decode step per tick, per-request
+                sampling keys, latency/TTFT accounting.
+
+The device kernel behind it is ``repro.kernels.paged_attention``.
+"""
+from repro.serving.engine import Engine, EngineConfig, EngineOOM
+from repro.serving.kv_cache import PagePool, PagePoolOOM
+from repro.serving.scheduler import FCFSScheduler, Request
+
+__all__ = ["Engine", "EngineConfig", "EngineOOM", "PagePool", "PagePoolOOM",
+           "FCFSScheduler", "Request"]

@@ -1,0 +1,229 @@
+"""Continuous-batching inference engine over the paged KV cache.
+
+One engine tick = (admit new requests -> bucketed batch-1 prefill scattered
+into pages) + (one fused paged-decode step advancing every running slot one
+token).  Requests of arbitrary prompt length join whenever a slot and pages
+are free and leave the moment they finish — the decode batch never drains.
+
+Positions are per-slot: slot b's write position is ``context_len - 1`` (the
+last sampled token whose KV hasn't been written yet), so a fresh 7-token
+request and a 900-token-deep one advance in the same device step.  Sampling
+keys are derived per (request, step) via fold_in — no key is ever reused
+across requests or steps (the bug the old static-batch server had).
+
+Prompt lengths are bucketed to page-aligned powers of two so the prefill
+step compiles once per bucket, not once per length.
+"""
+from __future__ import annotations
+
+import math
+import time
+from dataclasses import dataclass
+from typing import List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import (ATTN, LOCAL, HornConfig, ModelConfig,
+                                RunConfig, ShapeConfig)
+from repro.core import steps as S
+from repro.models import transformer as T
+from repro.serving.kv_cache import PagePool, PagePoolOOM
+from repro.serving.scheduler import FCFSScheduler, Request
+
+
+class EngineOOM(RuntimeError):
+    """Page pool exhausted mid-decode (on_demand policy).  The engine state
+    is left consistent; callers should surface this and exit cleanly."""
+
+
+@dataclass(frozen=True)
+class EngineConfig:
+    num_slots: int = 8               # decode batch width
+    num_pages: int = 256             # pool size (page 0 is the null page)
+    page_size: int = 16              # tokens per KV page
+    max_prompt_len: int = 256
+    max_new_tokens: int = 64         # default + hard cap per request
+    temperature: float = 0.0
+    seed: int = 0
+    policy: str = "reserve"          # "reserve" | "on_demand" (see scheduler)
+    eos_id: Optional[int] = None
+    kv_dtype: str = "bfloat16"       # page-pool dtype (float32 for parity tests)
+    compute_dtype: str = "bfloat16"  # model compute dtype
+
+    @property
+    def max_model_len(self) -> int:
+        return self.max_prompt_len + self.max_new_tokens
+
+
+class Engine:
+    def __init__(self, cfg: ModelConfig, params, ecfg: EngineConfig,
+                 mesh=None):
+        bad = [k for k in cfg.layer_pattern if k not in (ATTN, LOCAL)]
+        if bad or cfg.is_encoder_decoder or cfg.num_patches or cfg.learned_pos:
+            raise ValueError(
+                f"paged serving supports decoder-only attention LMs; "
+                f"{cfg.name} has {bad or 'an unsupported input frontend'}")
+        if ecfg.max_prompt_len % ecfg.page_size:
+            raise ValueError("max_prompt_len must be page-aligned")
+        self.cfg, self.ecfg = cfg, ecfg
+        self.params = params
+        self.pool = PagePool(ecfg.num_pages, ecfg.page_size)
+        self.sched = FCFSScheduler(ecfg.num_slots, self.pool,
+                                   policy=ecfg.policy)
+        self.max_pages_per_seq = self.pool.pages_for(ecfg.max_model_len)
+
+        run = RunConfig(model=cfg,
+                        shape=ShapeConfig("serve", "decode",
+                                          ecfg.max_model_len, ecfg.num_slots),
+                        horn=HornConfig(enabled=False),
+                        compute_dtype=ecfg.compute_dtype)
+        self._prefill, _ = S.make_serve_prefill_step(run, mesh)
+        self._decode, _ = S.make_paged_decode_step(
+            run, mesh, num_pages=ecfg.num_pages, page_size=ecfg.page_size)
+        self._write = S.make_prefill_write_step(run, ecfg.page_size)
+        self.cache = T.init_paged_cache(cfg, ecfg.num_pages, ecfg.page_size,
+                                        dtype=jnp.dtype(ecfg.kv_dtype))
+
+        B = ecfg.num_slots
+        self._block_tables = np.zeros((B, self.max_pages_per_seq), np.int32)
+        self._root_key = jax.random.key(ecfg.seed)
+        self._next_id = 0
+        self.steps = 0
+        self.generated_tokens = 0
+        self.peak_utilization = 0.0
+
+    # -- request intake ------------------------------------------------------
+    def submit(self, prompt, max_new_tokens: Optional[int] = None,
+               arrival_time: float = 0.0) -> Request:
+        prompt = np.asarray(prompt, np.int32).reshape(-1)
+        if not 0 < len(prompt) <= self.ecfg.max_prompt_len:
+            raise ValueError(
+                f"prompt length {len(prompt)} not in [1, "
+                f"{self.ecfg.max_prompt_len}]")
+        mnt = min(max_new_tokens or self.ecfg.max_new_tokens,
+                  self.ecfg.max_new_tokens)
+        req = Request(id=self._next_id, prompt=prompt, max_new_tokens=mnt,
+                      arrival_time=arrival_time, eos_id=self.ecfg.eos_id)
+        # reject requests that could never be admitted even into an empty
+        # pool — otherwise they'd pin the FCFS head and the drive loop would
+        # spin forever waiting for pages that cannot exist
+        need = self.sched.admission_pages(req)
+        if need > self.ecfg.num_pages - 1:
+            raise ValueError(
+                f"request needs {need} page(s) at admission "
+                f"(policy={self.ecfg.policy}) but the pool has only "
+                f"{self.ecfg.num_pages - 1}; raise num_pages or shrink "
+                f"prompt/max_new_tokens")
+        self._next_id += 1
+        self.sched.submit(req)
+        return req
+
+    # -- internals -----------------------------------------------------------
+    def _bucket(self, n: int) -> int:
+        """Page-aligned power-of-two prompt bucket (bounds retraces)."""
+        ps = self.ecfg.page_size
+        b = ps * (1 << max(0, math.ceil(math.log2(-(-n // ps)))))
+        return min(b, self.ecfg.max_prompt_len)
+
+    def _sample(self, logits, req: Request, step: int) -> int:
+        if self.ecfg.temperature <= 0:
+            return int(np.argmax(np.asarray(logits)))
+        key = jax.random.fold_in(
+            jax.random.fold_in(self._root_key, req.id), step)
+        return int(jax.random.categorical(
+            key, jnp.asarray(logits) / self.ecfg.temperature))
+
+    def _sync_slot(self, req: Request) -> None:
+        """Mirror the pool's page table into the device block-table row."""
+        table = self.pool.table(req.id)
+        row = self._block_tables[req.slot]
+        row[:] = 0
+        row[:len(table)] = table
+
+    def _admit(self, now: float, tick_clock=None) -> None:
+        """``tick_clock`` (optional) re-reads the clock after each prefill so
+        same-tick admissions get honest TTFT stamps (batch-1 prefills are
+        serial; the first and eighth admission of a tick are seconds apart)."""
+        for req in self.sched.admit(now):
+            L = req.prompt_len
+            bucket = self._bucket(L)
+            tok = np.zeros((1, bucket), np.int32)
+            tok[0, :L] = req.prompt
+            logits, kv = self._prefill(self.params, {"tokens": jnp.asarray(tok)},
+                                       jnp.asarray([L - 1], jnp.int32))
+            # scatter prompt KV into this sequence's pages; tiles past the
+            # prompt's pages go to the null page (id 0) and are never read
+            table = self.pool.table(req.id)
+            n_prompt = self.pool.pages_for(L)
+            pid = np.zeros(bucket // self.ecfg.page_size, np.int32)
+            pid[:n_prompt] = table[:n_prompt]
+            self.cache = self._write(self.cache, kv, jnp.asarray(pid))
+            tok0 = self._sample(logits[0], req, 0)      # forces the prefill
+            self.sched.record_token(
+                req.slot, tok0, tick_clock() if tick_clock else now)
+            self._sync_slot(req)
+
+    def _clock(self, now: Optional[float]) -> float:
+        return time.monotonic() if now is None else now
+
+    # -- one engine tick -----------------------------------------------------
+    def step(self, now: Optional[float] = None,
+             tick_clock=None) -> List[Request]:
+        """Admit + decode one token for every running slot.  Returns the
+        requests that finished this tick.  Pass ``tick_clock`` (a zero-arg
+        callable on the same epoch as ``now``) for per-admission TTFT stamps;
+        without it every admission in the tick shares ``now``."""
+        now = self._clock(now)
+        tick_now = tick_clock if tick_clock else (lambda: now)
+        self._admit(now, tick_clock)
+        done = self.sched.evict_finished(tick_now())  # e.g. max_new_tokens == 1
+        self._null_empty_slots()
+        if not self.sched.running:
+            return done
+
+        B = self.ecfg.num_slots
+        tokens = np.zeros((B, 1), np.int32)
+        positions = np.zeros((B,), np.int32)
+        for slot, req in self.sched.running.items():
+            try:
+                self.sched.grow(req)
+            except PagePoolOOM as e:
+                raise EngineOOM(
+                    f"decode step {self.steps}: {e}; running={len(self.sched.running)} "
+                    f"waiting={len(self.sched.waiting)} — raise --pages, lower "
+                    f"--slots, or use --policy reserve") from e
+            self._sync_slot(req)
+            tokens[slot, 0] = req.out_tokens[-1]
+            positions[slot] = req.context_len - 1   # last token's KV write pos
+        self.peak_utilization = max(self.peak_utilization,
+                                    self.pool.utilization())
+
+        logits, self.cache = self._decode(
+            self.params, self.cache, jnp.asarray(tokens),
+            jnp.asarray(positions), jnp.asarray(self._block_tables))
+        logits = np.asarray(logits)                 # forces the decode step
+        self.steps += 1
+        post = tick_now()                           # after prefills + decode
+        for slot, req in list(self.sched.running.items()):
+            self.sched.record_token(
+                slot, self._sample(logits[slot], req, len(req.out_tokens)),
+                post)
+            self.generated_tokens += 1
+
+        finished = self.sched.evict_finished(post)
+        self._null_empty_slots()
+        return done + finished
+
+    def _null_empty_slots(self) -> None:
+        """Point every vacated slot's block-table row at the null page."""
+        for slot in set(range(self.ecfg.num_slots)) - set(self.sched.running):
+            self._block_tables[slot] = 0
+
+    def run(self, *, clock=None) -> List[Request]:
+        """Drive until every submitted request has finished."""
+        clock = clock or time.monotonic
+        while self.sched.has_work():
+            self.step(clock())
+        return self.sched.finished

@@ -1,0 +1,103 @@
+"""Host-side paged KV-cache bookkeeping: free-list page pool + page tables.
+
+The device-side KV pools (``transformer.init_paged_cache``) are plain arrays
+[num_pages, page_size, KH, D]; this module decides *which* page ids a
+sequence owns.  Page ids are layer-agnostic — one allocation covers every
+layer's pool, so the free list is a single flat structure regardless of
+depth.  Page 0 is reserved as the null page: empty decode slots point their
+block-table rows at it and their garbage writes land there harmlessly.
+"""
+from __future__ import annotations
+
+from typing import Dict, List
+
+
+class PagePoolOOM(RuntimeError):
+    """Raised when an allocation cannot be satisfied from the free list."""
+
+
+class PagePool:
+    """Fixed-size page pool with a free list and per-sequence page tables."""
+
+    def __init__(self, num_pages: int, page_size: int):
+        if num_pages < 2:
+            raise ValueError("need >= 2 pages (page 0 is the null page)")
+        if page_size < 1:
+            raise ValueError("page_size must be >= 1")
+        self.num_pages = num_pages
+        self.page_size = page_size
+        # LIFO free list, low ids first off the stack (page 0 never enters)
+        self._free: List[int] = list(range(num_pages - 1, 0, -1))
+        self._tables: Dict[int, List[int]] = {}
+
+    # -- accounting ---------------------------------------------------------
+    @property
+    def free_pages(self) -> int:
+        return len(self._free)
+
+    @property
+    def used_pages(self) -> int:
+        return (self.num_pages - 1) - len(self._free)
+
+    def utilization(self) -> float:
+        """Fraction of allocatable pages currently owned by sequences."""
+        return self.used_pages / (self.num_pages - 1)
+
+    def pages_for(self, num_tokens: int) -> int:
+        return -(-num_tokens // self.page_size)       # ceil div
+
+    def can_alloc(self, n_pages: int) -> bool:
+        return len(self._free) >= n_pages
+
+    # -- allocation ---------------------------------------------------------
+    def alloc(self, seq_id: int, num_tokens: int) -> List[int]:
+        """Register ``seq_id`` and allocate pages for its first
+        ``num_tokens`` tokens.  Returns the page table (a live view)."""
+        if seq_id in self._tables:
+            raise ValueError(f"sequence {seq_id} already allocated")
+        self._tables[seq_id] = []
+        try:
+            self.ensure(seq_id, num_tokens)
+        except PagePoolOOM:
+            del self._tables[seq_id]
+            raise
+        return self._tables[seq_id]
+
+    def ensure(self, seq_id: int, num_tokens: int) -> List[int]:
+        """Grow ``seq_id``'s table to cover ``num_tokens`` tokens, pulling
+        pages from the free list on demand.  Raises PagePoolOOM (leaving the
+        existing allocation intact) when the pool is exhausted."""
+        table = self._tables[seq_id]
+        need = self.pages_for(num_tokens) - len(table)
+        if need > len(self._free):
+            raise PagePoolOOM(
+                f"page pool exhausted: seq {seq_id} needs {need} more "
+                f"page(s), {len(self._free)} free of {self.num_pages - 1} "
+                f"({self.utilization():.0%} utilized)")
+        for _ in range(max(0, need)):
+            table.append(self._free.pop())
+        return table
+
+    def free_seq(self, seq_id: int) -> int:
+        """Return all of ``seq_id``'s pages to the free list."""
+        table = self._tables.pop(seq_id)
+        self._free.extend(reversed(table))
+        return len(table)
+
+    def table(self, seq_id: int) -> List[int]:
+        return list(self._tables[seq_id])
+
+    @property
+    def num_seqs(self) -> int:
+        return len(self._tables)
+
+    # -- invariants (exercised by tests) ------------------------------------
+    def check_invariants(self) -> None:
+        owned = [p for t in self._tables.values() for p in t]
+        assert 0 not in owned, "null page allocated to a sequence"
+        assert 0 not in self._free, "null page on the free list"
+        assert len(set(owned)) == len(owned), "page owned by two sequences"
+        overlap = set(owned) & set(self._free)
+        assert not overlap, f"pages both free and owned: {overlap}"
+        assert len(owned) + len(self._free) == self.num_pages - 1, \
+            "pages leaked or duplicated"

@@ -1,0 +1,134 @@
+"""FCFS continuous-batching scheduler: admission queue + decode-slot lifecycle.
+
+Requests wait in arrival order; a request joins the running batch as soon as
+a decode slot is free AND the page pool can cover it under the admission
+policy.  Slots are evicted the moment a request finishes (max_new_tokens or
+EOS), so the next waiting request joins mid-flight — no batch barrier.
+
+Admission policies:
+  "reserve"    allocate worst-case pages (prompt + max_new) up front; decode
+               can never OOM the pool (throughput-conservative, vLLM-v0
+               style reservation).
+  "on_demand"  allocate prompt pages (+1 token of headroom) only; pages are
+               pulled from the free list as sequences grow.  Higher packing,
+               but a pathological mix can exhaust the pool mid-decode —
+               callers must handle PagePoolOOM (the engine turns it into a
+               clean EngineOOM; preemption is a ROADMAP follow-on).
+"""
+from __future__ import annotations
+
+from collections import deque
+from dataclasses import dataclass, field
+from typing import Deque, Dict, List, Optional
+
+import numpy as np
+
+from repro.serving.kv_cache import PagePool
+
+
+@dataclass
+class Request:
+    """One generation request plus its runtime bookkeeping."""
+
+    id: int
+    prompt: np.ndarray                  # [len] int32 token ids
+    max_new_tokens: int
+    arrival_time: float = 0.0
+    eos_id: Optional[int] = None
+
+    # runtime (engine/scheduler-owned)
+    slot: Optional[int] = None
+    out_tokens: List[int] = field(default_factory=list)
+    t_admitted: Optional[float] = None
+    t_first_token: Optional[float] = None
+    t_done: Optional[float] = None
+
+    @property
+    def prompt_len(self) -> int:
+        return len(self.prompt)
+
+    @property
+    def context_len(self) -> int:
+        return self.prompt_len + len(self.out_tokens)
+
+    @property
+    def finished(self) -> bool:
+        if self.out_tokens and self.eos_id is not None \
+                and self.out_tokens[-1] == self.eos_id:
+            return True
+        return len(self.out_tokens) >= self.max_new_tokens
+
+
+class FCFSScheduler:
+    """First-come-first-served admission into ``num_slots`` decode slots."""
+
+    def __init__(self, num_slots: int, pool: PagePool, *,
+                 policy: str = "reserve"):
+        if policy not in ("reserve", "on_demand"):
+            raise ValueError(policy)
+        self.num_slots = num_slots
+        self.pool = pool
+        self.policy = policy
+        self.waiting: Deque[Request] = deque()
+        self.running: Dict[int, Request] = {}       # slot -> request
+        self._free_slots = list(range(num_slots - 1, -1, -1))
+        self.finished: List[Request] = []
+
+    # -- queue --------------------------------------------------------------
+    def submit(self, req: Request) -> None:
+        self.waiting.append(req)
+
+    def has_work(self) -> bool:
+        return bool(self.waiting or self.running)
+
+    def admission_pages(self, req: Request) -> int:
+        """Pages the policy demands free before ``req`` may join."""
+        if self.policy == "reserve":
+            return self.pool.pages_for(req.prompt_len + req.max_new_tokens)
+        return self.pool.pages_for(req.prompt_len + 1)
+
+    # -- lifecycle ----------------------------------------------------------
+    def admit(self, now: float) -> List[Request]:
+        """Move FCFS-head requests into free slots while the pool allows.
+        Strict FCFS: if the head doesn't fit, nothing behind it jumps the
+        queue (no head-of-line bypass — keeps latency ordering honest)."""
+        admitted = []
+        while self.waiting and self._free_slots:
+            req = self.waiting[0]
+            if not self.pool.can_alloc(self.admission_pages(req)):
+                break
+            self.waiting.popleft()
+            req.slot = self._free_slots.pop()
+            req.t_admitted = now
+            self.pool.alloc(req.id, self.admission_pages(req)
+                            * self.pool.page_size)
+            self.running[req.slot] = req
+            admitted.append(req)
+        return admitted
+
+    def grow(self, req: Request) -> List[int]:
+        """Make sure ``req`` has pages through its current context length
+        (the next decode step writes at position context_len - 1).  Only the
+        on_demand policy ever allocates here; reserve is already covered."""
+        return self.pool.ensure(req.id, req.context_len)
+
+    def record_token(self, slot: int, token: int, now: float) -> None:
+        req = self.running[slot]
+        if not req.out_tokens:
+            req.t_first_token = now
+        req.out_tokens.append(token)
+
+    def evict_finished(self, now: float) -> List[Request]:
+        """Free slots + pages of every finished running request."""
+        done = []
+        for slot in sorted(self.running):
+            req = self.running[slot]
+            if req.finished:
+                req.t_done = now
+                del self.running[slot]
+                self._free_slots.append(slot)
+                self.pool.free_seq(req.id)
+                req.slot = None
+                done.append(req)
+        self.finished.extend(done)
+        return done

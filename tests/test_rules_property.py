@@ -3,7 +3,8 @@ factorization) — the elastic-scaling guarantee that a resized cluster never
 produces an invalid sharding, only degraded (replicated) ones."""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+hypothesis = pytest.importorskip("hypothesis")
+from hypothesis import given, settings, strategies as st  # noqa: E402
 
 from repro.configs.base import SHAPES, get_model_config, list_archs
 from repro.launch.mesh import sharding_rules
