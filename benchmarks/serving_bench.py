@@ -2,17 +2,36 @@
 load; emits ``BENCH_serving.json`` so the perf trajectory is recorded per PR.
 
     PYTHONPATH=src python benchmarks/serving_bench.py [--arch qwen3-1.7b]
-        [--requests 32] [--out BENCH_serving.json]
+        [--requests 32] [--long-frac 0.1] [--out BENCH_serving.json]
+
+Three phases:
+  "default"   the log-uniform prompt mix (comparable across PRs)
+  "long_mix"  the adversarial mix: ``--long-frac`` of prompts pinned at
+              ``max_prompt`` exactly.  Before chunked prefill, every such
+              admission stalled the whole decode batch for a serial
+              full-prompt prefill; now a tick is bounded by the token
+              budget, so ``stall_max_s`` should sit near ``tick_p50_s``
+              instead of scaling with prompt length.
+  "squeeze"   a deliberately undersized pool (13 x 4-token pages, 4 slots)
+              under ``on_demand`` — the load that used to exit 2 with
+              EngineOOM; records the throughput cost of preempt + chunked
+              re-prefill (``preemptions`` must be > 0 here or the phase is
+              not squeezing).
 
 Metrics (virtual arrival clock at --rate req/s, wall-clock service times):
   decode_tok_s   generated tokens / wall time of the measured phase
-  tok_per_step   mean decode-batch occupancy (continuous-batching win)
+  tok_per_tick   mean decode-batch occupancy (continuous-batching win)
   ttft_p50/p99   arrival -> first token (s)
   lat_p50/p99    arrival -> completion (s)
+  tick_p50_s     median unified-tick duration
+  stall_p99_s /  per-tick wall time observed while >=1 already-running
+  stall_max_s    request was decoding — the decode-latency spike an
+                 admission injects (the number chunked prefill bounds)
   peak_util      page-pool peak utilization
+  preemptions    pool-pressure evictions (on_demand policy)
 
-A warmup pass (same buckets) runs first so compile time doesn't pollute the
-steady-state numbers.
+A warmup pass (same chunk-width buckets) runs first so compile time doesn't
+pollute the steady-state numbers.
 """
 from __future__ import annotations
 
@@ -25,7 +44,9 @@ import numpy as np
 
 def run(arch: str = "qwen3-1.7b", requests: int = 32, rate: float = 16.0,
         slots: int = 8, pages: int = 512, page_size: int = 16,
-        max_prompt: int = 64, gen: int = 16, seed: int = 0):
+        max_prompt: int = 64, gen: int = 16, budget: int = 64,
+        long_frac: float = 0.0, stream: str = "poisson", seed: int = 0,
+        _engine_cache={}):
     import jax
     from repro.configs.base import get_model_config, reduced
     from repro.launch.serve import make_requests
@@ -33,23 +54,33 @@ def run(arch: str = "qwen3-1.7b", requests: int = 32, rate: float = 16.0,
     from repro.serving import Engine, EngineConfig
 
     cfg = reduced(get_model_config(arch))
-    params = api.model_init(jax.random.key(seed), cfg)
     ecfg = EngineConfig(
         num_slots=slots, num_pages=pages, page_size=page_size,
         max_prompt_len=-(-max_prompt // page_size) * page_size,
-        max_new_tokens=gen, seed=seed, policy="on_demand")
+        max_new_tokens=gen, token_budget=max(budget, slots), seed=seed,
+        policy="on_demand")
+    key = (arch, seed)
+    if key not in _engine_cache:          # share params across phases
+        _engine_cache.clear()
+        _engine_cache[key] = api.model_init(jax.random.key(seed), cfg)
+    params = _engine_cache[key]
     rng = np.random.default_rng(seed)
 
     def load(n):
-        return make_requests(n, cfg.vocab_size, rng, rate=rate,
-                             max_prompt=max_prompt, gen=gen)
+        return make_requests(n, cfg.vocab_size, rng, stream=stream,
+                             rate=rate, max_prompt=max_prompt, gen=gen,
+                             long_frac=long_frac)
 
     def drive(engine, reqs):
         """Arrivals on the same wall clock as serve.py, except that when the
         engine fully drains the next future arrival is pulled forward —
-        measures service, not idle waiting."""
+        measures service, not idle waiting.  Returns (wall, ticks, stalls):
+        per-tick durations, and the subset observed while at least one
+        already-running request was decoding (the stall an admission
+        injects into in-flight requests)."""
         t0 = time.monotonic()
         pending = list(reqs)
+        ticks, stalls = [], []
         while pending or engine.sched.has_work():
             now = time.monotonic() - t0
             while pending and pending[0][0] <= now:
@@ -58,32 +89,54 @@ def run(arch: str = "qwen3-1.7b", requests: int = 32, rate: float = 16.0,
             if not engine.sched.has_work() and pending:
                 at, prompt, g = pending.pop(0)
                 engine.submit(prompt, g, arrival_time=min(at, now))
+            decoding = any(not r.in_prefill
+                           for r in engine.sched.running.values())
+            tt0 = time.monotonic()
             engine.step(time.monotonic() - t0,
                         tick_clock=lambda: time.monotonic() - t0)
-        return time.monotonic() - t0
+            dt = time.monotonic() - tt0
+            ticks.append(dt)
+            if decoding:
+                stalls.append(dt)
+        return time.monotonic() - t0, ticks, stalls
 
-    # warmup: populate the prefill-bucket + decode compile caches
-    warm = Engine(cfg, params, ecfg)
-    drive(warm, load(max(4, slots // 2)))
-
+    # warmup: compile every power-of-two chunk-width bucket the measured
+    # phase can hit, on the SAME engine (each Engine owns a fresh jit cache,
+    # so a throwaway warmup engine would not keep compile spikes out of the
+    # stall numbers; a random load would miss rare widths).  The final
+    # max-width prompt matters when the budget is not a power of two: a
+    # 24-token chunk compiles the C=32 cell no pow2-length prompt reaches
     engine = Engine(cfg, params, ecfg)
-    wall = drive(engine, load(requests))
+    widths, w = [engine.max_chunk], 1
+    while w < engine.max_chunk:
+        widths.append(w)
+        w <<= 1
+    for w in sorted(widths):
+        engine.submit(np.ones(w, np.int32), 2)
+        engine.run()
+    engine.reset_stats()
+
+    wall, ticks, stalls = drive(engine, load(requests))
     done = engine.sched.finished
     ttft = np.asarray([r.t_first_token - r.arrival_time for r in done])
     lat = np.asarray([r.t_done - r.arrival_time for r in done])
     total_new = sum(len(r.out_tokens) for r in done)
+    def pct(xs, p):
+        return round(float(np.percentile(xs, p)), 4) if len(xs) else None
+
     return {
-        "arch": arch, "requests": requests, "slots": slots,
-        "pages": pages, "page_size": page_size,
+        "requests": requests, "long_frac": long_frac,
         "wall_s": round(wall, 3),
         "decode_tok_s": round(total_new / max(wall, 1e-9), 2),
-        "tok_per_step": round(engine.generated_tokens
+        "tok_per_tick": round(engine.generated_tokens
                               / max(engine.steps, 1), 2),
-        "ttft_p50_s": round(float(np.percentile(ttft, 50)), 4),
-        "ttft_p99_s": round(float(np.percentile(ttft, 99)), 4),
-        "lat_p50_s": round(float(np.percentile(lat, 50)), 4),
-        "lat_p99_s": round(float(np.percentile(lat, 99)), 4),
+        "prefill_tok": engine.prefill_tokens,
+        "ttft_p50_s": pct(ttft, 50), "ttft_p99_s": pct(ttft, 99),
+        "lat_p50_s": pct(lat, 50), "lat_p99_s": pct(lat, 99),
+        "tick_p50_s": pct(ticks, 50),
+        "stall_p99_s": pct(stalls, 99), "stall_max_s": pct(stalls, 100),
         "peak_util": round(engine.peak_utilization, 4),
+        "preemptions": engine.preemptions,
     }
 
 
@@ -93,10 +146,30 @@ def main() -> None:
     ap.add_argument("--requests", type=int, default=32)
     ap.add_argument("--rate", type=float, default=16.0)
     ap.add_argument("--slots", type=int, default=8)
+    ap.add_argument("--pages", type=int, default=512,
+                    help="shrink (e.g. 16 4-token pages) to bench the "
+                         "preemption path under real pool pressure")
+    ap.add_argument("--page-size", type=int, default=16)
+    ap.add_argument("--max-prompt", type=int, default=64)
+    ap.add_argument("--budget", type=int, default=64)
+    ap.add_argument("--long-frac", type=float, default=0.1,
+                    help="fraction of long_mix prompts pinned at --max-prompt")
     ap.add_argument("--out", default="BENCH_serving.json")
     args = ap.parse_args()
-    res = run(arch=args.arch, requests=args.requests, rate=args.rate,
-              slots=args.slots)
+    common = dict(arch=args.arch, requests=args.requests, rate=args.rate,
+                  slots=args.slots, pages=args.pages,
+                  page_size=args.page_size, max_prompt=args.max_prompt,
+                  budget=args.budget)
+    res = {
+        "arch": args.arch, "slots": args.slots, "budget": args.budget,
+        "pages": args.pages, "page_size": args.page_size,
+        "max_prompt": args.max_prompt,
+        "default": run(**common),
+        "long_mix": run(**common, long_frac=args.long_frac),
+        "squeeze": run(arch=args.arch, requests=args.requests,
+                       rate=args.rate, slots=4, pages=13, page_size=4,
+                       max_prompt=16, gen=12, budget=16, stream="batch"),
+    }
     with open(args.out, "w") as f:
         json.dump(res, f, indent=2)
         f.write("\n")

@@ -221,61 +221,61 @@ def make_decode_step(run: RunConfig, mesh):
 
 
 # ---------------------------------------------------------------------------
-# Paged serving steps (continuous batching — see repro.serving)
+# Unified paged serving step (continuous batching — see repro.serving)
 # ---------------------------------------------------------------------------
-def make_serve_prefill_step(run: RunConfig, mesh):
-    """Batch-1 prefill for the serving engine: prompts are right-padded to a
-    bucket length, so the sampled position is ``last_index`` (prompt_len - 1),
-    not -1.  Returns step(params, batch, last_index) -> (logits, kv_cache)."""
+def make_unified_paged_step(run: RunConfig, mesh, *, num_pages: int,
+                            page_size: int, temperature: float = 0.0):
+    """THE serving step: one jitted call per engine tick, whatever the tick
+    holds.  The scheduler packs a token budget with a mix of decode tokens
+    (one per running slot) and prompt chunks from admitting requests; the
+    step appends every token's K/V to the page pool in place, runs chunked
+    paged attention over the pool, and samples the next token for every
+    slot on device (vectorized fold_in per (request, step) keys — no
+    per-slot host loop, one device round-trip per tick).
+
+    step(params, cache, tokens [B, C], starts [B], chunk_lens [B],
+         block_tables [B, maxp], req_ids [B], sample_steps [B], root_key)
+      -> (sampled [B] int32, cache)
+
+    Only the sampled tokens leave the step — returning the [B, V] logits
+    would materialize a multi-MB output buffer per tick that no caller
+    reads (at vocab 150k+ it would dwarf the transfer of everything else).
+
+    ``C`` is the tick's chunk width: a decode-only tick runs at C == 1 (the
+    classic paged-decode cell, bit-compatible with it); ticks carrying
+    prompt chunks run at power-of-two C buckets (jit caches one executable
+    per width).  The pool is donated so the K/V append is in-place.  Greedy
+    when ``temperature <= 0``; otherwise categorical with per-slot keys
+    ``fold_in(fold_in(root_key, req_id), step)`` — no key is ever reused
+    across requests or steps.  Idle slots (chunk_len 0) and mid-prompt
+    chunks produce samples the engine simply discards.
+    """
     cfg = run.model
     ctx = make_ctx(cfg, mesh, run.shape)
 
-    def prefill_step(params, batch, last_index):
+    def unified_step(params, cache, tokens, starts, chunk_lens, block_tables,
+                     req_ids, sample_steps, root_key):
         cparams = cast_tree(params, run.compute_dtype)
-        logits, cache, _ = api.prefill(cparams, batch, cfg, ctx,
-                                       last_index=last_index)
-        return logits, cache
-
-    paxes = api.model_axes(cfg)
-    p_shard = tree_shardings(paxes, ctx)
-    jitted = jax.jit(prefill_step, in_shardings=(p_shard, None, None),
-                     out_shardings=None)
-    return jitted, {"params": p_shard}
-
-
-def make_paged_decode_step(run: RunConfig, mesh, *, num_pages: int,
-                           page_size: int):
-    """Continuous-batching decode: every slot advances one token against the
-    shared page pool.  step(params, cache, tokens [B,1], positions [B],
-    block_tables [B, maxp]) -> (logits [B, V], cache).  The pool is donated
-    so the per-step write is in-place."""
-    cfg = run.model
-    ctx = make_ctx(cfg, mesh, run.shape)
-
-    def decode_step(params, cache, tokens, positions, block_tables):
-        cparams = cast_tree(params, run.compute_dtype)
-        return api.paged_decode_step(cparams, cache, tokens, positions,
-                                     block_tables, cfg, ctx)
+        logits, new_cache = api.paged_step(
+            cparams, cache, tokens, starts, chunk_lens, block_tables,
+            cfg, ctx)
+        if temperature > 0:
+            keys = jax.vmap(lambda r, s: jax.random.fold_in(
+                jax.random.fold_in(root_key, r), s))(req_ids, sample_steps)
+            sampled = jax.vmap(jax.random.categorical)(
+                keys, logits.astype(f32) / temperature)
+        else:
+            sampled = jnp.argmax(logits, axis=-1)
+        return sampled.astype(jnp.int32), new_cache
 
     paxes = api.model_axes(cfg)
     p_shard = tree_shardings(paxes, ctx)
     cache_struct = jax.eval_shape(
         lambda: T.init_paged_cache(cfg, num_pages, page_size))
-    jitted = jax.jit(decode_step,
-                     in_shardings=(p_shard, None, None, None, None),
+    jitted = jax.jit(unified_step,
+                     in_shardings=(p_shard,) + (None,) * 8,
                      out_shardings=None, donate_argnums=(1,))
     return jitted, {"params": p_shard, "cache_struct": cache_struct}
-
-
-def make_prefill_write_step(run: RunConfig, page_size: int):
-    """jitted (paged_cache, prefill_kv, page_ids) -> paged_cache scatter
-    (donated pool: the prefill KV lands in-place)."""
-
-    def write(paged_cache, prefill_cache, page_ids):
-        return T.write_prefill_to_pages(paged_cache, prefill_cache, page_ids,
-                                        page_size)
-
-    return jax.jit(write, donate_argnums=(0,))
 
 
 def decode_input_specs(run: RunConfig):

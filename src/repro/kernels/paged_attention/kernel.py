@@ -1,9 +1,19 @@
-"""Paged-attention decode Pallas kernel (TPU): block-table K/V gather in VMEM.
+"""Paged-attention Pallas kernels (TPU): block-table K/V gather in VMEM.
 
-One query token per sequence attends over that sequence's KV pages, addressed
-through a per-sequence block table (the vLLM technique: KV lives in a shared
-pool of fixed-size pages, so sequences of wildly different lengths pack the
-HBM densely and join/leave a decode batch without reshuffling).
+Two kernels share one structure:
+
+  paged_attention        one query token per sequence (decode)
+  paged_chunk_attention  a C-token chunk per sequence — the unified serving
+                         step's workhorse: decode slots ride as C == 1
+                         chunks, admitting prompts as wider chunks, each
+                         token attending to prior pages plus the causal
+                         prefix of its own chunk (already appended to the
+                         pool).  C == 1 reproduces paged_attention
+                         bit-for-bit.
+
+Per-sequence KV is addressed through a block table (the vLLM technique: KV
+lives in a shared pool of fixed-size pages, so sequences of wildly different
+lengths pack the HBM densely and join/leave a batch without reshuffling).
 
 Grid: (B, KH, maxp) — pages innermost (sequential).  The block table and the
 per-sequence lengths ride in as *scalar-prefetch* operands
@@ -75,6 +85,114 @@ def _kernel(bt_ref, len_ref, q_ref, k_ref, v_ref, o_ref,
     def _emit():
         o_ref[0, 0] = (acc_ref[...]
                        / jnp.maximum(l_ref[...], 1e-30)).astype(o_ref.dtype)
+
+
+def _chunk_kernel(bt_ref, start_ref, clen_ref, q_ref, k_ref, v_ref, o_ref,
+                  acc_ref, m_ref, l_ref, *, scale: float,
+                  window: Optional[int], softcap: Optional[float],
+                  psize: int, n_pages: int, C: int, G: int):
+    """Chunk-append variant: q is [C * G, D] per (sequence, kv-head) — C
+    chunk tokens x G grouped query heads.  Row r holds chunk token r // G at
+    absolute position ``start + r // G``; the mask adds a causal constraint
+    against the token's own chunk prefix on top of the decode kernel's
+    length mask.  Padding rows (token index >= chunk_len) are zeroed at
+    emit.  With C == 1 every op matches ``_kernel`` bit-for-bit."""
+    b, p = pl.program_id(0), pl.program_id(2)
+
+    @pl.when(p == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    start = start_ref[b]
+    clen = clen_ref[b]
+    length = start + clen
+    live = p * psize < length
+
+    @pl.when(live)
+    def _page():
+        q = q_ref[0, 0].astype(f32)                     # [C * G, D]
+        k = k_ref[0, :, 0].astype(f32)                  # [psize, D]
+        v = v_ref[0, :, 0].astype(f32)
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=f32) * scale
+        if softcap:
+            s = jnp.tanh(s / softcap) * softcap
+        kpos = p * psize + jax.lax.broadcasted_iota(
+            jnp.int32, s.shape, 1)                      # [C*G, psize]
+        qpos = start + jax.lax.broadcasted_iota(
+            jnp.int32, s.shape, 0) // G                 # row r -> token r // G
+        mask = jnp.where(kpos >= length, NEG_INF, 0.0)
+        mask = jnp.where(kpos > qpos, NEG_INF, mask)    # causal own-chunk
+        if window is not None:
+            mask = jnp.where(kpos <= qpos - window, NEG_INF, mask)
+        s = s + mask
+        m_prev = m_ref[...]
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1, keepdims=True))
+        prob = jnp.exp(s - m_new)
+        corr = jnp.exp(m_prev - m_new)
+        l_ref[...] = l_ref[...] * corr + jnp.sum(prob, -1, keepdims=True)
+        acc_ref[...] = acc_ref[...] * corr + jax.lax.dot_general(
+            prob, v, (((1,), (0,)), ((), ())), preferred_element_type=f32)
+        m_ref[...] = m_new
+
+    @pl.when(p == n_pages - 1)
+    def _emit():
+        out = acc_ref[...] / jnp.maximum(l_ref[...], 1e-30)
+        tok = jax.lax.broadcasted_iota(jnp.int32, out.shape, 0) // G
+        o_ref[0, 0] = jnp.where(tok < clen, out, 0.0).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "scale", "window", "softcap", "interpret"))
+def paged_chunk_attention(q, k_pages, v_pages, block_tables, starts,
+                          chunk_lens, *, scale: float,
+                          window: Optional[int] = None,
+                          softcap: Optional[float] = None,
+                          interpret: bool = False):
+    """q: [B, C, H, D] right-padded chunks; k/v_pages: [P, psize, KH, D]
+    (the chunk's own K/V already appended); block_tables: [B, maxp];
+    starts/chunk_lens: [B] -> [B, C, H, D].  See paged_chunk_attention_ref
+    for the contract; C == 1 reproduces ``paged_attention`` bit-for-bit."""
+    B, C, H, D = q.shape
+    psize, KH = k_pages.shape[1], k_pages.shape[2]
+    maxp = block_tables.shape[1]
+    G = H // KH
+    # [B, KH, C*G, D]: chunk tokens x grouped query heads, flattened so the
+    # kernel works on one 2-D block per (seq, kv head) like the decode kernel
+    qg = q.reshape(B, C, KH, G, D).transpose(0, 2, 1, 3, 4).reshape(
+        B, KH, C * G, D)
+
+    kernel = functools.partial(
+        _chunk_kernel, scale=scale, window=window, softcap=softcap,
+        psize=psize, n_pages=maxp, C=C, G=G)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=3,
+        grid=(B, KH, maxp),
+        in_specs=[
+            pl.BlockSpec((1, 1, C * G, D),
+                         lambda b, h, p, bt, st, cl: (b, h, 0, 0)),
+            pl.BlockSpec((1, psize, 1, D),
+                         lambda b, h, p, bt, st, cl: (bt[b, p], 0, h, 0)),
+            pl.BlockSpec((1, psize, 1, D),
+                         lambda b, h, p, bt, st, cl: (bt[b, p], 0, h, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, C * G, D),
+                               lambda b, h, p, bt, st, cl: (b, h, 0, 0)),
+        scratch_shapes=[pltpu.VMEM((C * G, D), f32),
+                        pltpu.VMEM((C * G, 1), f32),
+                        pltpu.VMEM((C * G, 1), f32)],
+    )
+    out = pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((B, KH, C * G, D), q.dtype),
+        interpret=interpret,
+    )(block_tables.astype(jnp.int32), starts.astype(jnp.int32),
+      chunk_lens.astype(jnp.int32), qg, k_pages, v_pages)
+    return out.reshape(B, KH, C, G, D).transpose(0, 2, 1, 3, 4).reshape(
+        B, C, H, D)
 
 
 @functools.partial(jax.jit, static_argnames=(

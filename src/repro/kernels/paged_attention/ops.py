@@ -1,4 +1,5 @@
-"""Backend-switched paged attention + the paged KV-pool scatter update."""
+"""Backend-switched paged attention (decode + chunk-append) and the paged
+KV-pool scatter updates."""
 from __future__ import annotations
 
 from typing import Optional
@@ -7,7 +8,10 @@ import jax.numpy as jnp
 
 from repro.kernels.backend import get_backend
 from repro.kernels.paged_attention.kernel import paged_attention as _pallas
-from repro.kernels.paged_attention.ref import paged_attention_ref
+from repro.kernels.paged_attention.kernel import \
+    paged_chunk_attention as _pallas_chunk
+from repro.kernels.paged_attention.ref import (paged_attention_ref,
+                                               paged_chunk_attention_ref)
 
 
 def paged_attention(q, k_pages, v_pages, block_tables, lengths, *,
@@ -23,6 +27,23 @@ def paged_attention(q, k_pages, v_pages, block_tables, lengths, *,
                    interpret=backend == "interpret", **kw)
 
 
+def paged_chunk_attention(q, k_pages, v_pages, block_tables, starts,
+                          chunk_lens, *, scale: float,
+                          window: Optional[int] = None,
+                          softcap: Optional[float] = None, **kw):
+    """Dispatch [B, C, H, D] chunk-append paged attention (the unified
+    serving step: decode tokens are C == 1 chunks, prompt chunks are wider)."""
+    backend = kw.pop("backend", None) or get_backend()
+    if backend == "ref":
+        return paged_chunk_attention_ref(
+            q, k_pages, v_pages, block_tables, starts, chunk_lens,
+            scale=scale, window=window, softcap=softcap)
+    return _pallas_chunk(q, k_pages, v_pages, block_tables, starts,
+                         chunk_lens, scale=scale, window=window,
+                         softcap=softcap,
+                         interpret=backend == "interpret", **kw)
+
+
 def paged_pool_update(pool, new, block_tables, positions):
     """Write one token per sequence into its page at ``positions``.
 
@@ -35,3 +56,24 @@ def paged_pool_update(pool, new, block_tables, positions):
         block_tables, (positions // psize)[:, None], axis=1)[:, 0]
     slot = positions % psize
     return pool.at[page, slot].set(new.astype(pool.dtype))
+
+
+def paged_pool_append(pool, new, block_tables, starts, chunk_lens):
+    """Scatter each sequence's C-token chunk into its pages.
+
+    pool: [P, psize, KH, D]; new: [B, C, KH, D]; block_tables: [B, maxp];
+    starts: [B] absolute position of each chunk's first token; chunk_lens:
+    [B] valid tokens per chunk.  Padding tokens (j >= chunk_len) are routed
+    to the null page 0, so a partially-filled chunk never corrupts pages
+    beyond the sequence's allocation.
+    """
+    B, C = new.shape[:2]
+    psize, maxp = pool.shape[1], block_tables.shape[1]
+    pos = starts[:, None] + jnp.arange(C)[None, :]              # [B, C]
+    pidx = jnp.clip(pos // psize, 0, maxp - 1)
+    page = jnp.take_along_axis(block_tables, pidx, axis=1)
+    valid = jnp.arange(C)[None, :] < chunk_lens[:, None]
+    page = jnp.where(valid, page, 0)
+    slot = pos % psize
+    return pool.at[page.reshape(-1), slot.reshape(-1)].set(
+        new.reshape((B * C,) + new.shape[2:]).astype(pool.dtype))

@@ -1,9 +1,17 @@
-"""Pure-jnp oracle for the paged-attention decode kernel.
+"""Pure-jnp oracles for the paged-attention kernels.
 
 Gathers the K/V pages named by each sequence's block table into a contiguous
-[B, maxp * psize, KH, D] view and runs a masked single-token softmax — the
-same math the Pallas kernel performs page-by-page in VMEM.  Used on CPU
-(where Pallas cannot lower) and as the allclose reference in tests.
+[B, maxp * psize, KH, D] view and runs a masked softmax — the same math the
+Pallas kernels perform page-by-page in VMEM.  Two entry points:
+
+  paged_attention_ref        one query token per sequence (decode)
+  paged_chunk_attention_ref  a C-token chunk per sequence (chunked prefill /
+                             the unified serving step); each token attends to
+                             prior context plus the causal prefix of its own
+                             chunk, all read back from the page pool
+
+Used on CPU (where Pallas cannot lower) and as the allclose reference in
+tests.
 """
 from __future__ import annotations
 
@@ -54,3 +62,53 @@ def paged_attention_ref(q, k_pages, v_pages, block_tables, lengths, *,
     # the kernel (whose l accumulator stays 0) instead
     out = jnp.where(lengths[:, None, None, None] > 0, out, 0.0)
     return out.reshape(B, H, D).astype(q.dtype)
+
+
+def paged_chunk_attention_ref(q, k_pages, v_pages, block_tables, starts,
+                              chunk_lens, *, scale: float,
+                              window: Optional[int] = None,
+                              softcap: Optional[float] = None):
+    """Chunk-append attention over a block-paged KV pool.
+
+    q:            [B, C, H, D]  a chunk of C tokens per sequence, right-padded
+                  (token j of sequence b sits at absolute position
+                  ``starts[b] + j``; rows with j >= chunk_lens[b] are padding)
+    k/v_pages:    [P, psize, KH, D]  shared page pool.  The chunk's own K/V
+                  must already be written (append-then-attend)
+    block_tables: [B, maxp] int32    page ids per sequence, 0-padded
+    starts:       [B] int32          KV tokens in pages *before* this chunk
+    chunk_lens:   [B] int32          valid tokens in this chunk (0 = idle slot)
+    Returns [B, C, H, D]; padding rows (and fully-idle slots) emit zeros.
+
+    With C == 1 and chunk_lens == 1 this is exactly ``paged_attention_ref``
+    at ``lengths = starts + 1`` — the decode special case.
+    """
+    B, C, H, D = q.shape
+    psize, KH = k_pages.shape[1], k_pages.shape[2]
+    maxp = block_tables.shape[1]
+    G = H // KH
+    S = maxp * psize
+
+    k = k_pages[block_tables].reshape(B, S, KH, D).astype(f32)
+    v = v_pages[block_tables].reshape(B, S, KH, D).astype(f32)
+    qg = q.reshape(B, C, KH, G, D).astype(f32)
+
+    s = jnp.einsum("bchgd,bshd->bhgcs", qg, k) * scale
+    if softcap:
+        s = jnp.tanh(s / softcap) * softcap
+    kp = jnp.arange(S)[None, None, :]                       # [1, 1, S]
+    qpos = starts[:, None] + jnp.arange(C)[None, :]         # [B, C]
+    lengths = starts + chunk_lens
+    mask = jnp.where(kp >= lengths[:, None, None], NEG_INF, 0.0)
+    mask = jnp.where(kp > qpos[..., None], NEG_INF, mask)   # causal own-chunk
+    if window is not None:
+        mask = jnp.where(kp <= qpos[..., None] - window, NEG_INF, mask)
+    s = s + mask[:, None, None]                             # [B,KH,G,C,S]
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bhgcs,bshd->bchgd", p, v)
+    # padding rows (j >= chunk_len) still attend to the valid prior context
+    # (their qpos lies past it), producing well-defined but meaningless
+    # output; zero them like the kernel, which masks them at emit time
+    valid = jnp.arange(C)[None, :] < chunk_lens[:, None]    # [B, C]
+    out = jnp.where(valid[:, :, None, None, None], out, 0.0)
+    return out.reshape(B, C, H, D).astype(q.dtype)

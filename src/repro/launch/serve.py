@@ -3,16 +3,22 @@
     PYTHONPATH=src python -m repro.launch.serve --arch qwen3-1.7b \
         --stream poisson --requests 32
 
-Drives ``repro.serving.Engine`` (paged KV cache + FCFS continuous batching)
-from a synthetic request stream: Poisson arrivals with mixed prompt lengths,
-each request joining the decode batch the moment a slot and pages free up
-and leaving on completion.  Reports decode tok/s, time-to-first-token, and
-p50/p99 end-to-end latency.
+Drives ``repro.serving.Engine`` (paged KV cache + FCFS continuous batching
++ chunked prefill) from a synthetic request stream: Poisson arrivals with
+mixed prompt lengths, each request joining the batch the moment a slot and
+pages free up and leaving on completion.  Every engine tick is one unified
+device call over a fixed token budget (``--budget``), so a long admission
+never stalls the running batch for more than one tick.  Reports decode
+tok/s, time-to-first-token, p50/p99 end-to-end latency, and preemptions
+(pool pressure under ``--policy on_demand`` evicts the youngest sequence
+back to the queue instead of killing the server).
 
 ``--stream batch`` submits everything at t=0 (a closed-loop throughput
 measurement); ``--stream poisson`` is the open-loop latency measurement.
-Exits with status 2 on page-pool OOM (only reachable with
-``--policy on_demand`` and an undersized ``--pages``).
+``--long-frac`` pins that fraction of prompts at ``--max-prompt`` — the
+adversarial mix that used to stall decode for whole-prompt prefills.
+Exits with status 2 only on a genuinely unservable request (EngineOOM:
+one sequence can never fit the pool).
 """
 from __future__ import annotations
 
@@ -29,18 +35,24 @@ from repro.serving import Engine, EngineConfig, EngineOOM
 
 def make_requests(n: int, vocab_size: int, rng: np.random.Generator, *,
                   stream: str = "poisson", rate: float = 16.0,
-                  max_prompt: int = 64, gen: int = 16):
+                  max_prompt: int = 64, gen: int = 16,
+                  long_frac: float = 0.0):
     """(arrival_time, prompt, max_new) triples: Poisson arrivals (or all at
     t=0 for ``stream="batch"``), mixed prompt lengths (log-uniform between 4
-    and ``max_prompt``), per-request max_new drawn in [gen/2, gen].  Shared
-    by the launcher and benchmarks/serving_bench.py so their loads stay
+    and ``max_prompt``), per-request max_new drawn in [gen/2, gen].
+    ``long_frac`` of the prompts are pinned at ``max_prompt`` exactly — the
+    adversarial long-prompt mix for chunked-prefill benchmarks.  Shared by
+    the launcher and benchmarks/serving_bench.py so their loads stay
     comparable."""
     out, t = [], 0.0
     for _ in range(n):
         if stream == "poisson":
             t += rng.exponential(1.0 / rate)
-        lo, hi = np.log(4), np.log(max_prompt)
-        plen = int(np.exp(rng.uniform(lo, hi)))
+        if long_frac > 0 and rng.uniform() < long_frac:
+            plen = max_prompt
+        else:
+            lo, hi = np.log(4), np.log(max_prompt)
+            plen = int(np.exp(rng.uniform(lo, hi)))
         prompt = rng.integers(0, vocab_size, (max(1, plen),)).astype(np.int32)
         g = int(rng.integers(max(1, gen // 2), gen + 1))
         out.append((t, prompt, g))
@@ -64,6 +76,10 @@ def main() -> None:
     ap.add_argument("--max-prompt", type=int, default=64)
     ap.add_argument("--gen", type=int, default=16,
                     help="max new tokens (per-request draw in [gen/2, gen])")
+    ap.add_argument("--budget", type=int, default=256,
+                    help="tokens per unified tick (decode + prompt chunks)")
+    ap.add_argument("--long-frac", type=float, default=0.0,
+                    help="fraction of prompts pinned at --max-prompt")
     ap.add_argument("--policy", choices=["reserve", "on_demand"],
                     default="on_demand")
     ap.add_argument("--temperature", type=float, default=0.0)
@@ -80,8 +96,8 @@ def main() -> None:
     ecfg = EngineConfig(
         num_slots=args.slots, num_pages=args.pages, page_size=args.page_size,
         max_prompt_len=-(-args.max_prompt // args.page_size) * args.page_size,
-        max_new_tokens=args.gen, temperature=args.temperature,
-        seed=args.seed, policy=args.policy)
+        max_new_tokens=args.gen, token_budget=max(args.budget, args.slots),
+        temperature=args.temperature, seed=args.seed, policy=args.policy)
     import jax
     params = api.model_init(jax.random.key(args.seed), cfg)
     try:
@@ -92,10 +108,11 @@ def main() -> None:
     rng = np.random.default_rng(args.seed)
     pending = make_requests(args.requests, cfg.vocab_size, rng,
                             stream=args.stream, rate=args.rate,
-                            max_prompt=args.max_prompt, gen=args.gen)
+                            max_prompt=args.max_prompt, gen=args.gen,
+                            long_frac=args.long_frac)
     print(f"serving {args.requests} requests ({args.stream} stream, "
           f"{args.slots} slots, {args.pages}x{args.page_size}-token pages, "
-          f"policy={args.policy})")
+          f"budget {ecfg.token_budget} tok/tick, policy={args.policy})")
 
     t0 = time.monotonic()
     max_running = 0
@@ -114,13 +131,15 @@ def main() -> None:
                 continue
             for req in engine.step(time.monotonic() - t0,
                                    tick_clock=lambda: time.monotonic() - t0):
+                pre = f"  ({req.num_preemptions}x preempted)" \
+                    if req.num_preemptions else ""
                 print(f"  req {req.id:3d} done: prompt {req.prompt_len:3d} "
                       f"+{len(req.out_tokens):3d} tok  "
                       f"ttft {req.t_first_token - req.arrival_time:6.3f}s  "
-                      f"latency {req.t_done - req.arrival_time:6.3f}s")
+                      f"latency {req.t_done - req.arrival_time:6.3f}s{pre}")
             max_running = max(max_running, len(engine.sched.running))
     except EngineOOM as e:
-        print(f"FATAL: page pool OOM — {e}", file=sys.stderr)
+        print(f"FATAL: unservable request — {e}", file=sys.stderr)
         sys.exit(2)
     wall = time.monotonic() - t0
 
@@ -132,13 +151,15 @@ def main() -> None:
     print(f"\n{len(done)} requests in {wall:.2f}s  "
           f"(max {max_running}/{args.slots} slots concurrent)")
     print(f"throughput: {total_new / max(wall, 1e-9):.1f} tok/s "
-          f"({engine.steps} decode steps, "
-          f"{engine.generated_tokens / max(engine.steps, 1):.1f} tok/step)")
+          f"({engine.steps} ticks, "
+          f"{engine.generated_tokens / max(engine.steps, 1):.1f} tok/tick, "
+          f"{engine.prefill_tokens} prefill tok)")
     print(f"TTFT    p50 {percentile(ttft, 50):.3f}s  "
           f"p99 {percentile(ttft, 99):.3f}s")
     print(f"latency p50 {percentile(lat, 50):.3f}s  "
           f"p99 {percentile(lat, 99):.3f}s")
-    print(f"page-pool peak utilization: {engine.peak_utilization:.0%}")
+    print(f"page-pool peak utilization: {engine.peak_utilization:.0%}  "
+          f"preemptions: {engine.preemptions}")
 
 
 if __name__ == "__main__":

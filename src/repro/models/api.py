@@ -44,7 +44,7 @@ def _decoder_params(params, cfg):
 def forward_hidden(params, batch: Dict[str, Any], cfg: ModelConfig,
                    ctx: ShardingCtx, *, horn=None, mode: str = "train",
                    remat: bool = True, cache=None, cache_index=None,
-                   encoder_out=None, block_tables=None):
+                   encoder_out=None, block_tables=None, chunk_lens=None):
     """Returns (hidden, new_cache, aux, encoder_out)."""
     if cfg.is_encoder_decoder:
         if block_tables is not None:
@@ -58,7 +58,7 @@ def forward_hidden(params, batch: Dict[str, Any], cfg: ModelConfig,
         params, batch["tokens"], cfg, ctx, horn=horn,
         patch_embeds=batch.get("patch_embeds"), cache=cache,
         cache_index=cache_index, mode=mode, remat=remat,
-        block_tables=block_tables)
+        block_tables=block_tables, chunk_lens=chunk_lens)
     return hidden, new_cache, aux, None
 
 
@@ -100,19 +100,29 @@ def prefill(params, batch, cfg: ModelConfig, ctx: ShardingCtx, *,
     return logits[:, 0], cache, enc
 
 
-def paged_decode_step(params, cache, tokens, positions, block_tables,
-                      cfg: ModelConfig, ctx: ShardingCtx):
-    """One continuous-batching decode step over paged KV pools.
+def paged_step(params, cache, tokens, starts, chunk_lens, block_tables,
+               cfg: ModelConfig, ctx: ShardingCtx):
+    """One unified serving tick over paged KV pools: every slot advances by
+    a chunk of up to C tokens (decode slots: exactly 1; admitting prompts:
+    a prompt chunk; idle slots: 0 — the scheduler packs them into one token
+    budget).  The chunk K/V is appended to the pool in place.
 
-    tokens: [B, 1]; positions: [B] per-slot write positions; block_tables:
+    tokens: [B, C] right-padded chunks; starts: [B] KV tokens already in
+    pages per slot; chunk_lens: [B] valid tokens per chunk; block_tables:
     [B, maxp] page ids (empty slots: all-zero rows -> null page).
-    Returns (logits [B, vocab], new_cache).
+    Returns (logits [B, vocab] at each slot's last *valid* chunk position,
+    new_cache).  Idle slots return garbage logits the caller must ignore.
     """
     hidden, new_cache, _, _ = forward_hidden(
         params, {"tokens": tokens}, cfg, ctx, mode="decode", remat=False,
-        cache=cache, cache_index=positions, block_tables=block_tables)
+        cache=cache, cache_index=starts, block_tables=block_tables,
+        chunk_lens=chunk_lens)
+    # the lm head runs on one position per slot, not the whole chunk — at
+    # vocab 150k+ the [B, C, V] logits would dwarf the forward itself
+    last = jnp.take_along_axis(
+        hidden, jnp.maximum(chunk_lens - 1, 0)[:, None, None], axis=1)
     dec_params = _decoder_params(params, cfg)
-    logits = T.lm_logits(dec_params, hidden, cfg, ctx)
+    logits = T.lm_logits(dec_params, last, cfg, ctx)
     return logits[:, 0], new_cache
 
 

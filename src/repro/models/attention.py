@@ -225,7 +225,7 @@ def _project_qkv(params, x, kv_x, cfg: ModelConfig, positions, kv_positions,
 def attn_apply(params, x, cfg: ModelConfig, ctx: ShardingCtx, *,
                kind: str = "attn", positions=None, cache=None, cache_index=None,
                kv_x=None, cross: bool = False, head_mask=None,
-               causal: bool = True, block_tables=None):
+               causal: bool = True, block_tables=None, chunk_lens=None):
     """Attention sublayer.
 
     Modes:
@@ -233,10 +233,14 @@ def attn_apply(params, x, cfg: ModelConfig, ctx: ShardingCtx, *,
         new_kv=(k, v) so prefill can build a cache.
       - decode: ``cache=(k_buf, v_buf)`` [B, S_max, KH, D] and ``cache_index``
         scalar -> one-token update, returns (out, updated cache).
-      - paged decode: ``block_tables`` [B, maxp] given, ``cache`` is a
-        (k_pages, v_pages) [P, psize, KH, D] pool pair and ``cache_index`` is
-        a *per-sequence* [B] position vector (continuous batching: every slot
-        sits at its own depth).  One-token pool write + paged attention.
+      - paged (the unified serving step): ``block_tables`` [B, maxp] given,
+        ``cache`` is a (k_pages, v_pages) [P, psize, KH, D] pool pair,
+        ``cache_index`` is a *per-sequence* [B] vector of KV tokens already
+        in pages, and ``chunk_lens`` [B] counts the valid tokens of this
+        call's [B, C] chunk (decode slots: 1; admitting prompts: up to C;
+        idle slots: 0).  Chunk K/V is appended to the pool in place, then
+        every token attends to prior pages plus its own chunk's causal
+        prefix (continuous batching: every slot sits at its own depth).
       - cross-attention: ``kv_x`` given, no cache/rope on kv side.
     """
     B, Sq, _ = x.shape
@@ -278,21 +282,22 @@ def attn_apply(params, x, cfg: ModelConfig, ctx: ShardingCtx, *,
                 q_positions=positions, k_positions=kv_positions)
         new_kv = (k, v)
     elif block_tables is not None:
-        # paged decode: per-sequence positions, block-table-addressed pool
-        from repro.kernels.paged_attention.ops import (paged_attention,
-                                                       paged_pool_update)
+        # unified paged step: per-sequence chunk append + paged attention
+        from repro.kernels.paged_attention.ops import (paged_chunk_attention,
+                                                       paged_pool_append)
         k_pages, v_pages = cache
+        if chunk_lens is None:                          # plain decode tick
+            chunk_lens = jnp.ones((B,), jnp.int32)
         q, k_new, v_new = _project_qkv(
             params, x, kv_src, cfg, positions, positions,
             use_rope=use_rope, rope_theta=theta)
-        k_pages = paged_pool_update(k_pages, k_new[:, 0], block_tables,
-                                    cache_index)
-        v_pages = paged_pool_update(v_pages, v_new[:, 0], block_tables,
-                                    cache_index)
-        out = paged_attention(
-            q[:, 0], k_pages, v_pages, block_tables, cache_index + 1,
-            scale=scale, window=window,
-            softcap=cfg.attn_logit_softcap)[:, None]
+        k_pages = paged_pool_append(k_pages, k_new, block_tables,
+                                    cache_index, chunk_lens)
+        v_pages = paged_pool_append(v_pages, v_new, block_tables,
+                                    cache_index, chunk_lens)
+        out = paged_chunk_attention(
+            q, k_pages, v_pages, block_tables, cache_index, chunk_lens,
+            scale=scale, window=window, softcap=cfg.attn_logit_softcap)
         new_kv = (k_pages, v_pages)
     else:
         # single-token decode against a preallocated cache

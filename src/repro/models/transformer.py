@@ -90,7 +90,7 @@ def lm_axes(cfg: ModelConfig, *, cross: bool = False):
 def _block_apply(bp, x, cfg: ModelConfig, ctx: ShardingCtx, *, kind: str,
                  is_moe: bool, layer_idx, horn, positions, cache,
                  cache_index, encoder_out=None, causal: bool = True,
-                 block_tables=None):
+                 block_tables=None, chunk_lens=None):
     """Returns (x, new_mix_cache, aux)."""
     B = x.shape[0]
     aux: Dict[str, Any] = {}
@@ -100,7 +100,7 @@ def _block_apply(bp, x, cfg: ModelConfig, ctx: ShardingCtx, *, kind: str,
         out, new_mix_cache = attn_apply(
             bp["attn"], h, cfg, ctx, kind=kind, positions=positions,
             cache=cache, cache_index=cache_index, head_mask=hm, causal=causal,
-            block_tables=block_tables)
+            block_tables=block_tables, chunk_lens=chunk_lens)
     else:
         d_in = ssm_dims(cfg)[0]
         cm = pdrop.unit_mask(horn, layer_idx, B, d_in, salt=3)
@@ -200,28 +200,6 @@ def init_paged_cache(cfg: ModelConfig, num_pages: int, page_size: int,
     return cache
 
 
-def write_prefill_to_pages(paged_cache, prefill_cache, page_ids,
-                           page_size: int):
-    """Scatter a batch-1 prefill KV cache into the page pool.
-
-    prefill KV leaves are [..., 1, S, KH, D] with S a multiple of
-    ``page_size``; ``page_ids`` is [S // page_size] int32 with entries past
-    the sequence's allocated pages set to 0 (pad-token KV lands in the null
-    page and is never read — attention masks by true length)."""
-
-    def scatter(pool, pre):
-        pre = jnp.squeeze(pre, axis=-4)                # drop batch-1 axis
-        S = pre.shape[-3]
-        npg = S // page_size
-        tiles = pre.reshape(pre.shape[:-3] + (npg, page_size) + pre.shape[-2:])
-        tiles = tiles.astype(pool.dtype)
-        if pool.ndim == 5:                             # stacked superblock
-            return pool.at[:, page_ids].set(tiles)
-        return pool.at[page_ids].set(tiles)
-
-    return jax.tree.map(scatter, paged_cache, prefill_cache)
-
-
 def cache_logical_axes(cfg: ModelConfig, cache):
     """Logical-axes pytree matching ``init_cache`` output (for shardings)."""
     if cfg.ssm_state:
@@ -252,15 +230,18 @@ def cache_logical_axes(cfg: ModelConfig, cache):
 def lm_forward(params, tokens, cfg: ModelConfig, ctx: ShardingCtx, *,
                horn=None, patch_embeds=None, cache=None, cache_index=None,
                mode: str = "train", remat: bool = True, encoder_out=None,
-               causal: bool = True, block_tables=None):
+               causal: bool = True, block_tables=None, chunk_lens=None):
     """Returns (hidden [B,S,d], new_cache or None, aux dict).
 
     mode: "train" (no cache out, remat on) | "prefill" (cache out = full-seq
-    KV / final SSM states) | "decode" (cache required, S must be 1).
+    KV / final SSM states) | "decode" (cache required; S is 1 for dense-cache
+    decode, or the chunk width C for the unified paged step).
 
-    Paged decode: pass ``block_tables`` [B, maxp] and a per-sequence [B]
-    ``cache_index`` (each slot at its own depth); ``cache`` must come from
-    ``init_paged_cache``.
+    Paged (unified serving step): pass ``block_tables`` [B, maxp], a
+    per-sequence [B] ``cache_index`` (KV tokens already in pages — each slot
+    at its own depth) and ``chunk_lens`` [B] (valid tokens of each slot's
+    [B, C] chunk); ``cache`` must come from ``init_paged_cache``.  Token j of
+    slot b sits at absolute position ``cache_index[b] + j``.
     """
     decode = mode == "decode"
     x = L.embed_apply(params["embed"], tokens, cfg, ctx)
@@ -281,7 +262,8 @@ def lm_forward(params, tokens, cfg: ModelConfig, ctx: ShardingCtx, *,
 
     if decode:
         ci = jnp.asarray(cache_index)
-        positions = ci[:, None] if ci.ndim == 1 else jnp.full((B, 1), ci)
+        start = ci[:, None] if ci.ndim == 1 else jnp.full((B, 1), ci)
+        positions = start + jnp.arange(Stot)[None, :]   # per-token positions
     else:
         positions = jnp.arange(Stot)[None, :]
     pat = cfg.layer_pattern
@@ -299,7 +281,8 @@ def lm_forward(params, tokens, cfg: ModelConfig, ctx: ShardingCtx, *,
                 positions=positions,
                 cache=None if sb_cache is None else sb_cache[f"l{i}"],
                 cache_index=cache_index, encoder_out=encoder_out,
-                causal=causal, block_tables=block_tables)
+                causal=causal, block_tables=block_tables,
+                chunk_lens=chunk_lens)
             caches_out[f"l{i}"] = mix_c
             aux_acc = jax.tree.map(jnp.add, aux_acc, _pad_aux(aux))
         return x, aux_acc, caches_out
@@ -335,7 +318,8 @@ def lm_forward(params, tokens, cfg: ModelConfig, ctx: ShardingCtx, *,
                 positions=positions,
                 cache=None if not decode else cache["rem"][f"r{i}"],
                 cache_index=cache_index, encoder_out=encoder_out,
-                causal=causal, block_tables=block_tables)
+                causal=causal, block_tables=block_tables,
+                chunk_lens=chunk_lens)
             rem_cache[f"r{i}"] = mix_c
             aux0 = jax.tree.map(jnp.add, aux0, _pad_aux(aux))
         if mode != "train":

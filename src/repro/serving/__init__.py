@@ -5,13 +5,17 @@ Layering (each importable on its own):
   kv_cache.py   host-side page-pool bookkeeping: free list, per-sequence
                 page tables, utilization accounting.  Pure Python — the
                 device-side pools live in the model cache pytree.
-  scheduler.py  FCFS admission queue + decode-slot lifecycle (join on
-                admission, evict on completion / max length).
-  engine.py     ties them to the model: bucketed batch-1 prefill scattered
-                into pages, one fused paged-decode step per tick, per-request
-                sampling keys, latency/TTFT accounting.
+  scheduler.py  FCFS admission queue + slot lifecycle (join on admission,
+                evict on completion / max length, preempt-youngest on pool
+                pressure).
+  engine.py     ties them to the model: one unified token-budget tick per
+                step — decode tokens and chunked-prefill prompt chunks share
+                a single jitted call that appends K/V to the page pool,
+                runs chunked paged attention, and samples every slot's next
+                token on device; latency/TTFT accounting.
 
-The device kernel behind it is ``repro.kernels.paged_attention``.
+The device kernel behind it is ``repro.kernels.paged_attention``
+(``paged_chunk_attention``: decode rides as chunk width 1).
 """
 from repro.serving.engine import Engine, EngineConfig, EngineOOM
 from repro.serving.kv_cache import PagePool, PagePoolOOM

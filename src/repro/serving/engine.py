@@ -1,25 +1,36 @@
 """Continuous-batching inference engine over the paged KV cache.
 
-One engine tick = (admit new requests -> bucketed batch-1 prefill scattered
-into pages) + (one fused paged-decode step advancing every running slot one
-token).  Requests of arbitrary prompt length join whenever a slot and pages
-are free and leave the moment they finish — the decode batch never drains.
+One engine tick = one jitted device call, whatever the tick holds.  The
+scheduler fills a fixed *token budget* with a mix of decode tokens (one per
+running slot) and prompt chunks from admitting requests; the unified paged
+step appends every token's K/V to the page pool in place, runs chunked paged
+attention, and returns on-device-sampled next tokens for every slot.  A
+32k-token admission therefore costs each in-flight request at most
+``token_budget`` tokens of latency per tick — never a monolithic prefill
+stall.
 
-Positions are per-slot: slot b's write position is ``context_len - 1`` (the
-last sampled token whose KV hasn't been written yet), so a fresh 7-token
-request and a 900-token-deep one advance in the same device step.  Sampling
-keys are derived per (request, step) via fold_in — no key is ever reused
-across requests or steps (the bug the old static-batch server had).
+Positions are per-slot: slot b's chunk starts at the number of KV tokens it
+already has in pages, so a fresh 7-token request and a 900-token-deep one
+advance in the same device step.  Sampling keys are derived per (request,
+step) via vectorized fold_in inside the step — no key is ever reused across
+requests or steps, and no per-slot host loop touches the logits.
 
-Prompt lengths are bucketed to page-aligned powers of two so the prefill
-step compiles once per bucket, not once per length.
+Pool pressure under the ``on_demand`` policy no longer kills the server:
+the engine preempts the youngest running sequence back to the head of the
+waiting queue (pages freed, KV recomputed on re-admission through the same
+chunked-prefill path) and degrades to lower throughput.  ``EngineOOM`` is
+reserved for genuinely unservable states — a single sequence that can never
+fit the pool even alone.
+
+Chunk widths are bucketed to powers of two so the unified step compiles
+once per width, not once per chunk length; a decode-only tick runs the
+C == 1 cell, bit-compatible with the classic paged-decode step.
 """
 from __future__ import annotations
 
-import math
 import time
 from dataclasses import dataclass
-from typing import List, Optional
+from typing import Dict, List, Optional
 
 import jax
 import jax.numpy as jnp
@@ -34,8 +45,10 @@ from repro.serving.scheduler import FCFSScheduler, Request
 
 
 class EngineOOM(RuntimeError):
-    """Page pool exhausted mid-decode (on_demand policy).  The engine state
-    is left consistent; callers should surface this and exit cleanly."""
+    """The page pool cannot serve a sequence even after preempting every
+    other running sequence (e.g. one request's context alone exceeds the
+    pool).  The engine state is left consistent; callers should surface
+    this and exit cleanly."""
 
 
 @dataclass(frozen=True)
@@ -45,6 +58,7 @@ class EngineConfig:
     page_size: int = 16              # tokens per KV page
     max_prompt_len: int = 256
     max_new_tokens: int = 64         # default + hard cap per request
+    token_budget: int = 256          # tokens per unified tick (decode+chunks)
     temperature: float = 0.0
     seed: int = 0
     policy: str = "reserve"          # "reserve" | "on_demand" (see scheduler)
@@ -57,6 +71,17 @@ class EngineConfig:
         return self.max_prompt_len + self.max_new_tokens
 
 
+# tick-entry record: what one slot contributes to this tick's device call
+@dataclass
+class _Entry:
+    req: Request
+    start: int                       # KV tokens already in pages
+    tokens: np.ndarray               # [chunk_len] int32
+    chunk_len: int
+    sample_step: int                 # fold_in step for the sampling key
+    record: bool                     # keep the sampled token?
+
+
 class Engine:
     def __init__(self, cfg: ModelConfig, params, ecfg: EngineConfig,
                  mesh=None):
@@ -67,6 +92,10 @@ class Engine:
                 f"{cfg.name} has {bad or 'an unsupported input frontend'}")
         if ecfg.max_prompt_len % ecfg.page_size:
             raise ValueError("max_prompt_len must be page-aligned")
+        if ecfg.token_budget < ecfg.num_slots:
+            raise ValueError(
+                f"token_budget ({ecfg.token_budget}) must cover one decode "
+                f"token per slot ({ecfg.num_slots})")
         self.cfg, self.ecfg = cfg, ecfg
         self.params = params
         self.pool = PagePool(ecfg.num_pages, ecfg.page_size)
@@ -79,20 +108,41 @@ class Engine:
                                           ecfg.max_model_len, ecfg.num_slots),
                         horn=HornConfig(enabled=False),
                         compute_dtype=ecfg.compute_dtype)
-        self._prefill, _ = S.make_serve_prefill_step(run, mesh)
-        self._decode, _ = S.make_paged_decode_step(
-            run, mesh, num_pages=ecfg.num_pages, page_size=ecfg.page_size)
-        self._write = S.make_prefill_write_step(run, ecfg.page_size)
+        self._step, _ = S.make_unified_paged_step(
+            run, mesh, num_pages=ecfg.num_pages, page_size=ecfg.page_size,
+            temperature=ecfg.temperature)
         self.cache = T.init_paged_cache(cfg, ecfg.num_pages, ecfg.page_size,
                                         dtype=jnp.dtype(ecfg.kv_dtype))
 
         B = ecfg.num_slots
+        # chunk widths are clamped so every compile cell is a power of two
+        # <= bucket(max_chunk): a preempted request's re-prefill (up to
+        # max_model_len - 1 kv tokens) just takes one extra tick instead of
+        # minting a wider compile cell no warmup sweep would have seen
+        self.max_chunk = min(ecfg.token_budget, ecfg.max_prompt_len)
         self._block_tables = np.zeros((B, self.max_pages_per_seq), np.int32)
         self._root_key = jax.random.key(ecfg.seed)
         self._next_id = 0
         self.steps = 0
         self.generated_tokens = 0
+        self.prefill_tokens = 0
         self.peak_utilization = 0.0
+
+    @property
+    def preemptions(self) -> int:
+        return self.sched.preemptions
+
+    def reset_stats(self) -> None:
+        """Zero the serving counters without touching compile caches or the
+        pool — benchmarks warm up on the engine they measure (a fresh Engine
+        would also mean a fresh jit cache) and then discard the warmup's
+        contribution here."""
+        self.steps = 0
+        self.generated_tokens = 0
+        self.prefill_tokens = 0
+        self.peak_utilization = 0.0
+        self.sched.preemptions = 0
+        self.sched.finished.clear()
 
     # -- request intake ------------------------------------------------------
     def submit(self, prompt, max_new_tokens: Optional[int] = None,
@@ -110,30 +160,20 @@ class Engine:
         # pool — otherwise they'd pin the FCFS head and the drive loop would
         # spin forever waiting for pages that cannot exist
         need = self.sched.admission_pages(req)
-        if need > self.ecfg.num_pages - 1:
+        if need > self.pool.capacity:
             raise ValueError(
                 f"request needs {need} page(s) at admission "
                 f"(policy={self.ecfg.policy}) but the pool has only "
-                f"{self.ecfg.num_pages - 1}; raise num_pages or shrink "
+                f"{self.pool.capacity}; raise num_pages or shrink "
                 f"prompt/max_new_tokens")
         self._next_id += 1
         self.sched.submit(req)
         return req
 
     # -- internals -----------------------------------------------------------
-    def _bucket(self, n: int) -> int:
-        """Page-aligned power-of-two prompt bucket (bounds retraces)."""
-        ps = self.ecfg.page_size
-        b = ps * (1 << max(0, math.ceil(math.log2(-(-n // ps)))))
-        return min(b, self.ecfg.max_prompt_len)
-
-    def _sample(self, logits, req: Request, step: int) -> int:
-        if self.ecfg.temperature <= 0:
-            return int(np.argmax(np.asarray(logits)))
-        key = jax.random.fold_in(
-            jax.random.fold_in(self._root_key, req.id), step)
-        return int(jax.random.categorical(
-            key, jnp.asarray(logits) / self.ecfg.temperature))
+    def _chunk_bucket(self, n: int) -> int:
+        """Power-of-two chunk-width bucket (bounds unified-step retraces)."""
+        return 1 << max(0, int(n - 1).bit_length())
 
     def _sync_slot(self, req: Request) -> None:
         """Mirror the pool's page table into the device block-table row."""
@@ -142,75 +182,133 @@ class Engine:
         row[:] = 0
         row[:len(table)] = table
 
-    def _admit(self, now: float, tick_clock=None) -> None:
-        """``tick_clock`` (optional) re-reads the clock after each prefill so
-        same-tick admissions get honest TTFT stamps (batch-1 prefills are
-        serial; the first and eighth admission of a tick are seconds apart)."""
-        for req in self.sched.admit(now):
-            L = req.prompt_len
-            bucket = self._bucket(L)
-            tok = np.zeros((1, bucket), np.int32)
-            tok[0, :L] = req.prompt
-            logits, kv = self._prefill(self.params, {"tokens": jnp.asarray(tok)},
-                                       jnp.asarray([L - 1], jnp.int32))
-            # scatter prompt KV into this sequence's pages; tiles past the
-            # prompt's pages go to the null page (id 0) and are never read
-            table = self.pool.table(req.id)
-            n_prompt = self.pool.pages_for(L)
-            pid = np.zeros(bucket // self.ecfg.page_size, np.int32)
-            pid[:n_prompt] = table[:n_prompt]
-            self.cache = self._write(self.cache, kv, jnp.asarray(pid))
-            tok0 = self._sample(logits[0], req, 0)      # forces the prefill
-            self.sched.record_token(
-                req.slot, tok0, tick_clock() if tick_clock else now)
-            self._sync_slot(req)
+    def _sample_peak(self) -> None:
+        self.peak_utilization = max(self.peak_utilization,
+                                    self.pool.utilization())
 
     def _clock(self, now: Optional[float]) -> float:
         return time.monotonic() if now is None else now
 
+    # -- tick planning -------------------------------------------------------
+    def _plan_tick(self) -> Dict[int, _Entry]:
+        """Fill the token budget: one decode token per decode-phase slot,
+        then prompt chunks for prefill-phase slots in admission order.
+        Preempts the youngest running sequence (and replans) whenever decode
+        growth hits pool pressure; raises EngineOOM only when no preemption
+        can help."""
+        while True:
+            try:
+                return self._try_plan()
+            except PagePoolOOM as e:
+                if self.sched.preempt_youngest() is None:
+                    raise EngineOOM(
+                        f"tick {self.steps}: {e}; no other sequence left to "
+                        f"preempt — this request can never fit; raise "
+                        f"--pages, lower --gen, or use --policy reserve"
+                        ) from e
+
+    def _try_plan(self) -> Dict[int, _Entry]:
+        entries: Dict[int, _Entry] = {}
+        budget = self.ecfg.token_budget
+        decode, prefill = [], []
+        for slot, req in sorted(self.sched.running.items()):
+            (prefill if req.in_prefill else decode).append((slot, req))
+
+        for slot, req in decode:
+            self.sched.grow(req)                 # may raise PagePoolOOM
+            entries[slot] = _Entry(
+                req=req, start=req.context_len - 1,
+                tokens=np.asarray([req.out_tokens[-1]], np.int32),
+                chunk_len=1, sample_step=len(req.out_tokens), record=True)
+            budget -= 1
+        # prompt chunks soak up whatever budget the decode tokens left,
+        # oldest admission first (it holds pages; finish it soonest)
+        prefill.sort(key=lambda sr: sr[1].admit_seq)
+        for slot, req in prefill:
+            kv = req.kv_tokens
+            want = len(kv) - req.prefill_pos
+            cl = min(want, max(budget, 0), self.max_chunk)
+            if cl <= 0:
+                continue                          # budget exhausted this tick
+            finishes = req.prefill_pos + cl == len(kv)
+            entries[slot] = _Entry(
+                req=req, start=req.prefill_pos,
+                tokens=kv[req.prefill_pos:req.prefill_pos + cl],
+                chunk_len=cl, sample_step=0,
+                # the chunk that completes a *fresh* prompt yields the first
+                # token; a preempted request's next token is already known
+                record=finishes and not req.out_tokens)
+            budget -= cl
+        return entries
+
     # -- one engine tick -----------------------------------------------------
     def step(self, now: Optional[float] = None,
              tick_clock=None) -> List[Request]:
-        """Admit + decode one token for every running slot.  Returns the
-        requests that finished this tick.  Pass ``tick_clock`` (a zero-arg
-        callable on the same epoch as ``now``) for per-admission TTFT stamps;
-        without it every admission in the tick shares ``now``."""
+        """Admit + advance every running slot by one unified device call.
+        Returns the requests that finished this tick.  Pass ``tick_clock``
+        (a zero-arg callable on the same epoch as ``now``) for an honest
+        post-tick timestamp; without it every event in the tick shares
+        ``now``."""
         now = self._clock(now)
         tick_now = tick_clock if tick_clock else (lambda: now)
-        self._admit(now, tick_clock)
-        done = self.sched.evict_finished(tick_now())  # e.g. max_new_tokens == 1
-        self._null_empty_slots()
+        self.sched.admit(now)
+        self._sample_peak()                       # admissions allocate pages
+        done = self.sched.evict_finished(tick_now())  # e.g. max_new_tokens==1
         if not self.sched.running:
+            self._null_empty_slots()
+            if self.sched.waiting:
+                # a preempted request's context can outgrow the whole pool;
+                # with nothing running and the FCFS head unadmittable even
+                # into an empty pool, the drive loop would spin forever
+                head = self.sched.waiting[0]
+                need = self.sched.admission_pages(head)
+                if need > self.pool.capacity:
+                    raise EngineOOM(
+                        f"request {head.id} needs {need} page(s) to "
+                        f"re-admit but the pool has only "
+                        f"{self.pool.capacity}; its context can never "
+                        f"fit — raise --pages or lower --gen")
+            return done
+
+        entries = self._plan_tick()
+        self._sample_peak()                       # decode growth allocates too
+        self._null_empty_slots()                  # preemption vacates slots
+        for slot in entries:
+            self._sync_slot(self.sched.running[slot])
+        if not entries:                           # nothing runnable this tick
             return done
 
         B = self.ecfg.num_slots
-        tokens = np.zeros((B, 1), np.int32)
-        positions = np.zeros((B,), np.int32)
-        for slot, req in self.sched.running.items():
-            try:
-                self.sched.grow(req)
-            except PagePoolOOM as e:
-                raise EngineOOM(
-                    f"decode step {self.steps}: {e}; running={len(self.sched.running)} "
-                    f"waiting={len(self.sched.waiting)} — raise --pages, lower "
-                    f"--slots, or use --policy reserve") from e
-            self._sync_slot(req)
-            tokens[slot, 0] = req.out_tokens[-1]
-            positions[slot] = req.context_len - 1   # last token's KV write pos
-        self.peak_utilization = max(self.peak_utilization,
-                                    self.pool.utilization())
+        C = self._chunk_bucket(max(e.chunk_len for e in entries.values()))
+        tokens = np.zeros((B, C), np.int32)
+        starts = np.zeros((B,), np.int32)
+        chunk_lens = np.zeros((B,), np.int32)
+        req_ids = np.zeros((B,), np.int32)
+        sample_steps = np.zeros((B,), np.int32)
+        for slot, e in entries.items():
+            tokens[slot, :e.chunk_len] = e.tokens
+            starts[slot] = e.start
+            chunk_lens[slot] = e.chunk_len
+            req_ids[slot] = e.req.id
+            sample_steps[slot] = e.sample_step
 
-        logits, self.cache = self._decode(
+        sampled, self.cache = self._step(
             self.params, self.cache, jnp.asarray(tokens),
-            jnp.asarray(positions), jnp.asarray(self._block_tables))
-        logits = np.asarray(logits)                 # forces the decode step
+            jnp.asarray(starts), jnp.asarray(chunk_lens),
+            jnp.asarray(self._block_tables), jnp.asarray(req_ids),
+            jnp.asarray(sample_steps), self._root_key)
+        sampled = np.asarray(sampled)             # forces the tick
         self.steps += 1
-        post = tick_now()                           # after prefills + decode
-        for slot, req in list(self.sched.running.items()):
-            self.sched.record_token(
-                slot, self._sample(logits[slot], req, len(req.out_tokens)),
-                post)
-            self.generated_tokens += 1
+        post = tick_now()
+
+        for slot, e in entries.items():
+            req = e.req
+            if req.in_prefill:
+                req.prefill_pos += e.chunk_len
+                self.prefill_tokens += e.chunk_len
+            if e.record:
+                self.sched.record_token(slot, int(sampled[slot]), post)
+                self.generated_tokens += 1
 
         finished = self.sched.evict_finished(post)
         self._null_empty_slots()

@@ -32,16 +32,21 @@ class PagePool:
 
     # -- accounting ---------------------------------------------------------
     @property
+    def capacity(self) -> int:
+        """Allocatable pages (everything except the reserved null page)."""
+        return self.num_pages - 1
+
+    @property
     def free_pages(self) -> int:
         return len(self._free)
 
     @property
     def used_pages(self) -> int:
-        return (self.num_pages - 1) - len(self._free)
+        return self.capacity - len(self._free)
 
     def utilization(self) -> float:
         """Fraction of allocatable pages currently owned by sequences."""
-        return self.used_pages / (self.num_pages - 1)
+        return self.used_pages / self.capacity
 
     def pages_for(self, num_tokens: int) -> int:
         return -(-num_tokens // self.page_size)       # ceil div
@@ -61,6 +66,21 @@ class PagePool:
         except PagePoolOOM:
             del self._tables[seq_id]
             raise
+        return self._tables[seq_id]
+
+    def alloc_pages(self, seq_id: int, n_pages: int) -> List[int]:
+        """Register ``seq_id`` and allocate exactly ``n_pages`` pages — the
+        pages-denominated sibling of ``alloc`` (admission policies think in
+        pages; round-tripping pages -> tokens -> pages invites off-by-ones).
+        Returns the page table (a live view)."""
+        if seq_id in self._tables:
+            raise ValueError(f"sequence {seq_id} already allocated")
+        if n_pages > len(self._free):
+            raise PagePoolOOM(
+                f"page pool exhausted: seq {seq_id} needs {n_pages} page(s) "
+                f"at admission, {len(self._free)} free of "
+                f"{self.num_pages - 1} ({self.utilization():.0%} utilized)")
+        self._tables[seq_id] = [self._free.pop() for _ in range(n_pages)]
         return self._tables[seq_id]
 
     def ensure(self, seq_id: int, num_tokens: int) -> List[int]:

@@ -1,19 +1,24 @@
-"""FCFS continuous-batching scheduler: admission queue + decode-slot lifecycle.
+"""FCFS continuous-batching scheduler: admission queue + slot lifecycle +
+preemption.
 
 Requests wait in arrival order; a request joins the running batch as soon as
-a decode slot is free AND the page pool can cover it under the admission
-policy.  Slots are evicted the moment a request finishes (max_new_tokens or
-EOS), so the next waiting request joins mid-flight — no batch barrier.
+a slot is free AND the page pool can cover it under the admission policy.
+Admitted requests stream their prompt into the page pool in token-budget
+chunks (the engine's unified tick), then decode; slots are evicted the
+moment a request finishes, so the next waiting request joins mid-flight —
+no batch barrier.
 
 Admission policies:
   "reserve"    allocate worst-case pages (prompt + max_new) up front; decode
                can never OOM the pool (throughput-conservative, vLLM-v0
                style reservation).
   "on_demand"  allocate prompt pages (+1 token of headroom) only; pages are
-               pulled from the free list as sequences grow.  Higher packing,
-               but a pathological mix can exhaust the pool mid-decode —
-               callers must handle PagePoolOOM (the engine turns it into a
-               clean EngineOOM; preemption is a ROADMAP follow-on).
+               pulled from the free list as sequences grow.  Higher packing;
+               when a pathological mix exhausts the pool mid-decode the
+               engine *preempts* the youngest running sequence back to the
+               head of the waiting queue (pages freed, KV recomputed on
+               re-admission through the same chunked-prefill path) instead
+               of dying — throughput degrades, the server survives.
 """
 from __future__ import annotations
 
@@ -39,6 +44,10 @@ class Request:
     # runtime (engine/scheduler-owned)
     slot: Optional[int] = None
     out_tokens: List[int] = field(default_factory=list)
+    prefill_pos: int = 0                # kv_tokens already written to pages
+    admit_seq: int = -1                 # global admission order (preemption
+                                        # evicts the youngest = max admit_seq)
+    num_preemptions: int = 0
     t_admitted: Optional[float] = None
     t_first_token: Optional[float] = None
     t_done: Optional[float] = None
@@ -50,6 +59,30 @@ class Request:
     @property
     def context_len(self) -> int:
         return self.prompt_len + len(self.out_tokens)
+
+    @property
+    def num_kv_tokens(self) -> int:
+        """Tokens whose KV must be in pages before decode can proceed: the
+        prompt plus every generated token except the last (whose KV is
+        written by the decode step that consumes it)."""
+        return self.prompt_len + max(0, len(self.out_tokens) - 1)
+
+    @property
+    def kv_tokens(self) -> np.ndarray:
+        """The token stream chunked prefill feeds through the pool.  For a
+        fresh request this is the prompt; after a preemption it also carries
+        the already-generated tokens, so re-admission rebuilds the exact KV
+        state the sequence had when evicted."""
+        if not self.out_tokens:
+            return self.prompt
+        return np.concatenate(
+            [self.prompt, np.asarray(self.out_tokens[:-1], np.int32)])
+
+    @property
+    def in_prefill(self) -> bool:
+        """Still streaming prompt (or recomputed) KV into pages; a fresh
+        request stays in prefill until its first token is sampled."""
+        return self.prefill_pos < self.num_kv_tokens or not self.out_tokens
 
     @property
     def finished(self) -> bool:
@@ -72,7 +105,9 @@ class FCFSScheduler:
         self.waiting: Deque[Request] = deque()
         self.running: Dict[int, Request] = {}       # slot -> request
         self._free_slots = list(range(num_slots - 1, -1, -1))
+        self._admit_counter = 0
         self.finished: List[Request] = []
+        self.preemptions = 0
 
     # -- queue --------------------------------------------------------------
     def submit(self, req: Request) -> None:
@@ -82,10 +117,13 @@ class FCFSScheduler:
         return bool(self.waiting or self.running)
 
     def admission_pages(self, req: Request) -> int:
-        """Pages the policy demands free before ``req`` may join."""
+        """Pages the policy demands free before ``req`` may join.  For a
+        preempted request re-admitting, ``num_kv_tokens`` carries the grown
+        context, so on_demand re-reserves everything its recomputed KV (+1
+        token of headroom) needs."""
         if self.policy == "reserve":
             return self.pool.pages_for(req.prompt_len + req.max_new_tokens)
-        return self.pool.pages_for(req.prompt_len + 1)
+        return self.pool.pages_for(req.num_kv_tokens + 1)
 
     # -- lifecycle ----------------------------------------------------------
     def admit(self, now: float) -> List[Request]:
@@ -95,13 +133,16 @@ class FCFSScheduler:
         admitted = []
         while self.waiting and self._free_slots:
             req = self.waiting[0]
-            if not self.pool.can_alloc(self.admission_pages(req)):
+            need = self.admission_pages(req)
+            if not self.pool.can_alloc(need):
                 break
             self.waiting.popleft()
             req.slot = self._free_slots.pop()
             req.t_admitted = now
-            self.pool.alloc(req.id, self.admission_pages(req)
-                            * self.pool.page_size)
+            req.admit_seq = self._admit_counter
+            self._admit_counter += 1
+            req.prefill_pos = 0
+            self.pool.alloc_pages(req.id, need)
             self.running[req.slot] = req
             admitted.append(req)
         return admitted
@@ -109,8 +150,33 @@ class FCFSScheduler:
     def grow(self, req: Request) -> List[int]:
         """Make sure ``req`` has pages through its current context length
         (the next decode step writes at position context_len - 1).  Only the
-        on_demand policy ever allocates here; reserve is already covered."""
+        on_demand policy ever allocates here; reserve is already covered.
+        Raises PagePoolOOM on pool pressure — the engine answers by
+        preempting the youngest running sequence and retrying."""
         return self.pool.ensure(req.id, req.context_len)
+
+    def preempt_youngest(self) -> Optional[Request]:
+        """Evict the most recently admitted running sequence back to the
+        HEAD of the waiting queue: its pages return to the free list and its
+        KV is recomputed on re-admission via chunked prefill.  Returns the
+        victim, or None when fewer than two sequences run (evicting the
+        sole survivor could never free pages for it — that is a genuine,
+        unservable OOM the engine must surface)."""
+        if len(self.running) < 2:
+            return None
+        victim = max(self.running.values(), key=lambda r: r.admit_seq)
+        del self.running[victim.slot]
+        self._free_slots.append(victim.slot)
+        self.pool.free_seq(victim.id)
+        victim.slot = None
+        victim.prefill_pos = 0
+        victim.num_preemptions += 1
+        self.preemptions += 1
+        # appendleft keeps FCFS order when several preemptions stack up in
+        # one tick: younger victims are pushed first and end up behind the
+        # older ones preempted after them
+        self.waiting.appendleft(victim)
+        return victim
 
     def record_token(self, slot: int, token: int, now: float) -> None:
         req = self.running[slot]
