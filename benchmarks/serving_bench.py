@@ -4,19 +4,30 @@ load; emits ``BENCH_serving.json`` so the perf trajectory is recorded per PR.
     PYTHONPATH=src python benchmarks/serving_bench.py [--arch qwen3-1.7b]
         [--requests 32] [--long-frac 0.1] [--out BENCH_serving.json]
 
-Three phases:
-  "default"   the log-uniform prompt mix (comparable across PRs)
-  "long_mix"  the adversarial mix: ``--long-frac`` of prompts pinned at
-              ``max_prompt`` exactly.  Before chunked prefill, every such
-              admission stalled the whole decode batch for a serial
-              full-prompt prefill; now a tick is bounded by the token
-              budget, so ``stall_max_s`` should sit near ``tick_p50_s``
-              instead of scaling with prompt length.
-  "squeeze"   a deliberately undersized pool (13 x 4-token pages, 4 slots)
-              under ``on_demand`` — the load that used to exit 2 with
-              EngineOOM; records the throughput cost of preempt + chunked
-              re-prefill (``preemptions`` must be > 0 here or the phase is
-              not squeezing).
+Four phases:
+  "default"        the log-uniform prompt mix (comparable across PRs)
+  "long_mix"       the adversarial mix: ``--long-frac`` of prompts pinned
+                   at ``max_prompt`` exactly.  Before chunked prefill,
+                   every such admission stalled the whole decode batch for
+                   a serial full-prompt prefill; now a tick is bounded by
+                   the token budget, so ``stall_max_s`` should sit near
+                   ``tick_p50_s`` instead of scaling with prompt length.
+  "squeeze"        a deliberately undersized pool (13 x 4-token pages, 4
+                   slots) under ``on_demand`` — the load that used to exit
+                   2 with EngineOOM; records the throughput cost of
+                   preempt + chunked re-prefill (``preemptions`` must be
+                   > 0 here or the phase is not squeezing).
+  "multi_submodel" the same default load served by a 4-circuit ModelBank
+                   (least-loaded routing, 25% of requests fanned as
+                   mean-logit ensembles): per-submodel tok/s and pool
+                   pressure, TTFT, and the co-batch ratio — the fraction
+                   of ticks whose ONE jitted call carried >= 2 distinct
+                   sub-models (must be > 0 or nothing is co-batching).
+                   An ensemble group counts ONCE in ttft/lat percentiles
+                   and in ``delivered_tok_s`` (one user-visible stream);
+                   ``decode_tok_s`` keeps counting per-member device
+                   tokens, so the two diverge exactly by the ensemble
+                   fan-out.
 
 Metrics (virtual arrival clock at --rate req/s, wall-clock service times):
   decode_tok_s   generated tokens / wall time of the measured phase
@@ -46,12 +57,13 @@ def run(arch: str = "qwen3-1.7b", requests: int = 32, rate: float = 16.0,
         slots: int = 8, pages: int = 512, page_size: int = 16,
         max_prompt: int = 64, gen: int = 16, budget: int = 64,
         long_frac: float = 0.0, stream: str = "poisson", seed: int = 0,
+        submodels: int = 0, ensemble_frac: float = 0.0,
         _engine_cache={}):
     import jax
-    from repro.configs.base import get_model_config, reduced
+    from repro.configs.base import HornConfig, get_model_config, reduced
     from repro.launch.serve import make_requests
     from repro.models import api
-    from repro.serving import Engine, EngineConfig
+    from repro.serving import Engine, EngineConfig, ModelBank, Router
 
     cfg = reduced(get_model_config(arch))
     ecfg = EngineConfig(
@@ -65,6 +77,13 @@ def run(arch: str = "qwen3-1.7b", requests: int = 32, rate: float = 16.0,
         _engine_cache[key] = api.model_init(jax.random.key(seed), cfg)
     params = _engine_cache[key]
     rng = np.random.default_rng(seed)
+    bank = router = None
+    if submodels:
+        # slots >= submodels for ensembles is validated by Engine.submit
+        bank = ModelBank(cfg, HornConfig(enabled=True, keep_hidden=0.5,
+                                         keep_input=1.0, block_size=16),
+                         submodels, seed=seed)
+        router = Router(submodels)        # least-loaded
 
     def load(n):
         return make_requests(n, cfg.vocab_size, rng, stream=stream,
@@ -81,14 +100,21 @@ def run(arch: str = "qwen3-1.7b", requests: int = 32, rate: float = 16.0,
         t0 = time.monotonic()
         pending = list(reqs)
         ticks, stalls = [], []
+
+        def _submit(at, prompt, g):
+            ens = "mean_logit" if bank is not None \
+                and rng.uniform() < ensemble_frac else None
+            engine.submit(prompt, g, arrival_time=at, ensemble=ens)
+            n_ensembles[0] += ens is not None
+
         while pending or engine.sched.has_work():
             now = time.monotonic() - t0
             while pending and pending[0][0] <= now:
                 at, prompt, g = pending.pop(0)
-                engine.submit(prompt, g, arrival_time=at)
+                _submit(at, prompt, g)
             if not engine.sched.has_work() and pending:
                 at, prompt, g = pending.pop(0)
-                engine.submit(prompt, g, arrival_time=min(at, now))
+                _submit(min(at, now), prompt, g)
             decoding = any(not r.in_prefill
                            for r in engine.sched.running.values())
             tt0 = time.monotonic()
@@ -106,7 +132,7 @@ def run(arch: str = "qwen3-1.7b", requests: int = 32, rate: float = 16.0,
     # stall numbers; a random load would miss rare widths).  The final
     # max-width prompt matters when the budget is not a power of two: a
     # 24-token chunk compiles the C=32 cell no pow2-length prompt reaches
-    engine = Engine(cfg, params, ecfg)
+    engine = Engine(cfg, params, ecfg, bank=bank, router=router)
     widths, w = [engine.max_chunk], 1
     while w < engine.max_chunk:
         widths.append(w)
@@ -114,17 +140,31 @@ def run(arch: str = "qwen3-1.7b", requests: int = 32, rate: float = 16.0,
     for w in sorted(widths):
         engine.submit(np.ones(w, np.int32), 2)
         engine.run()
+    if bank is not None and ensemble_frac > 0:
+        # the combine path is a SEPARATE jit variant (ensembles=True): warm
+        # it at every chunk-width bucket too, by co-batching an ensemble
+        # with a bucket-width solo prompt (solo admits first -> its chunk
+        # sets the tick's C bucket while the group is in flight)
+        for w in sorted(widths):
+            engine.submit(np.ones(w, np.int32), 2)
+            engine.submit(np.ones(4, np.int32), 2, ensemble="mean_logit")
+            engine.run()
     engine.reset_stats()
 
+    n_ensembles = [0]
     wall, ticks, stalls = drive(engine, load(requests))
-    done = engine.sched.finished
+    # an ensemble group delivers ONE token stream through G member slots:
+    # latency/TTFT/delivered-throughput count each group once (its leader),
+    # while decode_tok_s keeps counting member tokens (device throughput)
+    done = engine.finished_streams()
     ttft = np.asarray([r.t_first_token - r.arrival_time for r in done])
     lat = np.asarray([r.t_done - r.arrival_time for r in done])
-    total_new = sum(len(r.out_tokens) for r in done)
+    total_new = sum(len(r.out_tokens) for r in engine.sched.finished)
+    delivered = sum(len(r.out_tokens) for r in done)
     def pct(xs, p):
         return round(float(np.percentile(xs, p)), 4) if len(xs) else None
 
-    return {
+    out = {
         "requests": requests, "long_frac": long_frac,
         "wall_s": round(wall, 3),
         "decode_tok_s": round(total_new / max(wall, 1e-9), 2),
@@ -137,7 +177,24 @@ def run(arch: str = "qwen3-1.7b", requests: int = 32, rate: float = 16.0,
         "stall_p99_s": pct(stalls, 99), "stall_max_s": pct(stalls, 100),
         "peak_util": round(engine.peak_utilization, 4),
         "preemptions": engine.preemptions,
+        "bt_rows_per_tick": round(engine.bt_rows_synced
+                                  / max(engine.steps, 1), 3),
     }
+    if bank is not None:
+        out.update({
+            "submodels": submodels, "ensemble_frac": ensemble_frac,
+            "ensemble_groups": n_ensembles[0],
+            "delivered_tok_s": round(delivered / max(wall, 1e-9), 2),
+            "cobatch_ratio": round(engine.cobatch_ratio, 4),
+            "tok_s_by_submodel": {
+                str(g): round(engine.tokens_by_submodel.get(g, 0)
+                              / max(wall, 1e-9), 2)
+                for g in range(submodels)},
+            "peak_util_by_submodel": {
+                str(g): round(engine.peak_util_by_submodel.get(g, 0.0), 4)
+                for g in range(submodels)},
+        })
+    return out
 
 
 def main() -> None:
@@ -154,8 +211,17 @@ def main() -> None:
     ap.add_argument("--budget", type=int, default=64)
     ap.add_argument("--long-frac", type=float, default=0.1,
                     help="fraction of long_mix prompts pinned at --max-prompt")
+    ap.add_argument("--submodels", type=int, default=4,
+                    help="ModelBank size for the multi_submodel phase")
+    ap.add_argument("--ensemble-frac", type=float, default=0.25,
+                    help="fraction of multi_submodel requests fanned across "
+                         "all circuits (mean-logit)")
     ap.add_argument("--out", default="BENCH_serving.json")
     args = ap.parse_args()
+    if args.ensemble_frac > 0 and args.submodels > args.slots:
+        raise SystemExit(
+            f"ensemble fan-out needs --slots >= --submodels "
+            f"({args.slots} < {args.submodels})")
     common = dict(arch=args.arch, requests=args.requests, rate=args.rate,
                   slots=args.slots, pages=args.pages,
                   page_size=args.page_size, max_prompt=args.max_prompt,
@@ -169,6 +235,8 @@ def main() -> None:
         "squeeze": run(arch=args.arch, requests=args.requests,
                        rate=args.rate, slots=4, pages=13, page_size=4,
                        max_prompt=16, gen=12, budget=16, stream="batch"),
+        "multi_submodel": run(**common, submodels=args.submodels,
+                              ensemble_frac=args.ensemble_frac),
     }
     with open(args.out, "w") as f:
         json.dump(res, f, indent=2)

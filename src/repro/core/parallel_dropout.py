@@ -65,13 +65,23 @@ def group_block_mask(key, num_groups: int, units: int, keep: float,
     return live.astype(f32) / keep
 
 
-def expand_mask(mask_blocks, units: int, batch: int) -> jax.Array:
-    """[G, nb] -> [batch, 1, units]: group->sample expansion + block->unit."""
+def expand_units(mask_blocks, units: int) -> jax.Array:
+    """[G, nb] block mask -> [G, units] unit mask; the last block covers the
+    remainder tail.  THE block->unit rule — train-time masks (expand_mask)
+    and the serving ModelBank both go through here, so a trained sub-model
+    and its served circuit can never disagree on which units a block owns."""
     G, nb = mask_blocks.shape
     per = units // nb
-    m = jnp.repeat(mask_blocks, per, axis=-1)            # [G, units]
+    m = jnp.repeat(mask_blocks, per, axis=-1)            # [G, nb*per]
     if units % nb:
         m = jnp.concatenate([m, jnp.broadcast_to(m[:, -1:], (G, units % nb))], -1)
+    return m
+
+
+def expand_mask(mask_blocks, units: int, batch: int) -> jax.Array:
+    """[G, nb] -> [batch, 1, units]: group->sample expansion + block->unit."""
+    G = mask_blocks.shape[0]
+    m = expand_units(mask_blocks, units)                 # [G, units]
     reps = max(1, batch // G)
     m = jnp.repeat(m, reps, axis=0)[:batch]              # [batch, units]
     return m[:, None, :]

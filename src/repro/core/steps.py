@@ -224,7 +224,8 @@ def make_decode_step(run: RunConfig, mesh):
 # Unified paged serving step (continuous batching — see repro.serving)
 # ---------------------------------------------------------------------------
 def make_unified_paged_step(run: RunConfig, mesh, *, num_pages: int,
-                            page_size: int, temperature: float = 0.0):
+                            page_size: int, temperature: float = 0.0,
+                            bank_masks=None):
     """THE serving step: one jitted call per engine tick, whatever the tick
     holds.  The scheduler packs a token budget with a mix of decode tokens
     (one per running slot) and prompt chunks from admitting requests; the
@@ -234,7 +235,8 @@ def make_unified_paged_step(run: RunConfig, mesh, *, num_pages: int,
     per-slot host loop, one device round-trip per tick).
 
     step(params, cache, tokens [B, C], starts [B], chunk_lens [B],
-         block_tables [B, maxp], req_ids [B], sample_steps [B], root_key)
+         block_tables [B, maxp], req_ids [B], sample_steps [B],
+         submodel_ids [B], seg_ids [B], vote_flags [B], root_key)
       -> (sampled [B] int32, cache)
 
     Only the sampled tokens leave the step — returning the [B, V] logits
@@ -249,33 +251,83 @@ def make_unified_paged_step(run: RunConfig, mesh, *, num_pages: int,
     ``fold_in(fold_in(root_key, req_id), step)`` — no key is ever reused
     across requests or steps.  Idle slots (chunk_len 0) and mid-prompt
     chunks produce samples the engine simply discards.
+
+    Multi-submodel serving (``bank_masks`` = a ModelBank's mask tensors,
+    leading axis G): each slot's circuit masks are gathered by
+    ``submodel_ids`` *inside* the step, so decode tokens and prompt chunks
+    from different sub-models co-batch in one jitted call — no per-submodel
+    step, no recompile on routing decisions.  ``seg_ids`` [B] groups slots
+    into ensembles (each slot carries its group leader's slot index; solo
+    slots carry their own): per-step logits are segment-combined on device
+    before sampling — mean-logit (members share the leader's sampling key,
+    so one categorical draw decides the group) or, where ``vote_flags`` is
+    set, a majority vote over member samples (ties -> lowest token id).
+    Solo slots pass through both paths unchanged (a segment of one).
+
+    ``ensembles`` is a static per-tick flag (two jit-compiled variants,
+    dispatched host-side): ticks with no ensemble group in flight
+    (routing-only serving, the common case) skip the combine machinery
+    entirely — no [B, V] one-hot, no second sampling pass — at the cost of
+    one extra compile per chunk-width bucket the first time an ensemble
+    tick hits it.
     """
     cfg = run.model
     ctx = make_ctx(cfg, mesh, run.shape)
 
-    def unified_step(params, cache, tokens, starts, chunk_lens, block_tables,
-                     req_ids, sample_steps, root_key):
-        cparams = cast_tree(params, run.compute_dtype)
-        logits, new_cache = api.paged_step(
-            cparams, cache, tokens, starts, chunk_lens, block_tables,
-            cfg, ctx)
+    def sample(logits, req_ids, sample_steps, root_key):
         if temperature > 0:
             keys = jax.vmap(lambda r, s: jax.random.fold_in(
                 jax.random.fold_in(root_key, r), s))(req_ids, sample_steps)
-            sampled = jax.vmap(jax.random.categorical)(
+            return jax.vmap(jax.random.categorical)(
                 keys, logits.astype(f32) / temperature)
+        return jnp.argmax(logits, axis=-1)
+
+    def unified_step(params, cache, tokens, starts, chunk_lens, block_tables,
+                     req_ids, sample_steps, submodel_ids, seg_ids,
+                     vote_flags, root_key, *, ensembles=False):
+        cparams = cast_tree(params, run.compute_dtype)
+        serve_masks = None
+        if bank_masks is not None:
+            serve_masks = jax.tree.map(lambda m: m[submodel_ids], bank_masks)
+        logits, new_cache = api.paged_step(
+            cparams, cache, tokens, starts, chunk_lens, block_tables,
+            cfg, ctx, serve_masks=serve_masks)
+        if bank_masks is None or not ensembles:  # no combine work this tick
+            sampled = sample(logits, req_ids, sample_steps, root_key)
         else:
-            sampled = jnp.argmax(logits, axis=-1)
+            B = logits.shape[0]
+            lf = logits.astype(f32)
+            ones = jnp.ones((B,), f32)
+            counts = jax.ops.segment_sum(ones, seg_ids, num_segments=B)
+            mean = jax.ops.segment_sum(lf, seg_ids, num_segments=B) \
+                / jnp.maximum(counts, 1.0)[:, None]
+            # mean-logit: ensemble members carry the leader's req_id, so
+            # identical keys sample the identical token from identical
+            # combined logits; a segment of one divides by 1.0 (exact), so
+            # a solo slot sharing the tick samples the same token either way
+            mean_tok = sample(mean[seg_ids], req_ids, sample_steps, root_key)
+            own_tok = sample(lf, req_ids, sample_steps, root_key)
+            votes = jax.ops.segment_sum(
+                jax.nn.one_hot(own_tok, lf.shape[-1], dtype=f32),
+                seg_ids, num_segments=B)
+            vote_tok = jnp.argmax(votes, axis=-1)[seg_ids]
+            sampled = jnp.where(vote_flags, vote_tok, mean_tok)
         return sampled.astype(jnp.int32), new_cache
 
     paxes = api.model_axes(cfg)
     p_shard = tree_shardings(paxes, ctx)
     cache_struct = jax.eval_shape(
         lambda: T.init_paged_cache(cfg, num_pages, page_size))
-    jitted = jax.jit(unified_step,
-                     in_shardings=(p_shard,) + (None,) * 8,
-                     out_shardings=None, donate_argnums=(1,))
-    return jitted, {"params": p_shard, "cache_struct": cache_struct}
+    variants = {
+        flag: jax.jit(partial(unified_step, ensembles=flag),
+                      in_shardings=(p_shard,) + (None,) * 11,
+                      out_shardings=None, donate_argnums=(1,))
+        for flag in (False, True)}
+
+    def step(*args, ensembles: bool = False):
+        return variants[ensembles](*args)
+
+    return step, {"params": p_shard, "cache_struct": cache_struct}
 
 
 def decode_input_specs(run: RunConfig):

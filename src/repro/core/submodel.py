@@ -79,6 +79,33 @@ def materialize(wi: jnp.ndarray, wo: jnp.ndarray, mask_blocks: jnp.ndarray,
     return jnp.take(wi, idx, axis=1), jnp.take(wo, idx, axis=0)
 
 
+def materialize_units(mlp: Dict[str, jnp.ndarray], mask_units: np.ndarray,
+                      *, pad_to: int = 0) -> Dict[str, jnp.ndarray]:
+    """Per-unit sibling of :func:`materialize` for one MLP's params dict
+    ({"wi" [d, ff], "wo" [ff, d], optional "wg" [d, ff]}): gathers the live
+    hidden units of a *fixed* sub-model mask row ([ff] in {0, 1}) and
+    zero-pads the kept axis up to ``pad_to`` columns.
+
+    Zero padding is exact, not approximate: a zero ``wi`` column makes the
+    unit's pre-activation 0, and silu/gelu/relu(0) == 0 (for gated MLPs the
+    gate multiplies a 0 ``up``), so padded units contribute exactly nothing
+    — which is what lets per-layer sub-models with different live counts
+    share one stacked/scanned parameter shape (``ModelBank.materialize``).
+    """
+    idx = np.nonzero(np.asarray(mask_units) > 0)[0]
+    pad = max(0, pad_to - len(idx))
+    out: Dict[str, jnp.ndarray] = {}
+    for name, w in mlp.items():
+        axis = 0 if name == "wo" else 1
+        kept = jnp.take(w, idx, axis=axis)
+        if pad:
+            widths = [(0, 0)] * w.ndim
+            widths[axis] = (0, pad)
+            kept = jnp.pad(kept, widths)
+        out[name] = kept
+    return out
+
+
 def stats(cfg: ModelConfig, horn: HornConfig, key=None,
           num_groups: int = 8) -> Dict[str, float]:
     """Measured (not nominal) compute/memory savings of drawn sub-models."""

@@ -19,6 +19,12 @@ measurement); ``--stream poisson`` is the open-loop latency measurement.
 adversarial mix that used to stall decode for whole-prompt prefills.
 Exits with status 2 only on a genuinely unservable request (EngineOOM:
 one sequence can never fit the pool).
+
+``--submodels G`` serves G Horn parallel circuits (a ModelBank of fixed
+sub-model masks over one shared parent) behind the same engine: requests
+are routed per ``--router`` and co-batch across circuits in every tick;
+``--ensemble-frac`` of requests instead fan across ALL circuits and
+combine logits on device (``--combine``).
 """
 from __future__ import annotations
 
@@ -28,9 +34,10 @@ import time
 
 import numpy as np
 
-from repro.configs.base import get_model_config, list_archs, reduced
+from repro.configs.base import HornConfig, get_model_config, list_archs, \
+    reduced
 from repro.models import api
-from repro.serving import Engine, EngineConfig, EngineOOM
+from repro.serving import Engine, EngineConfig, EngineOOM, ModelBank, Router
 
 
 def make_requests(n: int, vocab_size: int, rng: np.random.Generator, *,
@@ -83,6 +90,21 @@ def main() -> None:
     ap.add_argument("--policy", choices=["reserve", "on_demand"],
                     default="on_demand")
     ap.add_argument("--temperature", type=float, default=0.0)
+    ap.add_argument("--submodels", type=int, default=0,
+                    help="serve G Horn circuits from one ModelBank "
+                         "(0 = single dense parent)")
+    ap.add_argument("--router", choices=["least_loaded", "hash"],
+                    default="least_loaded")
+    ap.add_argument("--ensemble-frac", type=float, default=0.0,
+                    help="fraction of requests fanned across ALL circuits "
+                         "with on-device logit combining")
+    ap.add_argument("--combine", choices=["mean_logit", "majority_vote"],
+                    default="mean_logit")
+    ap.add_argument("--keep", type=float, default=0.5,
+                    help="per-circuit FFN hidden keep rate (paper: 0.5)")
+    ap.add_argument("--mask-block", type=int, default=16,
+                    help="mask block size in hidden units (reduced configs "
+                         "need <= d_ff/4 for distinct circuits)")
     ap.add_argument("--full-config", action="store_true")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
@@ -100,8 +122,16 @@ def main() -> None:
         temperature=args.temperature, seed=args.seed, policy=args.policy)
     import jax
     params = api.model_init(jax.random.key(args.seed), cfg)
+    bank = router = None
+    if args.submodels > 0:
+        if args.submodels > args.slots and args.ensemble_frac > 0:
+            raise SystemExit("ensemble mode needs --slots >= --submodels")
+        horn = HornConfig(enabled=True, keep_hidden=args.keep,
+                          keep_input=1.0, block_size=args.mask_block)
+        bank = ModelBank(cfg, horn, args.submodels, seed=args.seed)
+        router = Router(args.submodels, policy=args.router)
     try:
-        engine = Engine(cfg, params, ecfg)
+        engine = Engine(cfg, params, ecfg, bank=bank, router=router)
     except ValueError as e:
         raise SystemExit(f"{args.arch}: {e}")
 
@@ -110,22 +140,28 @@ def main() -> None:
                             stream=args.stream, rate=args.rate,
                             max_prompt=args.max_prompt, gen=args.gen,
                             long_frac=args.long_frac)
+    sub = f", {args.submodels} submodels ({args.router} routing, " \
+          f"{args.ensemble_frac:.0%} ensemble)" if bank else ""
     print(f"serving {args.requests} requests ({args.stream} stream, "
           f"{args.slots} slots, {args.pages}x{args.page_size}-token pages, "
-          f"budget {ecfg.token_budget} tok/tick, policy={args.policy})")
+          f"budget {ecfg.token_budget} tok/tick, policy={args.policy}{sub})")
 
     t0 = time.monotonic()
     max_running = 0
+    expected = 0
     try:
         while pending or engine.sched.has_work():
             now = time.monotonic() - t0
             while pending and pending[0][0] <= now:
                 at, prompt, gen = pending.pop(0)
+                ens = args.combine if bank is not None \
+                    and rng.uniform() < args.ensemble_frac else None
                 try:
-                    engine.submit(prompt, gen, arrival_time=at)
+                    engine.submit(prompt, gen, arrival_time=at, ensemble=ens)
                 except ValueError as e:
                     print(f"FATAL: infeasible request — {e}", file=sys.stderr)
                     sys.exit(2)
+                expected += args.submodels if ens else 1
             if not engine.sched.has_work():
                 time.sleep(min(0.005, max(0.0, pending[0][0] - now)))
                 continue
@@ -133,24 +169,36 @@ def main() -> None:
                                    tick_clock=lambda: time.monotonic() - t0):
                 pre = f"  ({req.num_preemptions}x preempted)" \
                     if req.num_preemptions else ""
+                tag = f"  sub {req.submodel_id}" if bank else ""
+                if req.group is not None:
+                    tag = f"  ens {req.group.id}/{req.group.combine}" \
+                          f" sub {req.submodel_id}"
                 print(f"  req {req.id:3d} done: prompt {req.prompt_len:3d} "
                       f"+{len(req.out_tokens):3d} tok  "
                       f"ttft {req.t_first_token - req.arrival_time:6.3f}s  "
-                      f"latency {req.t_done - req.arrival_time:6.3f}s{pre}")
+                      f"latency {req.t_done - req.arrival_time:6.3f}s"
+                      f"{tag}{pre}")
             max_running = max(max_running, len(engine.sched.running))
     except EngineOOM as e:
         print(f"FATAL: unservable request — {e}", file=sys.stderr)
         sys.exit(2)
     wall = time.monotonic() - t0
 
-    done = engine.sched.finished
-    assert len(done) == args.requests, (len(done), args.requests)
+    expected = expected if bank else args.requests
+    assert len(engine.sched.finished) == expected, \
+        (len(engine.sched.finished), expected)
+    # an ensemble group delivers ONE stream: count it once (its leader) in
+    # user-facing latency/throughput; device throughput counts members
+    done = engine.finished_streams()
     ttft = [r.t_first_token - r.arrival_time for r in done]
     lat = [r.t_done - r.arrival_time for r in done]
     total_new = sum(len(r.out_tokens) for r in done)
-    print(f"\n{len(done)} requests in {wall:.2f}s  "
+    dev_new = sum(len(r.out_tokens) for r in engine.sched.finished)
+    dev = f" ({dev_new / max(wall, 1e-9):.1f} device tok/s incl. ensemble " \
+          f"members)" if dev_new != total_new else ""
+    print(f"\n{len(done)} requests ({expected} sequences) in {wall:.2f}s  "
           f"(max {max_running}/{args.slots} slots concurrent)")
-    print(f"throughput: {total_new / max(wall, 1e-9):.1f} tok/s "
+    print(f"throughput: {total_new / max(wall, 1e-9):.1f} tok/s{dev} "
           f"({engine.steps} ticks, "
           f"{engine.generated_tokens / max(engine.steps, 1):.1f} tok/tick, "
           f"{engine.prefill_tokens} prefill tok)")
@@ -159,7 +207,15 @@ def main() -> None:
     print(f"latency p50 {percentile(lat, 50):.3f}s  "
           f"p99 {percentile(lat, 99):.3f}s")
     print(f"page-pool peak utilization: {engine.peak_utilization:.0%}  "
-          f"preemptions: {engine.preemptions}")
+          f"preemptions: {engine.preemptions}  "
+          f"block-table rows synced/tick: "
+          f"{engine.bt_rows_synced / max(engine.steps, 1):.2f}")
+    if bank is not None:
+        per = "  ".join(
+            f"sub{g}: {engine.tokens_by_submodel.get(g, 0) / max(wall, 1e-9):6.1f} tok/s"
+            f" (peak util {engine.peak_util_by_submodel.get(g, 0.0):.0%})"
+            for g in range(args.submodels))
+        print(f"co-batch ratio: {engine.cobatch_ratio:.0%}  {per}")
 
 
 if __name__ == "__main__":

@@ -44,11 +44,18 @@ def _decoder_params(params, cfg):
 def forward_hidden(params, batch: Dict[str, Any], cfg: ModelConfig,
                    ctx: ShardingCtx, *, horn=None, mode: str = "train",
                    remat: bool = True, cache=None, cache_index=None,
-                   encoder_out=None, block_tables=None, chunk_lens=None):
-    """Returns (hidden, new_cache, aux, encoder_out)."""
+                   encoder_out=None, block_tables=None, chunk_lens=None,
+                   serve_masks=None):
+    """Returns (hidden, new_cache, aux, encoder_out).
+
+    ``serve_masks`` carries fixed per-slot sub-model masks (multi-submodel
+    serving, see ``transformer.lm_forward``) — decoder-LM-only.
+    """
     if cfg.is_encoder_decoder:
         if block_tables is not None:
             raise ValueError("paged decode is decoder-LM-only")
+        if serve_masks is not None:
+            raise ValueError("sub-model serving masks are decoder-LM-only")
         hidden, new_cache, aux, enc = ED.encdec_forward(
             params, batch.get("frames"), batch["tokens"], cfg, ctx, horn=horn,
             cache=cache, cache_index=cache_index, mode=mode, remat=remat,
@@ -58,7 +65,8 @@ def forward_hidden(params, batch: Dict[str, Any], cfg: ModelConfig,
         params, batch["tokens"], cfg, ctx, horn=horn,
         patch_embeds=batch.get("patch_embeds"), cache=cache,
         cache_index=cache_index, mode=mode, remat=remat,
-        block_tables=block_tables, chunk_lens=chunk_lens)
+        block_tables=block_tables, chunk_lens=chunk_lens,
+        serve_masks=serve_masks)
     return hidden, new_cache, aux, None
 
 
@@ -81,15 +89,19 @@ def model_loss(params, batch, cfg: ModelConfig, ctx: ShardingCtx, *,
 
 
 def prefill(params, batch, cfg: ModelConfig, ctx: ShardingCtx, *,
-            last_index=None):
+            last_index=None, serve_masks=None):
     """Full-sequence forward for serving; returns last-position logits + cache.
 
     ``last_index`` ([B] int32, optional) selects the position whose logits
     are returned — needed when prompts are right-padded to a bucket length
     (the serving engine), where position -1 is a pad token.
+    ``serve_masks`` selects a fixed sub-model per slot (ModelBank row,
+    already gathered) — used by the masked-vs-materialized parity tests and
+    by dense references for the multi-submodel engine.
     """
     hidden, cache, _, enc = forward_hidden(params, batch, cfg, ctx,
-                                           mode="prefill", remat=False)
+                                           mode="prefill", remat=False,
+                                           serve_masks=serve_masks)
     if last_index is None:
         h_last = hidden[:, -1:]
     else:
@@ -101,7 +113,7 @@ def prefill(params, batch, cfg: ModelConfig, ctx: ShardingCtx, *,
 
 
 def paged_step(params, cache, tokens, starts, chunk_lens, block_tables,
-               cfg: ModelConfig, ctx: ShardingCtx):
+               cfg: ModelConfig, ctx: ShardingCtx, *, serve_masks=None):
     """One unified serving tick over paged KV pools: every slot advances by
     a chunk of up to C tokens (decode slots: exactly 1; admitting prompts:
     a prompt chunk; idle slots: 0 — the scheduler packs them into one token
@@ -116,7 +128,7 @@ def paged_step(params, cache, tokens, starts, chunk_lens, block_tables,
     hidden, new_cache, _, _ = forward_hidden(
         params, {"tokens": tokens}, cfg, ctx, mode="decode", remat=False,
         cache=cache, cache_index=starts, block_tables=block_tables,
-        chunk_lens=chunk_lens)
+        chunk_lens=chunk_lens, serve_masks=serve_masks)
     # the lm head runs on one position per slot, not the whole chunk — at
     # vocab 150k+ the [B, C, V] logits would dwarf the forward itself
     last = jnp.take_along_axis(
@@ -127,7 +139,7 @@ def paged_step(params, cache, tokens, starts, chunk_lens, block_tables,
 
 
 def decode_step(params, cache, tokens, cache_index, cfg: ModelConfig,
-                ctx: ShardingCtx, *, encoder_out=None):
+                ctx: ShardingCtx, *, encoder_out=None, serve_masks=None):
     """One-token decode.  tokens: [B, 1]; cache_index: scalar int32 position.
 
     Returns (logits [B, vocab], new_cache).
@@ -137,7 +149,8 @@ def decode_step(params, cache, tokens, cache_index, cfg: ModelConfig,
         raise ValueError("enc-dec decode requires encoder_out")
     hidden, new_cache, _, _ = forward_hidden(
         params, batch, cfg, ctx, mode="decode", remat=False, cache=cache,
-        cache_index=cache_index, encoder_out=encoder_out)
+        cache_index=cache_index, encoder_out=encoder_out,
+        serve_masks=serve_masks)
     dec_params = _decoder_params(params, cfg)
     logits = T.lm_logits(dec_params, hidden, cfg, ctx)
     return logits[:, 0], new_cache

@@ -87,16 +87,35 @@ def lm_axes(cfg: ModelConfig, *, cross: bool = False):
 # ---------------------------------------------------------------------------
 # One block
 # ---------------------------------------------------------------------------
+def _mix_mask(a, b):
+    """Compose two optional multiplicative masks (either may be None)."""
+    if a is None:
+        return b
+    return a if b is None else a * b
+
+
+def _serve_slice(serve_masks, key: str, layer_idx):
+    """Layer ``layer_idx``'s per-slot sub-model mask ([B, units]) from a
+    serve-mask dict, or None.  ``layer_idx`` may be traced (the superblock
+    scan) — the [G-gathered B, L, units] tensor is indexed dynamically."""
+    if serve_masks is None or key not in serve_masks:
+        return None
+    return serve_masks[key][:, layer_idx]
+
+
 def _block_apply(bp, x, cfg: ModelConfig, ctx: ShardingCtx, *, kind: str,
                  is_moe: bool, layer_idx, horn, positions, cache,
                  cache_index, encoder_out=None, causal: bool = True,
-                 block_tables=None, chunk_lens=None):
+                 block_tables=None, chunk_lens=None, serve_masks=None):
     """Returns (x, new_mix_cache, aux)."""
     B = x.shape[0]
     aux: Dict[str, Any] = {}
     h = L.norm_apply(bp["pre_norm"], x, cfg)
     if kind in (ATTN, LOCAL):
         hm = pdrop.head_mask(horn, layer_idx, B, cfg.num_heads)
+        sh = _serve_slice(serve_masks, "heads", layer_idx)
+        if sh is not None:
+            hm = _mix_mask(hm, sh[:, None, :, None])       # [B,1,H,1]
         out, new_mix_cache = attn_apply(
             bp["attn"], h, cfg, ctx, kind=kind, positions=positions,
             cache=cache, cache_index=cache_index, head_mask=hm, causal=causal,
@@ -121,9 +140,15 @@ def _block_apply(bp, x, cfg: ModelConfig, ctx: ShardingCtx, *, kind: str,
         if is_moe:
             mm = pdrop.unit_mask(horn, layer_idx, B, cfg.moe_ff, salt=5)
             mm = None if mm is None else mm[:, None]       # [B,1,1,ff]
+            sm = _serve_slice(serve_masks, "moe", layer_idx)
+            if sm is not None:
+                mm = _mix_mask(mm, sm[:, None, None, :])
             out, aux = L.moe_apply(bp["moe"], h, cfg, ctx, hidden_mask=mm)
         else:
             fm = pdrop.unit_mask(horn, layer_idx, B, cfg.d_ff, salt=5)
+            sf = _serve_slice(serve_masks, "ffn", layer_idx)
+            if sf is not None:
+                fm = _mix_mask(fm, sf[:, None, :])         # [B,1,ff]
             out = L.mlp_apply(bp["mlp"], h, cfg, ctx, hidden_mask=fm)
         if cfg.post_sublayer_norm:
             out = L.norm_apply(bp["post_ffn_norm"], out, cfg)
@@ -230,7 +255,8 @@ def cache_logical_axes(cfg: ModelConfig, cache):
 def lm_forward(params, tokens, cfg: ModelConfig, ctx: ShardingCtx, *,
                horn=None, patch_embeds=None, cache=None, cache_index=None,
                mode: str = "train", remat: bool = True, encoder_out=None,
-               causal: bool = True, block_tables=None, chunk_lens=None):
+               causal: bool = True, block_tables=None, chunk_lens=None,
+               serve_masks=None):
     """Returns (hidden [B,S,d], new_cache or None, aux dict).
 
     mode: "train" (no cache out, remat on) | "prefill" (cache out = full-seq
@@ -242,6 +268,13 @@ def lm_forward(params, tokens, cfg: ModelConfig, ctx: ShardingCtx, *,
     at its own depth) and ``chunk_lens`` [B] (valid tokens of each slot's
     [B, C] chunk); ``cache`` must come from ``init_paged_cache``.  Token j of
     slot b sits at absolute position ``cache_index[b] + j``.
+
+    ``serve_masks`` (multi-submodel serving) is a dict of *fixed per-slot*
+    sub-model masks, already gathered by submodel id: "input" [B, d_model],
+    "ffn" [B, L, d_ff], "moe" [B, L, moe_ff], "heads" [B, L, H] — binary
+    {0, 1}, applied multiplicatively so each slot runs its own Horn circuit
+    of the shared parent weights.  Orthogonal to ``horn`` (train-time
+    stochastic masks); serving passes ``horn=None``.
     """
     decode = mode == "decode"
     x = L.embed_apply(params["embed"], tokens, cfg, ctx)
@@ -259,6 +292,8 @@ def lm_forward(params, tokens, cfg: ModelConfig, ctx: ShardingCtx, *,
     im = pdrop.input_mask(horn, B, cfg.d_model)
     if im is not None:
         x = x * im.astype(x.dtype)
+    if serve_masks is not None and "input" in serve_masks:
+        x = x * serve_masks["input"][:, None, :].astype(x.dtype)
 
     if decode:
         ci = jnp.asarray(cache_index)
@@ -282,7 +317,7 @@ def lm_forward(params, tokens, cfg: ModelConfig, ctx: ShardingCtx, *,
                 cache=None if sb_cache is None else sb_cache[f"l{i}"],
                 cache_index=cache_index, encoder_out=encoder_out,
                 causal=causal, block_tables=block_tables,
-                chunk_lens=chunk_lens)
+                chunk_lens=chunk_lens, serve_masks=serve_masks)
             caches_out[f"l{i}"] = mix_c
             aux_acc = jax.tree.map(jnp.add, aux_acc, _pad_aux(aux))
         return x, aux_acc, caches_out
@@ -319,7 +354,7 @@ def lm_forward(params, tokens, cfg: ModelConfig, ctx: ShardingCtx, *,
                 cache=None if not decode else cache["rem"][f"r{i}"],
                 cache_index=cache_index, encoder_out=encoder_out,
                 causal=causal, block_tables=block_tables,
-                chunk_lens=chunk_lens)
+                chunk_lens=chunk_lens, serve_masks=serve_masks)
             rem_cache[f"r{i}"] = mix_c
             aux0 = jax.tree.map(jnp.add, aux0, _pad_aux(aux))
         if mode != "train":

@@ -1,25 +1,40 @@
-"""Continuous-batching serving engine (paged KV cache + FCFS scheduler).
+"""Continuous-batching serving engine (paged KV cache + FCFS scheduler),
+multi-tenant across Horn's parallel circuits.
 
 Layering (each importable on its own):
 
-  kv_cache.py   host-side page-pool bookkeeping: free list, per-sequence
-                page tables, utilization accounting.  Pure Python — the
-                device-side pools live in the model cache pytree.
-  scheduler.py  FCFS admission queue + slot lifecycle (join on admission,
-                evict on completion / max length, preempt-youngest on pool
-                pressure).
-  engine.py     ties them to the model: one unified token-budget tick per
-                step — decode tokens and chunked-prefill prompt chunks share
-                a single jitted call that appends K/V to the page pool,
-                runs chunked paged attention, and samples every slot's next
-                token on device; latency/TTFT accounting.
+  kv_cache.py    host-side page-pool bookkeeping: free list, per-sequence
+                 page tables, utilization accounting attributable to an
+                 owner tag (the submodel a sequence is routed to).  Pure
+                 Python — the device-side pools live in the model cache
+                 pytree.
+  scheduler.py   FCFS admission queue + slot lifecycle (join on admission,
+                 evict on completion / max length, preempt-youngest on pool
+                 pressure).  Ensemble groups are atomic scheduling units.
+  model_bank.py  G fixed Horn sub-models of one parent (per-layer block
+                 masks drawn once from core/submodel.plan; shared weights,
+                 shared page pool); materialize exports a circuit as
+                 physically smaller weights.
+  router.py      tags each request with a submodel_id: explicit id,
+                 hash-affinity, or least-loaded.
+  engine.py      ties them to the model: one unified token-budget tick per
+                 step — decode tokens and chunked-prefill prompt chunks
+                 from ALL sub-models share a single jitted call that
+                 appends K/V to the page pool, runs chunked paged
+                 attention under per-slot gathered circuit masks, combines
+                 ensemble-group logits on device (mean-logit / majority
+                 vote), and samples every slot's next token on device;
+                 latency/TTFT accounting; incremental block-table row sync.
 
 The device kernel behind it is ``repro.kernels.paged_attention``
 (``paged_chunk_attention``: decode rides as chunk width 1).
 """
 from repro.serving.engine import Engine, EngineConfig, EngineOOM
 from repro.serving.kv_cache import PagePool, PagePoolOOM
-from repro.serving.scheduler import FCFSScheduler, Request
+from repro.serving.model_bank import ModelBank
+from repro.serving.router import Router
+from repro.serving.scheduler import EnsembleGroup, FCFSScheduler, Request
 
-__all__ = ["Engine", "EngineConfig", "EngineOOM", "PagePool", "PagePoolOOM",
-           "FCFSScheduler", "Request"]
+__all__ = ["Engine", "EngineConfig", "EngineOOM", "EnsembleGroup",
+           "FCFSScheduler", "ModelBank", "PagePool", "PagePoolOOM",
+           "Request", "Router"]

@@ -25,12 +25,25 @@ fit the pool even alone.
 Chunk widths are bucketed to powers of two so the unified step compiles
 once per width, not once per chunk length; a decode-only tick runs the
 C == 1 cell, bit-compatible with the classic paged-decode step.
+
+Multi-submodel serving (Horn §2 at inference): pass a ``ModelBank`` and the
+engine serves its G parallel circuits behind the same scheduler and page
+pool — a ``Router`` tags each request with a ``submodel_id``, the unified
+step gathers that slot's fixed circuit masks on device, and tokens from
+different sub-models co-batch in one tick.  ``submit(..., ensemble=...)``
+fans one prompt across all G circuits in lockstep and combines their
+per-step logits on device (mean-logit or majority vote) before sampling —
+the paper's collective ensemble served as one request.
+
+The host->device block-table mirror is synced incrementally: only rows
+whose page tables changed since the last device call are re-uploaded
+(steady decode inside a page uploads nothing).
 """
 from __future__ import annotations
 
 import time
 from dataclasses import dataclass
-from typing import Dict, List, Optional
+from typing import Dict, List, Optional, Tuple, Union
 
 import jax
 import jax.numpy as jnp
@@ -41,7 +54,11 @@ from repro.configs.base import (ATTN, LOCAL, HornConfig, ModelConfig,
 from repro.core import steps as S
 from repro.models import transformer as T
 from repro.serving.kv_cache import PagePool, PagePoolOOM
-from repro.serving.scheduler import FCFSScheduler, Request
+from repro.serving.model_bank import ModelBank
+from repro.serving.router import Router
+from repro.serving.scheduler import EnsembleGroup, FCFSScheduler, Request
+
+COMBINES = ("mean_logit", "majority_vote")
 
 
 class EngineOOM(RuntimeError):
@@ -84,7 +101,8 @@ class _Entry:
 
 class Engine:
     def __init__(self, cfg: ModelConfig, params, ecfg: EngineConfig,
-                 mesh=None):
+                 mesh=None, *, bank: Optional[ModelBank] = None,
+                 router: Optional[Router] = None):
         bad = [k for k in cfg.layer_pattern if k not in (ATTN, LOCAL)]
         if bad or cfg.is_encoder_decoder or cfg.num_patches or cfg.learned_pos:
             raise ValueError(
@@ -98,6 +116,22 @@ class Engine:
                 f"token per slot ({ecfg.num_slots})")
         self.cfg, self.ecfg = cfg, ecfg
         self.params = params
+        self.bank = bank
+        if bank is not None:
+            if bank.cfg != cfg:
+                raise ValueError(
+                    f"bank was built for {bank.cfg.name}, engine serves "
+                    f"{cfg.name}")
+            self.router = router if router is not None \
+                else Router(bank.num_submodels)
+            if self.router.num_submodels != bank.num_submodels:
+                raise ValueError(
+                    f"router spans {self.router.num_submodels} submodels, "
+                    f"bank holds {bank.num_submodels}")
+        elif router is not None:
+            raise ValueError("a Router needs a ModelBank to route over")
+        else:
+            self.router = None
         self.pool = PagePool(ecfg.num_pages, ecfg.page_size)
         self.sched = FCFSScheduler(ecfg.num_slots, self.pool,
                                    policy=ecfg.policy)
@@ -110,7 +144,8 @@ class Engine:
                         compute_dtype=ecfg.compute_dtype)
         self._step, _ = S.make_unified_paged_step(
             run, mesh, num_pages=ecfg.num_pages, page_size=ecfg.page_size,
-            temperature=ecfg.temperature)
+            temperature=ecfg.temperature,
+            bank_masks=bank.device_masks() if bank is not None else None)
         self.cache = T.init_paged_cache(cfg, ecfg.num_pages, ecfg.page_size,
                                         dtype=jnp.dtype(ecfg.kv_dtype))
 
@@ -120,17 +155,38 @@ class Engine:
         # max_model_len - 1 kv tokens) just takes one extra tick instead of
         # minting a wider compile cell no warmup sweep would have seen
         self.max_chunk = min(ecfg.token_budget, ecfg.max_prompt_len)
-        self._block_tables = np.zeros((B, self.max_pages_per_seq), np.int32)
+        # incremental block-table sync: the device-resident table is the
+        # source the step reads; a host mirror plus per-slot sync state
+        # ((req_id, admit_seq, pages)) decides which ROWS changed since the
+        # last device call — only those are re-uploaded.  admit_seq is part
+        # of the key so a preempt/re-admit cycle that lands the same request
+        # back in its old slot with the same page COUNT (but different page
+        # ids) still reads as dirty.
+        self._bt_host = np.zeros((B, self.max_pages_per_seq), np.int32)
+        self._bt_dev = jnp.asarray(self._bt_host)
+        self._bt_state: List[Optional[Tuple[int, int, int]]] = [None] * B
         self._root_key = jax.random.key(ecfg.seed)
         self._next_id = 0
+        self._next_group_id = 0
         self.steps = 0
         self.generated_tokens = 0
         self.prefill_tokens = 0
         self.peak_utilization = 0.0
+        self.bt_rows_synced = 0
+        self.ticks_nonempty = 0
+        self.ticks_cobatched = 0
+        self.tokens_by_submodel: Dict[int, int] = {}
+        self.peak_util_by_submodel: Dict[int, float] = {}
 
     @property
     def preemptions(self) -> int:
         return self.sched.preemptions
+
+    @property
+    def cobatch_ratio(self) -> float:
+        """Fraction of non-empty ticks whose single jitted call carried
+        tokens from >= 2 distinct sub-models (the multi-submodel win)."""
+        return self.ticks_cobatched / max(1, self.ticks_nonempty)
 
     def reset_stats(self) -> None:
         """Zero the serving counters without touching compile caches or the
@@ -141,12 +197,24 @@ class Engine:
         self.generated_tokens = 0
         self.prefill_tokens = 0
         self.peak_utilization = 0.0
+        self.bt_rows_synced = 0
+        self.ticks_nonempty = 0
+        self.ticks_cobatched = 0
+        self.tokens_by_submodel.clear()
+        self.peak_util_by_submodel.clear()
         self.sched.preemptions = 0
         self.sched.finished.clear()
 
     # -- request intake ------------------------------------------------------
     def submit(self, prompt, max_new_tokens: Optional[int] = None,
-               arrival_time: float = 0.0) -> Request:
+               arrival_time: float = 0.0, *,
+               submodel_id: Optional[int] = None, session=None,
+               ensemble: Optional[str] = None
+               ) -> Union[Request, EnsembleGroup]:
+        """Queue one request.  With a ModelBank attached, the Router picks
+        (or validates) the circuit; ``ensemble`` ("mean_logit" |
+        "majority_vote") instead fans the prompt across ALL G circuits as
+        one lockstep group and returns the EnsembleGroup."""
         prompt = np.asarray(prompt, np.int32).reshape(-1)
         if not 0 < len(prompt) <= self.ecfg.max_prompt_len:
             raise ValueError(
@@ -154,37 +222,114 @@ class Engine:
                 f"{self.ecfg.max_prompt_len}]")
         mnt = min(max_new_tokens or self.ecfg.max_new_tokens,
                   self.ecfg.max_new_tokens)
+
+        if ensemble is not None:
+            if self.bank is None:
+                raise ValueError("ensemble mode requires a ModelBank")
+            if submodel_id is not None or session is not None:
+                raise ValueError(
+                    "ensemble fans across ALL circuits — submodel_id/"
+                    "session routing hints conflict with it")
+            if ensemble not in COMBINES:
+                raise ValueError(
+                    f"unknown combine {ensemble!r}; known: {COMBINES}")
+            G = self.bank.num_submodels
+            if G > self.ecfg.num_slots:
+                raise ValueError(
+                    f"ensemble needs {G} slots (one per circuit) but the "
+                    f"engine has {self.ecfg.num_slots}")
+            group = EnsembleGroup(id=self._next_group_id, combine=ensemble)
+            self._next_group_id += 1
+            group.members = [
+                Request(id=self._next_id + g, prompt=prompt,
+                        max_new_tokens=mnt, arrival_time=arrival_time,
+                        eos_id=self.ecfg.eos_id, submodel_id=g, group=group)
+                for g in range(G)]
+            self._check_feasible(group.members[0])
+            self._next_id += G
+            if self.router is not None:
+                for g in range(G):
+                    self.router.acquire(g)
+            for req in group.members:
+                self.sched.submit(req)
+            return group
+
         req = Request(id=self._next_id, prompt=prompt, max_new_tokens=mnt,
                       arrival_time=arrival_time, eos_id=self.ecfg.eos_id)
-        # reject requests that could never be admitted even into an empty
-        # pool — otherwise they'd pin the FCFS head and the drive loop would
-        # spin forever waiting for pages that cannot exist
-        need = self.sched.admission_pages(req)
+        self._check_feasible(req)
+        if self.bank is not None:
+            req.submodel_id = self.router.route(
+                submodel_id=submodel_id, session=session, prompt=prompt)
+        elif submodel_id not in (None, 0):
+            raise ValueError("submodel routing requires a ModelBank")
+        self._next_id += 1
+        self.sched.submit(req)
+        return req
+
+    def _check_feasible(self, req: Request) -> None:
+        """Reject requests that could never be admitted even into an empty
+        pool — otherwise they'd pin the FCFS head and the drive loop would
+        spin forever waiting for pages that cannot exist."""
+        need = self._admission_need(req)
         if need > self.pool.capacity:
             raise ValueError(
                 f"request needs {need} page(s) at admission "
                 f"(policy={self.ecfg.policy}) but the pool has only "
                 f"{self.pool.capacity}; raise num_pages or shrink "
                 f"prompt/max_new_tokens")
-        self._next_id += 1
-        self.sched.submit(req)
-        return req
+
+    def _admission_need(self, req: Request) -> int:
+        """Pages the whole scheduling unit (solo, or every ensemble member)
+        needs free to admit."""
+        unit = req.group.members if req.group is not None else [req]
+        return sum(self.sched.admission_pages(r) for r in unit)
 
     # -- internals -----------------------------------------------------------
     def _chunk_bucket(self, n: int) -> int:
         """Power-of-two chunk-width bucket (bounds unified-step retraces)."""
         return 1 << max(0, int(n - 1).bit_length())
 
-    def _sync_slot(self, req: Request) -> None:
-        """Mirror the pool's page table into the device block-table row."""
-        table = self.pool.table(req.id)
-        row = self._block_tables[req.slot]
-        row[:] = 0
-        row[:len(table)] = table
+    def _sync_block_tables(self) -> None:
+        """Re-upload only the block-table ROWS whose page sets changed since
+        the last device call (new pages appended, slot re-assigned, slot
+        vacated).  Steady decode within a page uploads nothing and reuses
+        the same device array."""
+        dirty: List[int] = []
+        for slot in range(self.ecfg.num_slots):
+            req = self.sched.running.get(slot)
+            if req is None:
+                if self._bt_state[slot] is not None:
+                    self._bt_host[slot] = 0       # vacated -> null page
+                    self._bt_state[slot] = None
+                    dirty.append(slot)
+                continue
+            table = self.pool.table(req.id)
+            state = (req.id, req.admit_seq, len(table))
+            if self._bt_state[slot] == state:
+                continue
+            row = self._bt_host[slot]
+            row[:] = 0
+            row[:len(table)] = table
+            self._bt_state[slot] = state
+            dirty.append(slot)
+        if dirty:
+            idx = np.asarray(dirty, np.int32)
+            self._bt_dev = self._bt_dev.at[jnp.asarray(idx)].set(
+                jnp.asarray(self._bt_host[idx]))
+            self.bt_rows_synced += len(dirty)
 
     def _sample_peak(self) -> None:
         self.peak_utilization = max(self.peak_utilization,
                                     self.pool.utilization())
+        if self.bank is not None:
+            for owner, util in self.pool.utilization_by_owner().items():
+                if util > self.peak_util_by_submodel.get(owner, 0.0):
+                    self.peak_util_by_submodel[owner] = util
+
+    def _release(self, done: List[Request]) -> None:
+        if self.router is not None:
+            for req in done:
+                self.router.release(req.submodel_id)
 
     def _clock(self, now: Optional[float]) -> float:
         return time.monotonic() if now is None else now
@@ -222,23 +367,38 @@ class Engine:
                 chunk_len=1, sample_step=len(req.out_tokens), record=True)
             budget -= 1
         # prompt chunks soak up whatever budget the decode tokens left,
-        # oldest admission first (it holds pages; finish it soonest)
+        # oldest admission first (it holds pages; finish it soonest).
+        # Ensemble groups advance in LOCKSTEP: every member gets the same
+        # chunk width this tick (identical prompts + identical prefill_pos),
+        # so all members finish prefill in the same tick and their combined
+        # logits produce the group's first token together.
         prefill.sort(key=lambda sr: sr[1].admit_seq)
+        planned_groups = set()
         for slot, req in prefill:
-            kv = req.kv_tokens
-            want = len(kv) - req.prefill_pos
-            cl = min(want, max(budget, 0), self.max_chunk)
+            if req.group is not None:
+                if req.group.id in planned_groups:
+                    continue
+                planned_groups.add(req.group.id)
+                unit = [(m.slot, m) for m in req.group.members]
+            else:
+                unit = [(slot, req)]
+            n = len(unit)
+            want = len(unit[0][1].kv_tokens) - unit[0][1].prefill_pos
+            cl = min(want, max(budget, 0) // n, self.max_chunk)
             if cl <= 0:
                 continue                          # budget exhausted this tick
-            finishes = req.prefill_pos + cl == len(kv)
-            entries[slot] = _Entry(
-                req=req, start=req.prefill_pos,
-                tokens=kv[req.prefill_pos:req.prefill_pos + cl],
-                chunk_len=cl, sample_step=0,
-                # the chunk that completes a *fresh* prompt yields the first
-                # token; a preempted request's next token is already known
-                record=finishes and not req.out_tokens)
-            budget -= cl
+            for s, r in unit:
+                kv = r.kv_tokens
+                finishes = r.prefill_pos + cl == len(kv)
+                entries[s] = _Entry(
+                    req=r, start=r.prefill_pos,
+                    tokens=kv[r.prefill_pos:r.prefill_pos + cl],
+                    chunk_len=cl, sample_step=0,
+                    # the chunk that completes a *fresh* prompt yields the
+                    # first token; a preempted request's next token is
+                    # already known
+                    record=finishes and not r.out_tokens)
+            budget -= cl * n
         return entries
 
     # -- one engine tick -----------------------------------------------------
@@ -255,27 +415,30 @@ class Engine:
         self._sample_peak()                       # admissions allocate pages
         done = self.sched.evict_finished(tick_now())  # e.g. max_new_tokens==1
         if not self.sched.running:
-            self._null_empty_slots()
             if self.sched.waiting:
                 # a preempted request's context can outgrow the whole pool;
                 # with nothing running and the FCFS head unadmittable even
                 # into an empty pool, the drive loop would spin forever
                 head = self.sched.waiting[0]
-                need = self.sched.admission_pages(head)
+                need = self._admission_need(head)
                 if need > self.pool.capacity:
+                    self._release(done)   # don't leak router loads on raise
                     raise EngineOOM(
                         f"request {head.id} needs {need} page(s) to "
                         f"re-admit but the pool has only "
                         f"{self.pool.capacity}; its context can never "
                         f"fit — raise --pages or lower --gen")
+            self._release(done)
             return done
 
-        entries = self._plan_tick()
+        try:
+            entries = self._plan_tick()
+        except EngineOOM:
+            self._release(done)           # don't leak router loads on raise
+            raise
         self._sample_peak()                       # decode growth allocates too
-        self._null_empty_slots()                  # preemption vacates slots
-        for slot in entries:
-            self._sync_slot(self.sched.running[slot])
         if not entries:                           # nothing runnable this tick
+            self._release(done)
             return done
 
         B = self.ecfg.num_slots
@@ -285,18 +448,40 @@ class Engine:
         chunk_lens = np.zeros((B,), np.int32)
         req_ids = np.zeros((B,), np.int32)
         sample_steps = np.zeros((B,), np.int32)
+        submodel_ids = np.zeros((B,), np.int32)
+        seg_ids = np.arange(B, dtype=np.int32)    # solo: own segment
+        vote_flags = np.zeros((B,), bool)
         for slot, e in entries.items():
             tokens[slot, :e.chunk_len] = e.tokens
             starts[slot] = e.start
             chunk_lens[slot] = e.chunk_len
             req_ids[slot] = e.req.id
             sample_steps[slot] = e.sample_step
+            submodel_ids[slot] = e.req.submodel_id
+            group = e.req.group
+            if group is not None:
+                seg_ids[slot] = group.leader.slot
+                if group.combine == "majority_vote":
+                    vote_flags[slot] = True       # members sample, then vote
+                else:
+                    # mean-logit: one sampling key per group -> one draw
+                    req_ids[slot] = group.leader.id
 
+        self.ticks_nonempty += 1
+        if len({e.req.submodel_id for e in entries.values()}) > 1:
+            self.ticks_cobatched += 1
+        self._sync_block_tables()
+
+        # ticks without an ensemble group skip the on-device combine
+        # entirely (static jit arg: one extra compile per bucket at most)
+        ensembles = any(e.req.group is not None for e in entries.values())
         sampled, self.cache = self._step(
             self.params, self.cache, jnp.asarray(tokens),
             jnp.asarray(starts), jnp.asarray(chunk_lens),
-            jnp.asarray(self._block_tables), jnp.asarray(req_ids),
-            jnp.asarray(sample_steps), self._root_key)
+            self._bt_dev, jnp.asarray(req_ids),
+            jnp.asarray(sample_steps), jnp.asarray(submodel_ids),
+            jnp.asarray(seg_ids), jnp.asarray(vote_flags), self._root_key,
+            ensembles=ensembles)
         sampled = np.asarray(sampled)             # forces the tick
         self.steps += 1
         post = tick_now()
@@ -309,15 +494,22 @@ class Engine:
             if e.record:
                 self.sched.record_token(slot, int(sampled[slot]), post)
                 self.generated_tokens += 1
+                sid = req.submodel_id
+                self.tokens_by_submodel[sid] = \
+                    self.tokens_by_submodel.get(sid, 0) + 1
 
         finished = self.sched.evict_finished(post)
-        self._null_empty_slots()
+        self._release(done + finished)
         return done + finished
 
-    def _null_empty_slots(self) -> None:
-        """Point every vacated slot's block-table row at the null page."""
-        for slot in set(range(self.ecfg.num_slots)) - set(self.sched.running):
-            self._block_tables[slot] = 0
+    def finished_streams(self) -> List[Request]:
+        """Finished requests deduplicated to one per delivered token
+        stream: solo requests plus one leader per ensemble group (every
+        member carries the identical combined stream).  User-facing
+        latency/throughput accounting should use this; device-side token
+        counts still sum over all of ``sched.finished``."""
+        return [r for r in self.sched.finished
+                if r.group is None or r is r.group.leader]
 
     def run(self, *, clock=None) -> List[Request]:
         """Drive until every submitted request has finished."""

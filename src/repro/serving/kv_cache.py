@@ -6,10 +6,14 @@ sequence owns.  Page ids are layer-agnostic — one allocation covers every
 layer's pool, so the free list is a single flat structure regardless of
 depth.  Page 0 is reserved as the null page: empty decode slots point their
 block-table rows at it and their garbage writes land there harmlessly.
+
+Allocations carry an optional *owner* tag (the serving engine passes the
+request's submodel id) so pool pressure is attributable: when G sub-models
+share one pool, ``utilization_by_owner`` says which circuit is squeezing it.
 """
 from __future__ import annotations
 
-from typing import Dict, List
+from typing import Dict, Hashable, List, Optional
 
 
 class PagePoolOOM(RuntimeError):
@@ -29,6 +33,7 @@ class PagePool:
         # LIFO free list, low ids first off the stack (page 0 never enters)
         self._free: List[int] = list(range(num_pages - 1, 0, -1))
         self._tables: Dict[int, List[int]] = {}
+        self._owners: Dict[int, Hashable] = {}      # seq_id -> owner tag
 
     # -- accounting ---------------------------------------------------------
     @property
@@ -48,6 +53,16 @@ class PagePool:
         """Fraction of allocatable pages currently owned by sequences."""
         return self.used_pages / self.capacity
 
+    def utilization_by_owner(self) -> Dict[Hashable, float]:
+        """Per-owner fraction of allocatable pages (owners are the tags
+        passed at ``alloc``/``alloc_pages`` time; untagged sequences pool
+        under ``None``).  Values sum to ``utilization()``."""
+        out: Dict[Hashable, float] = {}
+        for seq_id, table in self._tables.items():
+            owner = self._owners.get(seq_id)
+            out[owner] = out.get(owner, 0.0) + len(table) / self.capacity
+        return out
+
     def pages_for(self, num_tokens: int) -> int:
         return -(-num_tokens // self.page_size)       # ceil div
 
@@ -55,20 +70,24 @@ class PagePool:
         return len(self._free) >= n_pages
 
     # -- allocation ---------------------------------------------------------
-    def alloc(self, seq_id: int, num_tokens: int) -> List[int]:
+    def alloc(self, seq_id: int, num_tokens: int,
+              owner: Optional[Hashable] = None) -> List[int]:
         """Register ``seq_id`` and allocate pages for its first
         ``num_tokens`` tokens.  Returns the page table (a live view)."""
         if seq_id in self._tables:
             raise ValueError(f"sequence {seq_id} already allocated")
         self._tables[seq_id] = []
+        self._owners[seq_id] = owner
         try:
             self.ensure(seq_id, num_tokens)
         except PagePoolOOM:
             del self._tables[seq_id]
+            del self._owners[seq_id]
             raise
         return self._tables[seq_id]
 
-    def alloc_pages(self, seq_id: int, n_pages: int) -> List[int]:
+    def alloc_pages(self, seq_id: int, n_pages: int,
+                    owner: Optional[Hashable] = None) -> List[int]:
         """Register ``seq_id`` and allocate exactly ``n_pages`` pages — the
         pages-denominated sibling of ``alloc`` (admission policies think in
         pages; round-tripping pages -> tokens -> pages invites off-by-ones).
@@ -81,6 +100,7 @@ class PagePool:
                 f"at admission, {len(self._free)} free of "
                 f"{self.num_pages - 1} ({self.utilization():.0%} utilized)")
         self._tables[seq_id] = [self._free.pop() for _ in range(n_pages)]
+        self._owners[seq_id] = owner
         return self._tables[seq_id]
 
     def ensure(self, seq_id: int, num_tokens: int) -> List[int]:
@@ -101,6 +121,7 @@ class PagePool:
     def free_seq(self, seq_id: int) -> int:
         """Return all of ``seq_id``'s pages to the free list."""
         table = self._tables.pop(seq_id)
+        self._owners.pop(seq_id, None)
         self._free.extend(reversed(table))
         return len(table)
 
@@ -121,3 +142,5 @@ class PagePool:
         assert not overlap, f"pages both free and owned: {overlap}"
         assert len(owned) + len(self._free) == self.num_pages - 1, \
             "pages leaked or duplicated"
+        assert set(self._owners) == set(self._tables), \
+            "owner registry out of sync with page tables"

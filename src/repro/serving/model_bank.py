@@ -1,0 +1,174 @@
+"""ModelBank: G fixed Horn sub-models ("parallel circuits") of one parent.
+
+Horn trains disconnected sub-models that share the parent's weights (paper
+§2); this module is the *serving-side* registry of those circuits.  Each
+sub-model is a fixed, deterministic draw of per-layer block masks over the
+axes ``core/submodel.plan`` names (FFN hidden units, MoE expert hidden
+units, optional attention heads, optional embedding channels) — the same
+``group_block_mask`` the trainer uses, but drawn ONCE per bank (seeded),
+not per step.  All G circuits share:
+
+  * one parent parameter pytree (masks select each circuit's subnetwork);
+  * one device page pool — per-slot masks are gathered by ``submodel_id``
+    *inside* the jitted unified serving step, so tokens from different
+    circuits co-batch in the same tick.
+
+Masks are stored as {0., 1.} (NOT inverted-dropout 1/keep): a served
+circuit is the paper's materializable sub-model, and ``materialize`` must
+produce byte-equivalent logits from physically smaller weights — the train
+-time 1/keep scale is a variance correction for the stochastic ensemble,
+not part of any one circuit.
+
+``materialize`` realizes the paper's memory claim for deployment: a
+keep-0.5 circuit's FFN weights exported at roughly half size (zero-padded
+to the widest layer so scanned superblocks keep one stacked shape).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import HornConfig, ModelConfig
+from repro.core import submodel as SM
+from repro.core.parallel_dropout import expand_units, group_block_mask
+
+f32 = jnp.float32
+
+# plan() axis name -> serve-mask key consumed by transformer.lm_forward
+_AXIS_KEY = {"ffn_hidden": "ffn", "moe_hidden": "moe",
+             "attn_heads": "heads", "input_embed": "input"}
+# mask keys whose draw is independent per layer (vs. one draw for the bank)
+_PER_LAYER = {"ffn", "moe", "heads"}
+
+
+def _expand_blocks(mb: np.ndarray, units: int) -> np.ndarray:
+    """[G, n_blocks] {0,1} block mask -> [G, units] unit mask, through the
+    SAME block->unit rule the train-time masks use (one source of truth in
+    ``parallel_dropout.expand_units``)."""
+    return np.asarray(expand_units(jnp.asarray(mb), units))
+
+
+class ModelBank:
+    """G sub-models of one parent, addressable by ``submodel_id`` in
+    ``[0, num_submodels)``.  ``masks`` maps serve-mask keys to binary
+    arrays: "input" [G, d_model]; "ffn" [G, L, d_ff]; "moe" [G, L, moe_ff];
+    "heads" [G, L, H] — only the axes the Horn config actually masks exist.
+    """
+
+    def __init__(self, cfg: ModelConfig, horn: HornConfig,
+                 num_submodels: int, *, seed: int = 0):
+        if num_submodels < 1:
+            raise ValueError("need at least one submodel")
+        if cfg.ssm_state:
+            raise ValueError(
+                "ModelBank serves attention LMs (SSM channel masks are "
+                "train-only; paged serving rejects SSM mixers anyway)")
+        self.cfg, self.horn, self.seed = cfg, horn, seed
+        self.num_submodels = num_submodels
+        self.masks: Dict[str, np.ndarray] = {}
+        self._device: Optional[Dict[str, jnp.ndarray]] = None
+
+        G, L = num_submodels, cfg.num_layers
+        base = jax.random.fold_in(jax.random.key(seed), horn.seed_salt)
+        for ai, axis in enumerate(SM.plan(cfg, horn)):
+            key = _AXIS_KEY.get(axis.name)
+            if key is None or axis.keep >= 1.0:
+                continue
+            k_ax = jax.random.fold_in(base, ai)
+            if key in _PER_LAYER:
+                rows = [_expand_blocks(
+                    np.asarray(group_block_mask(
+                        jax.random.fold_in(k_ax, li), G, axis.units,
+                        axis.keep, axis.block_size)) > 0, axis.units)
+                    for li in range(L)]
+                self.masks[key] = np.stack(rows, axis=1).astype(np.float32)
+            else:
+                mb = np.asarray(group_block_mask(
+                    k_ax, G, axis.units, axis.keep, axis.block_size)) > 0
+                self.masks[key] = _expand_blocks(
+                    mb, axis.units).astype(np.float32)
+        if not self.masks:
+            raise ValueError(
+                "bank has no masked axes (every keep rate >= 1.0) — G "
+                "identical dense circuits; lower keep_hidden/keep_input")
+
+    # -- serving ------------------------------------------------------------
+    def device_masks(self) -> Dict[str, jnp.ndarray]:
+        """The mask tensors the unified step gathers per slot (f32 on
+        device, cached).  Never empty: __init__ rejects a bank with no
+        masked axis."""
+        if self._device is None:
+            self._device = {k: jnp.asarray(v, f32)
+                            for k, v in self.masks.items()}
+        return self._device
+
+    def subset(self, ids: Sequence[int]) -> "ModelBank":
+        """A bank view holding only ``ids`` (same mask rows, re-indexed
+        from 0) — e.g. ``bank.subset([g])`` builds the dedicated one-model
+        bank the routed-parity tests compare against."""
+        sub = object.__new__(ModelBank)
+        sub.cfg, sub.horn, sub.seed = self.cfg, self.horn, self.seed
+        sub.num_submodels = len(ids)
+        sub.masks = {k: v[np.asarray(ids)] for k, v in self.masks.items()}
+        sub._device = None
+        return sub
+
+    # -- export (paper's memory-reduction claim) ----------------------------
+    def materialize(self, g: int, params) -> Tuple[ModelConfig, dict]:
+        """Extract circuit ``g`` as a standalone model with *physically
+        smaller* FFN weights: (small_cfg, small_params) whose forward is
+        logit-equivalent to the masked parent forward of submodel ``g``.
+
+        FFN-only by construction — a bank that also masks embedding
+        channels or attention heads cannot be shrunk this way (those masks
+        keep the tensor shapes), so it is rejected rather than silently
+        exporting the wrong model.  Per-layer live counts differ, so every
+        layer is zero-padded to the widest kept width (exact: see
+        ``submodel.materialize_units``) and the scanned superblock keeps
+        one stacked shape.
+        """
+        if not 0 <= g < self.num_submodels:
+            raise ValueError(f"submodel {g} not in bank of "
+                             f"{self.num_submodels}")
+        extra = set(self.masks) - {"ffn"}
+        if extra:
+            raise ValueError(
+                f"materialize is FFN-only; bank also masks {sorted(extra)}")
+        if "ffn" not in self.masks:
+            raise ValueError("bank has no FFN masks (keep_hidden >= 1?)")
+        cfg = self.cfg
+        if any(cfg.layer_is_moe(i) for i in range(cfg.num_layers)):
+            raise ValueError("materialize does not support MoE layers")
+
+        rows = self.masks["ffn"][g]                     # [L, d_ff]
+        ffk = int(max((row > 0).sum() for row in rows))
+        new_params = jax.tree.map(lambda x: x, params)  # fresh containers
+        pat = cfg.layer_pattern
+        R = cfg.pattern_repeats
+        if R:
+            for i in range(len(pat)):
+                bp = new_params["blocks"][f"l{i}"]
+                per_r = [SM.materialize_units(
+                    {k: w[r] for k, w in bp["mlp"].items()},
+                    rows[r * len(pat) + i], pad_to=ffk)
+                    for r in range(R)]
+                bp["mlp"] = {k: jnp.stack([m[k] for m in per_r])
+                             for k in per_r[0]}
+        for i in range(cfg.pattern_remainder):
+            rp = new_params["rem"][f"r{i}"]
+            rp["mlp"] = SM.materialize_units(
+                rp["mlp"], rows[R * len(pat) + i], pad_to=ffk)
+        small_cfg = dataclasses.replace(cfg, d_ff=ffk,
+                                        name=f"{cfg.name}-sub{g}")
+        return small_cfg, new_params
+
+    # -- reporting ----------------------------------------------------------
+    def kept_fractions(self) -> Dict[str, List[float]]:
+        """Per-submodel mean kept fraction per masked axis (bench/report)."""
+        return {k: [float((v[g] > 0).mean())
+                    for g in range(self.num_submodels)]
+                for k, v in self.masks.items()}

@@ -40,6 +40,8 @@ class Request:
     max_new_tokens: int
     arrival_time: float = 0.0
     eos_id: Optional[int] = None
+    submodel_id: int = 0                # which ModelBank circuit serves this
+    group: Optional["EnsembleGroup"] = None   # set for ensemble members
 
     # runtime (engine/scheduler-owned)
     slot: Optional[int] = None
@@ -92,6 +94,44 @@ class Request:
         return len(self.out_tokens) >= self.max_new_tokens
 
 
+@dataclass
+class EnsembleGroup:
+    """One prompt fanned across every circuit of a ModelBank (paper §2's
+    collective ensemble at inference): G member requests, one per submodel,
+    advance in lockstep and share one combined token stream.
+
+    Members are scheduled as an atomic unit — admitted together (G slots +
+    pages for every member, or none), preempted together, finished together.
+    Per-step logits are combined *on device* inside the unified step
+    (``combine``: mean of member logits, or a majority vote over member
+    samples), so every member records the same token and their KV states
+    stay consistent with the shared stream.  Member KV pages are NOT shared:
+    each circuit's masked weights produce different K/V for the same tokens
+    (pages could only be shared between circuits with identical masks)."""
+
+    id: int
+    combine: str                        # "mean_logit" | "majority_vote"
+    members: List[Request] = field(default_factory=list)
+
+    @property
+    def leader(self) -> Request:
+        return self.members[0]
+
+    @property
+    def out_tokens(self) -> List[int]:
+        return self.leader.out_tokens
+
+    @property
+    def finished(self) -> bool:
+        return all(m.finished for m in self.members)
+
+
+def _unit(req: Request) -> List[Request]:
+    """The atomic scheduling unit ``req`` belongs to (its whole ensemble
+    group, or just itself)."""
+    return req.group.members if req.group is not None else [req]
+
+
 class FCFSScheduler:
     """First-come-first-served admission into ``num_slots`` decode slots."""
 
@@ -129,22 +169,31 @@ class FCFSScheduler:
     def admit(self, now: float) -> List[Request]:
         """Move FCFS-head requests into free slots while the pool allows.
         Strict FCFS: if the head doesn't fit, nothing behind it jumps the
-        queue (no head-of-line bypass — keeps latency ordering honest)."""
+        queue (no head-of-line bypass — keeps latency ordering honest).
+        Ensemble groups admit atomically: the whole unit needs a slot and
+        pages for every member, or nothing moves."""
         admitted = []
         while self.waiting and self._free_slots:
-            req = self.waiting[0]
-            need = self.admission_pages(req)
-            if not self.pool.can_alloc(need):
+            unit = _unit(self.waiting[0])
+            if len(unit) > len(self._free_slots):
                 break
-            self.waiting.popleft()
-            req.slot = self._free_slots.pop()
-            req.t_admitted = now
-            req.admit_seq = self._admit_counter
-            self._admit_counter += 1
-            req.prefill_pos = 0
-            self.pool.alloc_pages(req.id, need)
-            self.running[req.slot] = req
-            admitted.append(req)
+            # group members sit contiguously at the queue head (submitted
+            # together; preemption pushes the whole unit back together)
+            assert all(self.waiting[i] is r for i, r in enumerate(unit)), \
+                "ensemble members not contiguous at queue head"
+            needs = [self.admission_pages(r) for r in unit]
+            if not self.pool.can_alloc(sum(needs)):
+                break
+            for req, need in zip(unit, needs):
+                self.waiting.popleft()
+                req.slot = self._free_slots.pop()
+                req.t_admitted = now
+                req.admit_seq = self._admit_counter
+                self._admit_counter += 1
+                req.prefill_pos = 0
+                self.pool.alloc_pages(req.id, need, owner=req.submodel_id)
+                self.running[req.slot] = req
+                admitted.append(req)
         return admitted
 
     def grow(self, req: Request) -> List[int]:
@@ -156,27 +205,34 @@ class FCFSScheduler:
         return self.pool.ensure(req.id, req.context_len)
 
     def preempt_youngest(self) -> Optional[Request]:
-        """Evict the most recently admitted running sequence back to the
-        HEAD of the waiting queue: its pages return to the free list and its
-        KV is recomputed on re-admission via chunked prefill.  Returns the
-        victim, or None when fewer than two sequences run (evicting the
-        sole survivor could never free pages for it — that is a genuine,
+        """Evict the most recently admitted running scheduling unit (a solo
+        sequence, or a whole ensemble group) back to the HEAD of the waiting
+        queue: its pages return to the free list and its KV is recomputed on
+        re-admission via chunked prefill.  Returns the victim (a group's
+        leader), or None when fewer than two units run (evicting the sole
+        survivor could never free pages for it — that is a genuine,
         unservable OOM the engine must surface)."""
-        if len(self.running) < 2:
+        units: Dict[int, List[Request]] = {}      # keyed by leader id
+        for req in self.running.values():
+            units.setdefault(_unit(req)[0].id, _unit(req))
+        if len(units) < 2:
             return None
-        victim = max(self.running.values(), key=lambda r: r.admit_seq)
-        del self.running[victim.slot]
-        self._free_slots.append(victim.slot)
-        self.pool.free_seq(victim.id)
-        victim.slot = None
-        victim.prefill_pos = 0
-        victim.num_preemptions += 1
+        victims = max(units.values(),
+                      key=lambda u: max(r.admit_seq for r in u))
         self.preemptions += 1
         # appendleft keeps FCFS order when several preemptions stack up in
         # one tick: younger victims are pushed first and end up behind the
-        # older ones preempted after them
-        self.waiting.appendleft(victim)
-        return victim
+        # older ones preempted after them; reversed() keeps a group's
+        # members in member order at the head
+        for victim in reversed(victims):
+            del self.running[victim.slot]
+            self._free_slots.append(victim.slot)
+            self.pool.free_seq(victim.id)
+            victim.slot = None
+            victim.prefill_pos = 0
+            victim.num_preemptions += 1
+            self.waiting.appendleft(victim)
+        return victims[0]
 
     def record_token(self, slot: int, token: int, now: float) -> None:
         req = self.running[slot]

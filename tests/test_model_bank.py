@@ -1,0 +1,354 @@
+"""Multi-submodel serving tests: ModelBank mask/materialize parity, Router
+policies, per-owner pool accounting, routed decode byte-identical to a
+dedicated one-model engine (with >= 2 sub-models co-batched in one jitted
+tick), on-device ensemble combine vs a dense per-circuit reference, and the
+incremental block-table row sync.
+"""
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.configs.base import HornConfig, get_model_config, reduced
+from repro.core.steps import make_ctx
+from repro.models import api
+from repro.models import transformer as T
+from repro.serving import (Engine, EngineConfig, ModelBank, PagePool, Router)
+
+HORN = HornConfig(enabled=True, keep_hidden=0.5, keep_input=1.0,
+                  block_size=16)
+
+
+def _cfg(**over):
+    # float32 end to end so masked-parent vs materialized / paged-vs-dense
+    # comparisons are exact-or-tight despite different reduction shapes
+    return reduced(get_model_config("qwen3-1.7b"), dtype="float32", **over)
+
+
+def _params(cfg):
+    return api.model_init(jax.random.key(0), cfg)
+
+
+def _serve_masks_for(bank, ids):
+    """Host-side gather of per-slot masks (what the unified step does on
+    device) for dense-reference forwards."""
+    ids = np.asarray(ids)
+    return {k: jnp.asarray(v[ids]) for k, v in bank.masks.items()}
+
+
+# ---------------------------------------------------------------------------
+# bank construction
+# ---------------------------------------------------------------------------
+def test_bank_masks_shapes_determinism_and_liveness():
+    cfg = _cfg()
+    bank = ModelBank(cfg, HORN, 4, seed=3)
+    assert set(bank.masks) == {"ffn"}            # keep_input=1 -> no input mask
+    m = bank.masks["ffn"]
+    assert m.shape == (4, cfg.num_layers, cfg.d_ff)
+    assert set(np.unique(m)) <= {0.0, 1.0}
+    # every circuit keeps >= 1 live block in every layer (stays connected)
+    assert (m.sum(-1) > 0).all()
+    # circuits are distinct and the draw is deterministic in the seed
+    assert any(not np.array_equal(m[0], m[g]) for g in range(1, 4))
+    again = ModelBank(cfg, HORN, 4, seed=3)
+    assert np.array_equal(m, again.masks["ffn"])
+    assert not np.array_equal(m, ModelBank(cfg, HORN, 4, seed=4).masks["ffn"])
+    # subset re-indexes rows without redrawing
+    sub = bank.subset([2])
+    assert sub.num_submodels == 1
+    assert np.array_equal(sub.masks["ffn"][0], m[2])
+    fr = bank.kept_fractions()["ffn"]
+    assert len(fr) == 4 and all(0 < f <= 1 for f in fr)
+
+
+def test_bank_input_and_head_masks_when_configured():
+    cfg = _cfg()
+    horn = HornConfig(enabled=True, keep_hidden=0.5, keep_input=0.75,
+                      block_size=16, mask_attention_heads=True)
+    bank = ModelBank(cfg, horn, 3)
+    assert set(bank.masks) == {"ffn", "input", "heads"}
+    assert bank.masks["input"].shape == (3, cfg.d_model)
+    assert bank.masks["heads"].shape == (3, cfg.num_layers, cfg.num_heads)
+    assert (bank.masks["heads"].sum(-1) > 0).all()
+
+
+def test_bank_rejects_ssm_arch():
+    cfg = reduced(get_model_config("mamba2-2.7b"))
+    with pytest.raises(ValueError, match="attention"):
+        ModelBank(cfg, HORN, 2)
+
+
+# ---------------------------------------------------------------------------
+# materialize: small weights == masked parent (the paper's memory claim)
+# ---------------------------------------------------------------------------
+def test_materialize_matches_masked_parent_logits():
+    cfg = _cfg()
+    params = _params(cfg)
+    bank = ModelBank(cfg, HORN, 2, seed=1)
+    ctx = make_ctx(cfg, None)
+    rng = np.random.default_rng(0)
+    tokens = jnp.asarray(rng.integers(1, cfg.vocab_size, (2, 12)), jnp.int32)
+    for g in range(2):
+        small_cfg, small_params = bank.materialize(g, params)
+        assert small_cfg.d_ff < cfg.d_ff          # physically smaller
+        masks = _serve_masks_for(bank, [g, g])
+        want, _, _ = api.prefill(params, {"tokens": tokens}, cfg, ctx,
+                                 serve_masks=masks)
+        got, _, _ = api.prefill(small_params, {"tokens": tokens}, small_cfg,
+                                make_ctx(small_cfg, None))
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   atol=1e-4, rtol=1e-4)
+
+
+def test_materialize_rejects_non_ffn_masks():
+    cfg = _cfg()
+    horn = HornConfig(enabled=True, keep_hidden=0.5, keep_input=0.75,
+                      block_size=16)
+    bank = ModelBank(cfg, horn, 2)
+    with pytest.raises(ValueError, match="FFN-only"):
+        bank.materialize(0, _params(cfg))
+
+
+# ---------------------------------------------------------------------------
+# router
+# ---------------------------------------------------------------------------
+def test_router_least_loaded_balances_and_releases():
+    r = Router(3, policy="least_loaded")
+    assert [r.route() for _ in range(3)] == [0, 1, 2]
+    r.release(1)
+    assert r.route() == 1                        # refills the gap
+    assert r.loads == [1, 1, 1]
+    with pytest.raises(ValueError):
+        r.release(2)
+        r.release(2)                             # more releases than routes
+
+
+def test_router_hash_affinity_is_stable():
+    r = Router(4, policy="hash")
+    a = r.route(session="user-a")
+    assert all(r.route(session="user-a") == a for _ in range(5))
+    p = np.asarray([5, 6, 7], np.int32)
+    g = r.route(prompt=p)
+    assert r.route(prompt=p.copy()) == g         # prompt-bytes fallback
+    with pytest.raises(ValueError):
+        r.route()                                # nothing to hash
+
+
+def test_router_explicit_and_validation():
+    r = Router(2, policy="explicit")
+    assert r.route(submodel_id=1) == 1
+    with pytest.raises(ValueError):
+        r.route()                                # explicit needs an id
+    with pytest.raises(ValueError):
+        r.route(submodel_id=7)
+    # explicit id overrides any policy
+    assert Router(4, policy="least_loaded").route(submodel_id=3) == 3
+
+
+# ---------------------------------------------------------------------------
+# pool owner accounting
+# ---------------------------------------------------------------------------
+def test_pool_utilization_by_owner():
+    pool = PagePool(num_pages=9, page_size=4)
+    pool.alloc_pages(0, 3, owner=0)
+    pool.alloc_pages(1, 2, owner=1)
+    pool.alloc_pages(2, 1, owner=0)
+    by = pool.utilization_by_owner()
+    assert by[0] == pytest.approx(4 / 8) and by[1] == pytest.approx(2 / 8)
+    assert sum(by.values()) == pytest.approx(pool.utilization())
+    pool.check_invariants()
+    pool.free_seq(0)
+    pool.free_seq(2)
+    assert 0 not in pool.utilization_by_owner()
+    pool.check_invariants()
+
+
+# ---------------------------------------------------------------------------
+# routed decode == dedicated engine; co-batching in one jitted tick
+# ---------------------------------------------------------------------------
+def _engine(cfg, params, bank, *, slots=2, temperature=0.0, router=None,
+            pages=64):
+    return Engine(cfg, params,
+                  EngineConfig(num_slots=slots, num_pages=pages, page_size=8,
+                               max_prompt_len=16, max_new_tokens=5,
+                               token_budget=16, temperature=temperature,
+                               policy="on_demand", kv_dtype="float32",
+                               compute_dtype="float32"),
+                  bank=bank, router=router)
+
+
+@pytest.mark.parametrize("temperature", [0.0, 0.8])
+def test_routed_decode_byte_identical_to_dedicated_engine(temperature):
+    """The acceptance bar: a request routed through the multi-submodel
+    engine (co-batched with another circuit's request in the SAME jitted
+    ticks) emits exactly the tokens a dedicated one-model engine produces
+    for that circuit — greedy and sampled."""
+    cfg = _cfg()
+    params = _params(cfg)
+    bank = ModelBank(cfg, HORN, 2, seed=1)
+    rng = np.random.default_rng(7)
+    prompts = [rng.integers(1, cfg.vocab_size, (n,)).astype(np.int32)
+               for n in (6, 9)]
+
+    multi = _engine(cfg, params, bank, temperature=temperature,
+                    router=Router(2, policy="explicit"))
+    reqs = [multi.submit(p, 5, submodel_id=g)
+            for g, p in enumerate(prompts)]
+    multi.run(clock=iter(np.arange(1e6)).__next__)
+    got = {r.submodel_id: list(r.out_tokens) for r in reqs}
+    assert multi.ticks_cobatched >= 1            # >=2 circuits in one tick
+    assert multi.cobatch_ratio > 0
+    assert set(multi.tokens_by_submodel) == {0, 1}
+    assert multi.peak_util_by_submodel.keys() == {0, 1}
+    multi.pool.check_invariants()
+    assert multi.pool.used_pages == 0
+
+    for g, p in enumerate(prompts):
+        ded = _engine(cfg, params, bank.subset([g]), temperature=temperature,
+                      router=Router(1, policy="explicit"))
+        ded._next_id = reqs[g].id                # same (request, step) keys
+        r = ded.submit(p, 5, submodel_id=0)
+        ded.run(clock=iter(np.arange(1e6)).__next__)
+        assert list(r.out_tokens) == got[g], \
+            f"submodel {g} diverged: {r.out_tokens} != {got[g]}"
+
+
+def test_single_tenant_engine_unaffected_by_bank_plumbing():
+    """No bank -> the engine must not require (or accept) routing args."""
+    cfg = _cfg()
+    eng = _engine(cfg, _params(cfg), None)
+    with pytest.raises(ValueError, match="ModelBank"):
+        eng.submit(np.asarray([1, 2], np.int32), 2, submodel_id=1)
+    with pytest.raises(ValueError, match="ModelBank"):
+        eng.submit(np.asarray([1, 2], np.int32), 2, ensemble="mean_logit")
+    with pytest.raises(ValueError, match="ModelBank"):
+        Engine(cfg, None, EngineConfig(), router=Router(2))
+
+
+# ---------------------------------------------------------------------------
+# ensemble: on-device combine vs dense per-circuit reference
+# ---------------------------------------------------------------------------
+def _dense_reference_ensemble(cfg, params, bank, prompt, max_new, combine):
+    """Host-side oracle: run every circuit through the dense prefill/decode
+    path, combine logits per step (mean-logit argmax, or majority vote over
+    member argmaxes; ties -> lowest token id), feed the combined token back
+    to every circuit."""
+    ctx = make_ctx(cfg, None)
+    G = bank.num_submodels
+    L = len(prompt)
+    logits, caches = [], []
+    for g in range(G):
+        masks = _serve_masks_for(bank, [g])
+        lg, cache, _ = api.prefill(
+            params, {"tokens": jnp.asarray([prompt], jnp.int32)}, cfg, ctx,
+            serve_masks=masks)
+        buf = T.init_cache(cfg, 1, L + max_new, dtype=jnp.float32)
+
+        def splice(b, p):
+            ax = b.ndim - 3
+            pad = [(0, 0)] * b.ndim
+            pad[ax] = (0, b.shape[ax] - p.shape[ax])
+            return jnp.pad(p, pad).astype(b.dtype)
+
+        caches.append(jax.tree.map(splice, buf, cache))
+        logits.append(np.asarray(lg[0], np.float32))
+
+    def pick(step_logits):
+        if combine == "mean_logit":
+            return int(np.argmax(np.mean(step_logits, axis=0)))
+        votes = np.bincount([int(np.argmax(l)) for l in step_logits],
+                            minlength=cfg.vocab_size)
+        return int(np.argmax(votes))
+
+    toks = [pick(logits)]
+    for i in range(max_new - 1):
+        step_logits = []
+        for g in range(G):
+            lg, caches[g] = api.decode_step(
+                params, caches[g], jnp.asarray([[toks[-1]]], jnp.int32),
+                jnp.asarray(L + i, jnp.int32), cfg, ctx,
+                serve_masks=_serve_masks_for(bank, [g]))
+            step_logits.append(np.asarray(lg[0], np.float32))
+        toks.append(pick(step_logits))
+    return toks
+
+
+@pytest.mark.parametrize("combine", ["mean_logit", "majority_vote"])
+def test_ensemble_matches_dense_reference(combine):
+    cfg = _cfg()
+    params = _params(cfg)
+    bank = ModelBank(cfg, HORN, 3, seed=2)
+    rng = np.random.default_rng(5)
+    prompt = rng.integers(1, cfg.vocab_size, (7,)).astype(np.int32)
+    max_new = 4
+    want = _dense_reference_ensemble(cfg, params, bank,
+                                     list(map(int, prompt)), max_new, combine)
+
+    eng = _engine(cfg, params, bank, slots=3)
+    group = eng.submit(prompt, max_new, ensemble=combine)
+    eng.run(clock=iter(np.arange(1e6)).__next__)
+    # every member carries the SAME combined stream
+    for m in group.members:
+        assert list(m.out_tokens) == want, \
+            f"{combine}: {m.out_tokens} != {want}"
+    assert group.finished
+    eng.pool.check_invariants()
+    assert eng.pool.used_pages == 0
+
+
+def test_ensemble_group_survives_preemption_with_solo_traffic():
+    """An ensemble group and a solo request squeezed into a tight pool:
+    the group preempts/readmits as one unit and everything drains."""
+    cfg = _cfg()
+    params = _params(cfg)
+    bank = ModelBank(cfg, HORN, 2, seed=1)
+    eng = Engine(cfg, params,
+                 EngineConfig(num_slots=3, num_pages=8, page_size=4,
+                              max_prompt_len=8, max_new_tokens=6,
+                              token_budget=12, policy="on_demand",
+                              kv_dtype="float32", compute_dtype="float32"),
+                 bank=bank)
+    roomy = Engine(cfg, params,
+                   EngineConfig(num_slots=3, num_pages=64, page_size=4,
+                                max_prompt_len=8, max_new_tokens=6,
+                                token_budget=12, policy="on_demand",
+                                kv_dtype="float32", compute_dtype="float32"),
+                   bank=bank)
+    prompt = np.arange(1, 7, dtype=np.int32)
+    solo_p = np.arange(1, 8, dtype=np.int32)
+    outs = {}
+    for e in (eng, roomy):
+        # solo first -> the GROUP is the youngest unit and the preemption
+        # victim; it must evict and re-admit as one lockstep unit
+        solo = e.submit(solo_p, 6)
+        g = e.submit(prompt, 6, ensemble="mean_logit")
+        e.run(clock=iter(np.arange(1e6)).__next__)
+        outs[e] = (list(g.out_tokens), list(solo.out_tokens))
+        assert len({tuple(m.out_tokens) for m in g.members}) == 1
+        e.pool.check_invariants()
+        assert e.pool.used_pages == 0
+    assert eng.preemptions >= 1, "pool was never squeezed"
+    assert outs[eng] == outs[roomy], "preemption changed ensemble output"
+
+
+# ---------------------------------------------------------------------------
+# incremental block-table sync
+# ---------------------------------------------------------------------------
+def test_block_table_sync_is_incremental():
+    """Steady decode inside one page must re-upload ZERO block-table rows;
+    only admissions / page-boundary growth / vacating slots sync."""
+    cfg = _cfg()
+    eng = Engine(cfg, _params(cfg),
+                 EngineConfig(num_slots=2, num_pages=8, page_size=16,
+                              max_prompt_len=16, max_new_tokens=8,
+                              token_budget=16, policy="reserve",
+                              kv_dtype="float32", compute_dtype="float32"))
+    eng.submit(np.arange(1, 5, dtype=np.int32), 8)   # 4+8 tokens -> 1 page
+    eng.run(clock=iter(np.arange(1e6)).__next__)
+    assert eng.steps >= 8
+    # one row synced at admission; decode never crosses the page boundary
+    assert eng.bt_rows_synced == 1
+    # a second request re-uses the slot -> its row syncs once more
+    eng.submit(np.arange(1, 5, dtype=np.int32), 8)
+    eng.run(clock=iter(np.arange(1e6)).__next__)
+    assert eng.bt_rows_synced == 2
