@@ -4,7 +4,7 @@ load; emits ``BENCH_serving.json`` so the perf trajectory is recorded per PR.
     PYTHONPATH=src python benchmarks/serving_bench.py [--arch qwen3-1.7b]
         [--requests 32] [--long-frac 0.1] [--out BENCH_serving.json]
 
-Four phases:
+Five phases:
   "default"        the log-uniform prompt mix (comparable across PRs)
   "long_mix"       the adversarial mix: ``--long-frac`` of prompts pinned
                    at ``max_prompt`` exactly.  Before chunked prefill,
@@ -28,6 +28,15 @@ Four phases:
                    ``decode_tok_s`` keeps counting per-member device
                    tokens, so the two diverge exactly by the ensemble
                    fan-out.
+  "prefix_cache"   the same load served cold (--no-prefix-cache) and warm:
+                   "shared_prompt_*" pins 3/4 of every prompt to one
+                   system prefix (the millions-of-users mix — warm must
+                   show a high ``prefix_hit_rate``, big
+                   ``prefill_tok_saved``, and strictly lower TTFT p50);
+                   "ensemble_*" fans every request across all circuits
+                   (warm prefill_tok ~ 1/G of cold: the leader encodes
+                   the shared context once, members fork its pages and
+                   copy-on-write only their decode tails).
 
 Metrics (virtual arrival clock at --rate req/s, wall-clock service times):
   decode_tok_s   generated tokens / wall time of the measured phase
@@ -58,6 +67,7 @@ def run(arch: str = "qwen3-1.7b", requests: int = 32, rate: float = 16.0,
         max_prompt: int = 64, gen: int = 16, budget: int = 64,
         long_frac: float = 0.0, stream: str = "poisson", seed: int = 0,
         submodels: int = 0, ensemble_frac: float = 0.0,
+        prefix_cache: bool = True, shared_prefix: int = 0,
         _engine_cache={}):
     import jax
     from repro.configs.base import HornConfig, get_model_config, reduced
@@ -70,7 +80,7 @@ def run(arch: str = "qwen3-1.7b", requests: int = 32, rate: float = 16.0,
         num_slots=slots, num_pages=pages, page_size=page_size,
         max_prompt_len=-(-max_prompt // page_size) * page_size,
         max_new_tokens=gen, token_budget=max(budget, slots), seed=seed,
-        policy="on_demand")
+        policy="on_demand", prefix_cache=prefix_cache)
     key = (arch, seed)
     if key not in _engine_cache:          # share params across phases
         _engine_cache.clear()
@@ -88,7 +98,8 @@ def run(arch: str = "qwen3-1.7b", requests: int = 32, rate: float = 16.0,
     def load(n):
         return make_requests(n, cfg.vocab_size, rng, stream=stream,
                              rate=rate, max_prompt=max_prompt, gen=gen,
-                             long_frac=long_frac)
+                             long_frac=long_frac,
+                             shared_prefix=shared_prefix)
 
     def drive(engine, reqs):
         """Arrivals on the same wall clock as serve.py, except that when the
@@ -137,8 +148,12 @@ def run(arch: str = "qwen3-1.7b", requests: int = 32, rate: float = 16.0,
     while w < engine.max_chunk:
         widths.append(w)
         w <<= 1
+    # warmup prompts are DISTINCT random streams (separate rng): identical
+    # prompts would hit the prefix cache and skip the very chunk widths
+    # the sweep exists to compile
+    wrng = np.random.default_rng(seed + 10_007)
     for w in sorted(widths):
-        engine.submit(np.ones(w, np.int32), 2)
+        engine.submit(wrng.integers(1, cfg.vocab_size, (w,)), 2)
         engine.run()
     if bank is not None and ensemble_frac > 0:
         # the combine path is a SEPARATE jit variant (ensembles=True): warm
@@ -146,8 +161,9 @@ def run(arch: str = "qwen3-1.7b", requests: int = 32, rate: float = 16.0,
         # with a bucket-width solo prompt (solo admits first -> its chunk
         # sets the tick's C bucket while the group is in flight)
         for w in sorted(widths):
-            engine.submit(np.ones(w, np.int32), 2)
-            engine.submit(np.ones(4, np.int32), 2, ensemble="mean_logit")
+            engine.submit(wrng.integers(1, cfg.vocab_size, (w,)), 2)
+            engine.submit(wrng.integers(1, cfg.vocab_size, (4,)), 2,
+                          ensemble="mean_logit")
             engine.run()
     engine.reset_stats()
 
@@ -180,6 +196,13 @@ def run(arch: str = "qwen3-1.7b", requests: int = 32, rate: float = 16.0,
         "bt_rows_per_tick": round(engine.bt_rows_synced
                                   / max(engine.steps, 1), 3),
     }
+    if prefix_cache:
+        out.update({
+            "prefix_hit_rate": round(engine.prefix_hit_rate, 4),
+            "prefill_tok_saved": engine.prefill_tok_saved,
+            "cache_evictions": engine.cache_evictions,
+            "cow_page_copies": engine.cow_page_copies,
+        })
     if bank is not None:
         out.update({
             "submodels": submodels, "ensemble_frac": ensemble_frac,
@@ -237,6 +260,23 @@ def main() -> None:
                        max_prompt=16, gen=12, budget=16, stream="batch"),
         "multi_submodel": run(**common, submodels=args.submodels,
                               ensemble_frac=args.ensemble_frac),
+        # the prefix-cache phase: identical loads served cold (cache off)
+        # and warm (cache on).  shared_prompt pins 3/4 of every prompt to
+        # one system prefix — hit rate must be well over 50% and TTFT p50
+        # strictly lower than cold; ensemble fans every request across all
+        # circuits — warm prefill must approach 1/G of cold
+        "prefix_cache": {
+            "shared_prompt_cold": run(**common, prefix_cache=False,
+                                      shared_prefix=3 * args.max_prompt
+                                      // 4),
+            "shared_prompt_warm": run(**common, prefix_cache=True,
+                                      shared_prefix=3 * args.max_prompt
+                                      // 4),
+            "ensemble_cold": run(**common, submodels=args.submodels,
+                                 ensemble_frac=1.0, prefix_cache=False),
+            "ensemble_warm": run(**common, submodels=args.submodels,
+                                 ensemble_frac=1.0, prefix_cache=True),
+        },
     }
     with open(args.out, "w") as f:
         json.dump(res, f, indent=2)

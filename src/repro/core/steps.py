@@ -330,6 +330,29 @@ def make_unified_paged_step(run: RunConfig, mesh, *, num_pages: int,
     return step, {"params": p_shard, "cache_struct": cache_struct}
 
 
+def make_page_copy_step():
+    """Device-side KV page copy for copy-on-write: ``copy(cache, src, dst)``
+    duplicates page ``src[i]`` into page ``dst[i]`` across every layer's
+    K and V pool in one donated (in-place) call.
+
+    ``src``/``dst`` are equal-length int32 arrays; callers pad them to a
+    power-of-two width with (0, 0) pairs — copying the null page onto
+    itself is a no-op by construction — so jit compiles one executable per
+    width bucket, not per COW event.  Paged-cache leaves are
+    [num_pages, psize, KH, D] (remainder layers) or [R, num_pages, psize,
+    KH, D] (scanned superblocks); the page axis is ndim - 4."""
+
+    @partial(jax.jit, donate_argnums=(0,))
+    def copy(cache, src, dst):
+        def cp(x):
+            if x.ndim == 4:
+                return x.at[dst].set(x[src])
+            return x.at[:, dst].set(x[:, src])
+        return jax.tree.map(cp, cache)
+
+    return copy
+
+
 def decode_input_specs(run: RunConfig):
     """(tokens, pos, [encoder_out]) ShapeDtypeStructs for decode cells."""
     cfg, shape = run.model, run.shape

@@ -25,6 +25,11 @@ sub-model masks over one shared parent) behind the same engine: requests
 are routed per ``--router`` and co-batch across circuits in every tick;
 ``--ensemble-frac`` of requests instead fan across ALL circuits and
 combine logits on device (``--combine``).
+
+``--prefix-cache`` (default on) content-addresses full KV pages so
+identical prompt prefixes are prefilled once and adopted (refcounted,
+copy-on-write) by later requests; an ensemble's shared prompt context is
+prefilled once by its leader and forked into all G members.
 """
 from __future__ import annotations
 
@@ -43,24 +48,35 @@ from repro.serving import Engine, EngineConfig, EngineOOM, ModelBank, Router
 def make_requests(n: int, vocab_size: int, rng: np.random.Generator, *,
                   stream: str = "poisson", rate: float = 16.0,
                   max_prompt: int = 64, gen: int = 16,
-                  long_frac: float = 0.0):
+                  long_frac: float = 0.0, shared_prefix: int = 0):
     """(arrival_time, prompt, max_new) triples: Poisson arrivals (or all at
     t=0 for ``stream="batch"``), mixed prompt lengths (log-uniform between 4
     and ``max_prompt``), per-request max_new drawn in [gen/2, gen].
     ``long_frac`` of the prompts are pinned at ``max_prompt`` exactly — the
-    adversarial long-prompt mix for chunked-prefill benchmarks.  Shared by
-    the launcher and benchmarks/serving_bench.py so their loads stay
+    adversarial long-prompt mix for chunked-prefill benchmarks.
+    ``shared_prefix`` prepends one fixed system prompt of that many tokens
+    to EVERY request (unique tails keep total length <= max_prompt) — the
+    shared-system-prompt mix the prefix cache is built for.  Shared by the
+    launcher and benchmarks/serving_bench.py so their loads stay
     comparable."""
+    if not 0 <= shared_prefix <= max_prompt - 4:
+        raise ValueError(
+            f"shared_prefix ({shared_prefix}) must leave >= 4 tokens of "
+            f"unique tail under max_prompt ({max_prompt})")
     out, t = [], 0.0
+    system = rng.integers(0, vocab_size,
+                          (shared_prefix,)).astype(np.int32)
     for _ in range(n):
         if stream == "poisson":
             t += rng.exponential(1.0 / rate)
+        room = max_prompt - shared_prefix
         if long_frac > 0 and rng.uniform() < long_frac:
-            plen = max_prompt
+            plen = room
         else:
-            lo, hi = np.log(4), np.log(max_prompt)
+            lo, hi = np.log(min(4, room)), np.log(room)
             plen = int(np.exp(rng.uniform(lo, hi)))
-        prompt = rng.integers(0, vocab_size, (max(1, plen),)).astype(np.int32)
+        tail = rng.integers(0, vocab_size, (max(1, plen),)).astype(np.int32)
+        prompt = np.concatenate([system, tail]) if shared_prefix else tail
         g = int(rng.integers(max(1, gen // 2), gen + 1))
         out.append((t, prompt, g))
     return out
@@ -89,6 +105,12 @@ def main() -> None:
                     help="fraction of prompts pinned at --max-prompt")
     ap.add_argument("--policy", choices=["reserve", "on_demand"],
                     default="on_demand")
+    ap.add_argument("--prefix-cache", action=argparse.BooleanOptionalAction,
+                    default=True,
+                    help="content-addressed KV page reuse + COW: identical "
+                         "prompt prefixes prefill once, ensembles share "
+                         "their prompt pages across all circuits "
+                         "(--no-prefix-cache re-prefills per request)")
     ap.add_argument("--temperature", type=float, default=0.0)
     ap.add_argument("--submodels", type=int, default=0,
                     help="serve G Horn circuits from one ModelBank "
@@ -119,7 +141,8 @@ def main() -> None:
         num_slots=args.slots, num_pages=args.pages, page_size=args.page_size,
         max_prompt_len=-(-args.max_prompt // args.page_size) * args.page_size,
         max_new_tokens=args.gen, token_budget=max(args.budget, args.slots),
-        temperature=args.temperature, seed=args.seed, policy=args.policy)
+        temperature=args.temperature, seed=args.seed, policy=args.policy,
+        prefix_cache=args.prefix_cache)
     import jax
     params = api.model_init(jax.random.key(args.seed), cfg)
     bank = router = None
@@ -210,6 +233,11 @@ def main() -> None:
           f"preemptions: {engine.preemptions}  "
           f"block-table rows synced/tick: "
           f"{engine.bt_rows_synced / max(engine.steps, 1):.2f}")
+    if args.prefix_cache:
+        print(f"prefix cache: hit rate {engine.prefix_hit_rate:.0%}  "
+              f"prefill tok saved {engine.prefill_tok_saved}  "
+              f"evictions {engine.cache_evictions}  "
+              f"COW copies {engine.cow_page_copies}")
     if bank is not None:
         per = "  ".join(
             f"sub{g}: {engine.tokens_by_submodel.get(g, 0) / max(wall, 1e-9):6.1f} tok/s"

@@ -4,13 +4,20 @@ multi-tenant across Horn's parallel circuits.
 Layering (each importable on its own):
 
   kv_cache.py    host-side page-pool bookkeeping: free list, per-sequence
-                 page tables, utilization accounting attributable to an
-                 owner tag (the submodel a sequence is routed to).  Pure
-                 Python — the device-side pools live in the model cache
-                 pytree.
+                 page tables, page refcounts with copy-on-write, a
+                 content-addressed PrefixCache (rolling hash chained per
+                 token block; LRU of retired full pages), and utilization
+                 accounting attributable to an owner tag (the submodel a
+                 sequence is routed to).  Pure Python — the device-side
+                 pools live in the model cache pytree.
   scheduler.py   FCFS admission queue + slot lifecycle (join on admission,
                  evict on completion / max length, preempt-youngest on pool
-                 pressure).  Ensemble groups are atomic scheduling units.
+                 pressure).  Admission adopts the longest cached
+                 page-prefix so chunked prefill starts mid-prompt; an
+                 ensemble's shared (dense-encoded) prompt context is
+                 prefilled once by the leader and forked (refcount G) into
+                 every member.  Ensemble groups are atomic scheduling
+                 units.
   model_bank.py  G fixed Horn sub-models of one parent (per-layer block
                  masks drawn once from core/submodel.plan; shared weights,
                  shared page pool); materialize exports a circuit as
@@ -30,11 +37,12 @@ The device kernel behind it is ``repro.kernels.paged_attention``
 (``paged_chunk_attention``: decode rides as chunk width 1).
 """
 from repro.serving.engine import Engine, EngineConfig, EngineOOM
-from repro.serving.kv_cache import PagePool, PagePoolOOM
+from repro.serving.kv_cache import (PagePool, PagePoolOOM, PrefixCache,
+                                    chain_hashes)
 from repro.serving.model_bank import ModelBank
 from repro.serving.router import Router
 from repro.serving.scheduler import EnsembleGroup, FCFSScheduler, Request
 
 __all__ = ["Engine", "EngineConfig", "EngineOOM", "EnsembleGroup",
            "FCFSScheduler", "ModelBank", "PagePool", "PagePoolOOM",
-           "Request", "Router"]
+           "PrefixCache", "Request", "Router", "chain_hashes"]

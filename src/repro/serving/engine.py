@@ -17,10 +17,10 @@ requests or steps, and no per-slot host loop touches the logits.
 
 Pool pressure under the ``on_demand`` policy no longer kills the server:
 the engine preempts the youngest running sequence back to the head of the
-waiting queue (pages freed, KV recomputed on re-admission through the same
-chunked-prefill path) and degrades to lower throughput.  ``EngineOOM`` is
-reserved for genuinely unservable states — a single sequence that can never
-fit the pool even alone.
+waiting queue (page references released, KV recomputed on re-admission
+through the same chunked-prefill path) and degrades to lower throughput.
+``EngineOOM`` is reserved for genuinely unservable states — a single
+sequence that can never fit the pool even alone.
 
 Chunk widths are bucketed to powers of two so the unified step compiles
 once per width, not once per chunk length; a decode-only tick runs the
@@ -35,10 +35,21 @@ fans one prompt across all G circuits in lockstep and combines their
 per-step logits on device (mean-logit or majority vote) before sampling —
 the paper's collective ensemble served as one request.
 
+Prefix caching + copy-on-write (``EngineConfig.prefix_cache``, default on):
+full prompt pages are content-addressed by a rolling hash chained over
+their token blocks, retired pages are held (LRU) by the pool's
+``PrefixCache``, and admission adopts the longest cached page-prefix so
+chunked prefill starts mid-prompt — a shared system prompt is prefilled
+once across millions of requests.  An ensemble's shared prompt context
+(positions [0, prompt_len - 1), dense-parent encoded — circuit masks
+engage at the last prompt token) is the degenerate case: the leader
+prefills it once, every member forks the pages (refcount G), and only
+per-member decode tails copy-on-write on divergence — ensemble prefill
+costs ~1/G of the re-prefill path, byte-identically.
+
 The host->device block-table mirror is synced incrementally: only rows
 whose page tables changed since the last device call are re-uploaded
-(steady decode inside a page uploads nothing).
-"""
+(steady decode inside a page uploads nothing)."""
 from __future__ import annotations
 
 import time
@@ -82,6 +93,8 @@ class EngineConfig:
     eos_id: Optional[int] = None
     kv_dtype: str = "bfloat16"       # page-pool dtype (float32 for parity tests)
     compute_dtype: str = "bfloat16"  # model compute dtype
+    prefix_cache: bool = True        # content-addressed page reuse + COW
+                                     # (off: PR-3-style per-request prefill)
 
     @property
     def max_model_len(self) -> int:
@@ -97,6 +110,9 @@ class _Entry:
     chunk_len: int
     sample_step: int                 # fold_in step for the sampling key
     record: bool                     # keep the sampled token?
+    mask_id: int                     # circuit-mask row the step gathers for
+                                     # this chunk (the dense sentinel for an
+                                     # ensemble's shared prompt context)
 
 
 class Engine:
@@ -132,10 +148,15 @@ class Engine:
             raise ValueError("a Router needs a ModelBank to route over")
         else:
             self.router = None
-        self.pool = PagePool(ecfg.num_pages, ecfg.page_size)
+        self.pool = PagePool(ecfg.num_pages, ecfg.page_size,
+                             prefix_cache=ecfg.prefix_cache)
         self.sched = FCFSScheduler(ecfg.num_slots, self.pool,
                                    policy=ecfg.policy)
         self.max_pages_per_seq = self.pool.pages_for(ecfg.max_model_len)
+        # mask row the unified step gathers for dense-parent chunks (an
+        # ensemble's shared prompt context): device_masks pads an all-ones
+        # row at index G
+        self._dense_mask_id = bank.num_submodels if bank is not None else 0
 
         run = RunConfig(model=cfg,
                         shape=ShapeConfig("serve", "decode",
@@ -146,6 +167,7 @@ class Engine:
             run, mesh, num_pages=ecfg.num_pages, page_size=ecfg.page_size,
             temperature=ecfg.temperature,
             bank_masks=bank.device_masks() if bank is not None else None)
+        self._page_copy = S.make_page_copy_step()
         self.cache = T.init_paged_cache(cfg, ecfg.num_pages, ecfg.page_size,
                                         dtype=jnp.dtype(ecfg.kv_dtype))
 
@@ -157,11 +179,12 @@ class Engine:
         self.max_chunk = min(ecfg.token_budget, ecfg.max_prompt_len)
         # incremental block-table sync: the device-resident table is the
         # source the step reads; a host mirror plus per-slot sync state
-        # ((req_id, admit_seq, pages)) decides which ROWS changed since the
-        # last device call — only those are re-uploaded.  admit_seq is part
-        # of the key so a preempt/re-admit cycle that lands the same request
-        # back in its old slot with the same page COUNT (but different page
-        # ids) still reads as dirty.
+        # ((req_id, admit_seq, table_version)) decides which ROWS changed
+        # since the last device call — only those are re-uploaded.  The
+        # pool bumps a sequence's table version on every mutation (page
+        # appended, adopted, or COW-swapped), and admit_seq keys a
+        # preempt/re-admit cycle that lands the same request back in its
+        # old slot.
         self._bt_host = np.zeros((B, self.max_pages_per_seq), np.int32)
         self._bt_dev = jnp.asarray(self._bt_host)
         self._bt_state: List[Optional[Tuple[int, int, int]]] = [None] * B
@@ -177,6 +200,12 @@ class Engine:
         self.ticks_cobatched = 0
         self.tokens_by_submodel: Dict[int, int] = {}
         self.peak_util_by_submodel: Dict[int, float] = {}
+        # prefix-cache / COW accounting
+        self.cache_hit_tokens = 0        # prompt tokens served from cache
+        self.cache_eligible_tokens = 0   # prompt tokens lookups could cover
+        self.prefill_tok_saved = 0       # hit tokens + ensemble fork savings
+        self.cow_page_copies = 0         # device page copies issued
+        self._evictions_base = 0         # pool evictions at last reset
 
     @property
     def preemptions(self) -> int:
@@ -187,6 +216,20 @@ class Engine:
         """Fraction of non-empty ticks whose single jitted call carried
         tokens from >= 2 distinct sub-models (the multi-submodel win)."""
         return self.ticks_cobatched / max(1, self.ticks_nonempty)
+
+    @property
+    def prefix_hit_rate(self) -> float:
+        """Fraction of cache-eligible prompt tokens served from the prefix
+        cache since the last ``reset_stats``."""
+        return self.cache_hit_tokens / max(1, self.cache_eligible_tokens)
+
+    @property
+    def cache_evictions(self) -> int:
+        """Prefix-cache pressure evictions since the last ``reset_stats``
+        (the pool counter is lifetime; benchmarks measure post-warmup)."""
+        if self.pool.cache is None:
+            return 0
+        return self.pool.cache.evictions - self._evictions_base
 
     def reset_stats(self) -> None:
         """Zero the serving counters without touching compile caches or the
@@ -202,6 +245,12 @@ class Engine:
         self.ticks_cobatched = 0
         self.tokens_by_submodel.clear()
         self.peak_util_by_submodel.clear()
+        self.cache_hit_tokens = 0
+        self.cache_eligible_tokens = 0
+        self.prefill_tok_saved = 0
+        self.cow_page_copies = 0
+        if self.pool.cache is not None:
+            self._evictions_base = self.pool.cache.evictions
         self.sched.preemptions = 0
         self.sched.finished.clear()
 
@@ -219,7 +268,9 @@ class Engine:
         if not 0 < len(prompt) <= self.ecfg.max_prompt_len:
             raise ValueError(
                 f"prompt length {len(prompt)} not in [1, "
-                f"{self.ecfg.max_prompt_len}]")
+                f"{self.ecfg.max_prompt_len}] — an empty prompt has no "
+                f"token to decode from (it would allocate zero pages and "
+                f"decode off the null page)")
         mnt = min(max_new_tokens or self.ecfg.max_new_tokens,
                   self.ecfg.max_new_tokens)
 
@@ -238,12 +289,18 @@ class Engine:
                 raise ValueError(
                     f"ensemble needs {G} slots (one per circuit) but the "
                     f"engine has {self.ecfg.num_slots}")
-            group = EnsembleGroup(id=self._next_group_id, combine=ensemble)
+            group = EnsembleGroup(id=self._next_group_id, combine=ensemble,
+                                  share=self.ecfg.prefix_cache)
             self._next_group_id += 1
+            # the shared prompt context [0, len - 1) is dense-parent
+            # encoded (namespace b"dense"); each member's circuit engages
+            # at the last prompt token — so the context bytes are
+            # member-invariant and the leader can prefill them for all
             group.members = [
                 Request(id=self._next_id + g, prompt=prompt,
                         max_new_tokens=mnt, arrival_time=arrival_time,
-                        eos_id=self.ecfg.eos_id, submodel_id=g, group=group)
+                        eos_id=self.ecfg.eos_id, submodel_id=g, group=group,
+                        kv_namespace=b"dense", mask_from=len(prompt) - 1)
                 for g in range(G)]
             self._check_feasible(group.members[0])
             self._next_id += G
@@ -260,6 +317,7 @@ class Engine:
         if self.bank is not None:
             req.submodel_id = self.router.route(
                 submodel_id=submodel_id, session=session, prompt=prompt)
+            req.kv_namespace = b"sub:%d" % req.submodel_id
         elif submodel_id not in (None, 0):
             raise ValueError("submodel routing requires a ModelBank")
         self._next_id += 1
@@ -279,10 +337,10 @@ class Engine:
                 f"prompt/max_new_tokens")
 
     def _admission_need(self, req: Request) -> int:
-        """Pages the whole scheduling unit (solo, or every ensemble member)
-        needs free to admit."""
+        """Worst-case (no cache hit) pages the whole scheduling unit
+        (solo, or every ensemble member) needs available to admit."""
         unit = req.group.members if req.group is not None else [req]
-        return sum(self.sched.admission_pages(r) for r in unit)
+        return self.sched.unit_admission_pages(unit)
 
     # -- internals -----------------------------------------------------------
     def _chunk_bucket(self, n: int) -> int:
@@ -291,9 +349,9 @@ class Engine:
 
     def _sync_block_tables(self) -> None:
         """Re-upload only the block-table ROWS whose page sets changed since
-        the last device call (new pages appended, slot re-assigned, slot
-        vacated).  Steady decode within a page uploads nothing and reuses
-        the same device array."""
+        the last device call (new pages appended/adopted, COW swap, slot
+        re-assigned, slot vacated).  Steady decode within a page uploads
+        nothing and reuses the same device array."""
         dirty: List[int] = []
         for slot in range(self.ecfg.num_slots):
             req = self.sched.running.get(slot)
@@ -303,10 +361,10 @@ class Engine:
                     self._bt_state[slot] = None
                     dirty.append(slot)
                 continue
-            table = self.pool.table(req.id)
-            state = (req.id, req.admit_seq, len(table))
+            state = (req.id, req.admit_seq, self.pool.table_version(req.id))
             if self._bt_state[slot] == state:
                 continue
+            table = self.pool.table(req.id)
             row = self._bt_host[slot]
             row[:] = 0
             row[:len(table)] = table
@@ -334,6 +392,30 @@ class Engine:
     def _clock(self, now: Optional[float]) -> float:
         return time.monotonic() if now is None else now
 
+    def _flush_copies(self, pairs: List[Tuple[int, int]]) -> None:
+        """Issue the device-side page copies a COW swap requires, padded to
+        a power-of-two width ((0, 0) pads copy the null page onto itself)
+        so jit compiles one executable per bucket."""
+        if not pairs:
+            return
+        n = self._chunk_bucket(len(pairs))
+        src = np.zeros((n,), np.int32)
+        dst = np.zeros((n,), np.int32)
+        for i, (s, d) in enumerate(pairs):
+            src[i], dst[i] = s, d
+        self.cache = self._page_copy(self.cache, jnp.asarray(src),
+                                     jnp.asarray(dst))
+        self.cow_page_copies += len(pairs)
+
+    def _prepare_entry_write(self, req: Request, start: int,
+                             end: int) -> None:
+        """Grow the request's table through ``end`` tokens and COW any page
+        in the written range [start, end) that other tables (or the prefix
+        cache) still hold.  May raise PagePoolOOM — the preempt-youngest
+        loop in ``_plan_tick`` answers."""
+        self.pool.ensure(req.id, end)
+        self._flush_copies(self.pool.prepare_write(req.id, start, end))
+
     # -- tick planning -------------------------------------------------------
     def _plan_tick(self) -> Dict[int, _Entry]:
         """Fill the token budget: one decode token per decode-phase slot,
@@ -360,36 +442,65 @@ class Engine:
             (prefill if req.in_prefill else decode).append((slot, req))
 
         for slot, req in decode:
-            self.sched.grow(req)                 # may raise PagePoolOOM
+            # grows the table through context_len (on_demand growth /
+            # deferred-reserve redemption) and COWs any shared page the
+            # decode write would touch; may raise PagePoolOOM
+            self._prepare_entry_write(req, req.context_len - 1,
+                                      req.context_len)
             entries[slot] = _Entry(
                 req=req, start=req.context_len - 1,
                 tokens=np.asarray([req.out_tokens[-1]], np.int32),
-                chunk_len=1, sample_step=len(req.out_tokens), record=True)
+                chunk_len=1, sample_step=len(req.out_tokens), record=True,
+                mask_id=req.submodel_id)
             budget -= 1
         # prompt chunks soak up whatever budget the decode tokens left,
         # oldest admission first (it holds pages; finish it soonest).
         # Ensemble groups advance in LOCKSTEP: every member gets the same
-        # chunk width this tick (identical prompts + identical prefill_pos),
+        # chunk width this tick (identical streams + identical prefill_pos),
         # so all members finish prefill in the same tick and their combined
-        # logits produce the group's first token together.
+        # logits produce the group's first token together.  Chunks break at
+        # ``mask_from``: an ensemble stream is dense-parent encoded before
+        # it (shared context) and member-masked from it on — in share mode
+        # only the leader computes the dense region, then the group forks.
         prefill.sort(key=lambda sr: sr[1].admit_seq)
         planned_groups = set()
         for slot, req in prefill:
-            if req.group is not None:
-                if req.group.id in planned_groups:
+            group = req.group
+            if group is not None:
+                if group.id in planned_groups:
                     continue
-                planned_groups.add(req.group.id)
-                unit = [(m.slot, m) for m in req.group.members]
+                planned_groups.add(group.id)
+                if group.share and not group.forked:
+                    leader = group.leader
+                    if leader.prefill_pos < leader.mask_from:
+                        unit = [(leader.slot, leader)]   # dense solo advance
+                    else:
+                        self.prefill_tok_saved += self.sched.fork_group(group)
+                        unit = [(m.slot, m) for m in group.members]
+                else:
+                    unit = [(m.slot, m) for m in group.members]
             else:
                 unit = [(slot, req)]
             n = len(unit)
-            want = len(unit[0][1].kv_tokens) - unit[0][1].prefill_pos
+            r0 = unit[0][1]
+            want = len(r0.kv_tokens) - r0.prefill_pos
+            dense = r0.prefill_pos < r0.mask_from
+            if dense:                       # stop at the mask boundary
+                want = min(want, r0.mask_from - r0.prefill_pos)
             cl = min(want, max(budget, 0) // n, self.max_chunk)
             if cl <= 0:
                 continue                          # budget exhausted this tick
-            for s, r in unit:
+            # write-prep members BEFORE the leader: each member's COW of the
+            # shared boundary page redeems its own deferred-reserve credit,
+            # and the leader — whose admission reserve covers the original
+            # page — is the last holder left and writes it in place.
+            # Leader-first would draw an unreserved free page for the
+            # leader's copy while a member credit idles, OOMing a pool
+            # sized exactly to the reserve-policy worst case.
+            for s, r in unit[1:] + unit[:1]:
                 kv = r.kv_tokens
                 finishes = r.prefill_pos + cl == len(kv)
+                self._prepare_entry_write(r, r.prefill_pos, r.prefill_pos + cl)
                 entries[s] = _Entry(
                     req=r, start=r.prefill_pos,
                     tokens=kv[r.prefill_pos:r.prefill_pos + cl],
@@ -397,7 +508,8 @@ class Engine:
                     # the chunk that completes a *fresh* prompt yields the
                     # first token; a preempted request's next token is
                     # already known
-                    record=finishes and not r.out_tokens)
+                    record=finishes and not r.out_tokens,
+                    mask_id=self._dense_mask_id if dense else r.submodel_id)
             budget -= cl * n
         return entries
 
@@ -411,7 +523,10 @@ class Engine:
         ``now``."""
         now = self._clock(now)
         tick_now = tick_clock if tick_clock else (lambda: now)
-        self.sched.admit(now)
+        for req in self.sched.admit(now):
+            self.cache_hit_tokens += req.num_cached_tokens
+            self.cache_eligible_tokens += req.cache_eligible_tokens
+            self.prefill_tok_saved += req.num_cached_tokens
         self._sample_peak()                       # admissions allocate pages
         done = self.sched.evict_finished(tick_now())  # e.g. max_new_tokens==1
         if not self.sched.running:
@@ -457,7 +572,7 @@ class Engine:
             chunk_lens[slot] = e.chunk_len
             req_ids[slot] = e.req.id
             sample_steps[slot] = e.sample_step
-            submodel_ids[slot] = e.req.submodel_id
+            submodel_ids[slot] = e.mask_id
             group = e.req.group
             if group is not None:
                 seg_ids[slot] = group.leader.slot
@@ -488,9 +603,22 @@ class Engine:
 
         for slot, e in entries.items():
             req = e.req
-            if req.in_prefill:
-                req.prefill_pos += e.chunk_len
+            was_prefill = req.in_prefill
+            if was_prefill:
                 self.prefill_tokens += e.chunk_len
+            # decode writes K/V too (position context_len - 1), so advance
+            # prefill_pos past every write this tick — otherwise the next
+            # generated token flips the request back into "prefill" and
+            # re-feeds one already-written token as a redundant chunk
+            req.prefill_pos = max(req.prefill_pos, e.start + e.chunk_len)
+            if was_prefill and req.page_hashes:
+                # content-index every freshly materialized full page of the
+                # publishable (namespace-uniform) region — the next request
+                # with this prefix maps the pages instead of recomputing
+                full = min(req.prefill_pos, req.publishable_end) \
+                    // self.ecfg.page_size
+                if full:
+                    self.pool.publish_prefix(req.id, req.page_hashes, full)
             if e.record:
                 self.sched.record_token(slot, int(sampled[slot]), post)
                 self.generated_tokens += 1

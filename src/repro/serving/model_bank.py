@@ -100,10 +100,20 @@ class ModelBank:
     def device_masks(self) -> Dict[str, jnp.ndarray]:
         """The mask tensors the unified step gathers per slot (f32 on
         device, cached).  Never empty: __init__ rejects a bank with no
-        masked axis."""
+        masked axis.
+
+        Row ``num_submodels`` (one past the last circuit) is the all-ones
+        *dense sentinel*: gathering it runs the unmasked parent.  The
+        engine uses it to encode an ensemble's shared prompt context —
+        positions [0, prompt_len - 1) are parent-encoded, so their K/V is
+        byte-identical across members and one prefill (or one prefix-cache
+        entry) serves all G circuits."""
         if self._device is None:
-            self._device = {k: jnp.asarray(v, f32)
-                            for k, v in self.masks.items()}
+            self._device = {
+                k: jnp.concatenate(
+                    [jnp.asarray(v, f32),
+                     jnp.ones((1,) + v.shape[1:], f32)], axis=0)
+                for k, v in self.masks.items()}
         return self._device
 
     def subset(self, ids: Sequence[int]) -> "ModelBank":

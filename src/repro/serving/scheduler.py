@@ -1,5 +1,5 @@
 """FCFS continuous-batching scheduler: admission queue + slot lifecycle +
-preemption.
+preemption, prefix-cache-aware.
 
 Requests wait in arrival order; a request joins the running batch as soon as
 a slot is free AND the page pool can cover it under the admission policy.
@@ -8,17 +8,30 @@ chunks (the engine's unified tick), then decode; slots are evicted the
 moment a request finishes, so the next waiting request joins mid-flight —
 no batch barrier.
 
+Admission consults the pool's prefix cache first: the longest cached
+page-prefix of the prompt is *adopted* (refcount + 1 per page, zero fresh
+pages, zero prefill compute) and chunked prefill starts at
+``num_cached_tokens`` — only the uncached tail is sized, allocated, and
+computed.  Preemption releases page *references* (``free_seq`` decrements
+refcounts); physical pages return to the free list — or are held by the
+prefix cache — only when the last reference drops.
+
 Admission policies:
-  "reserve"    allocate worst-case pages (prompt + max_new) up front; decode
-               can never OOM the pool (throughput-conservative, vLLM-v0
-               style reservation).
+  "reserve"    allocate worst-case pages (prompt + max_new, minus the
+               cached prefix) up front; decode can never OOM the pool
+               (throughput-conservative, vLLM-v0 style reservation).
+               Shared-prefill ensemble members cannot position-map their
+               tail pages until they fork off the leader's prompt pages,
+               so their worst case is *promised* at admission (deferred
+               credits the pool charges against every later allocation)
+               and redeemed at fork/COW time.
   "on_demand"  allocate prompt pages (+1 token of headroom) only; pages are
                pulled from the free list as sequences grow.  Higher packing;
                when a pathological mix exhausts the pool mid-decode the
                engine *preempts* the youngest running sequence back to the
-               head of the waiting queue (pages freed, KV recomputed on
-               re-admission through the same chunked-prefill path) instead
-               of dying — throughput degrades, the server survives.
+               head of the waiting queue (references released, KV recomputed
+               on re-admission through the same chunked-prefill path)
+               instead of dying — throughput degrades, the server survives.
 """
 from __future__ import annotations
 
@@ -28,7 +41,7 @@ from typing import Deque, Dict, List, Optional
 
 import numpy as np
 
-from repro.serving.kv_cache import PagePool
+from repro.serving.kv_cache import PagePool, chain_hashes
 
 
 @dataclass
@@ -42,6 +55,13 @@ class Request:
     eos_id: Optional[int] = None
     submodel_id: int = 0                # which ModelBank circuit serves this
     group: Optional["EnsembleGroup"] = None   # set for ensemble members
+    kv_namespace: bytes = b"dense"      # content-hash namespace: which
+                                        # encoder produced this KV (engine
+                                        # sets b"sub:g" for routed requests)
+    mask_from: int = 0                  # first position the circuit masks
+                                        # apply at (ensemble members share a
+                                        # dense-encoded prompt context
+                                        # [0, mask_from); solo requests: 0)
 
     # runtime (engine/scheduler-owned)
     slot: Optional[int] = None
@@ -50,6 +70,9 @@ class Request:
     admit_seq: int = -1                 # global admission order (preemption
                                         # evicts the youngest = max admit_seq)
     num_preemptions: int = 0
+    num_cached_tokens: int = 0          # prefix-cache hit at last admission
+    cache_eligible_tokens: int = 0      # tokens the lookup could have matched
+    page_hashes: List[bytes] = field(default_factory=list)
     t_admitted: Optional[float] = None
     t_first_token: Optional[float] = None
     t_done: Optional[float] = None
@@ -81,6 +104,28 @@ class Request:
             [self.prompt, np.asarray(self.out_tokens[:-1], np.int32)])
 
     @property
+    def publishable_end(self) -> int:
+        """Tokens of ``kv_tokens`` whose pages may be content-indexed
+        under ``kv_namespace``.  An ensemble member's stream is dense-
+        encoded only up to ``mask_from`` (its masked tail is private to
+        the member's circuit); a solo stream is uniformly encoded."""
+        return self.mask_from if self.group is not None \
+            else self.num_kv_tokens
+
+    @property
+    def match_cap(self) -> int:
+        """Tokens a prefix-cache lookup may cover at admission.  A fresh
+        request must recompute at least its last prompt token — the chunk
+        that completes prefill yields the first sampled token; a preempted
+        request's next token is already known, so its whole recompute
+        stream is fair game (capped at the publishable region)."""
+        if self.group is not None:
+            return self.mask_from
+        if self.out_tokens:
+            return self.num_kv_tokens
+        return self.prompt_len - 1
+
+    @property
     def in_prefill(self) -> bool:
         """Still streaming prompt (or recomputed) KV into pages; a fresh
         request stays in prefill until its first token is sampled."""
@@ -100,18 +145,30 @@ class EnsembleGroup:
     collective ensemble at inference): G member requests, one per submodel,
     advance in lockstep and share one combined token stream.
 
-    Members are scheduled as an atomic unit — admitted together (G slots +
+    Members are scheduled as an atomic unit — admitted together (slots +
     pages for every member, or none), preempted together, finished together.
     Per-step logits are combined *on device* inside the unified step
     (``combine``: mean of member logits, or a majority vote over member
     samples), so every member records the same token and their KV states
-    stay consistent with the shared stream.  Member KV pages are NOT shared:
-    each circuit's masked weights produce different K/V for the same tokens
-    (pages could only be shared between circuits with identical masks)."""
+    stay consistent with the shared stream.
+
+    The prompt *context* — attention K/V for positions [0, prompt_len - 1)
+    — is encoded by the dense parent (circuit masks engage from
+    ``mask_from`` = prompt_len - 1 onward: each member encodes the last
+    prompt token and its decode tail through its own masked FFNs), so the
+    context is byte-identical across members by construction.  With
+    ``share`` set (engine prefix cache on) it is therefore computed ONCE:
+    the leader prefills it, members fork the leader's prompt pages
+    (refcount G) and only their per-member tails copy-on-write on
+    divergence.  With ``share`` unset every member re-prefills the same
+    bytes into private pages — the compatibility path the parity tests
+    compare against."""
 
     id: int
     combine: str                        # "mean_logit" | "majority_vote"
     members: List[Request] = field(default_factory=list)
+    share: bool = False                 # prefill the shared context once
+    forked: bool = False                # members mapped the leader's pages
 
     @property
     def leader(self) -> Request:
@@ -130,6 +187,17 @@ def _unit(req: Request) -> List[Request]:
     """The atomic scheduling unit ``req`` belongs to (its whole ensemble
     group, or just itself)."""
     return req.group.members if req.group is not None else [req]
+
+
+@dataclass
+class _AdmissionPlan:
+    """Sized admission for one request of a unit."""
+    req: Request
+    cached: List[int]                   # prefix-cache pages to adopt
+    cached_tokens: int
+    fresh: int                          # pages to allocate now
+    deferred: int                       # pages to promise (reserve members)
+    hashes: List[bytes]                 # content ids for publish_prefix
 
 
 class FCFSScheduler:
@@ -156,14 +224,70 @@ class FCFSScheduler:
     def has_work(self) -> bool:
         return bool(self.waiting or self.running)
 
-    def admission_pages(self, req: Request) -> int:
-        """Pages the policy demands free before ``req`` may join.  For a
-        preempted request re-admitting, ``num_kv_tokens`` carries the grown
-        context, so on_demand re-reserves everything its recomputed KV (+1
-        token of headroom) needs."""
+    # -- admission sizing ----------------------------------------------------
+    @staticmethod
+    def _is_shared_member(req: Request) -> bool:
+        """True for a non-leader member of a share-mode ensemble: it maps
+        the leader's prompt pages at fork time instead of allocating its
+        own."""
+        g = req.group
+        return g is not None and g.share and req is not g.leader
+
+    def _worst_case_pages(self, req: Request) -> int:
+        """Pages the policy wants covered for ``req`` ignoring cache hits.
+        For a preempted request re-admitting, ``num_kv_tokens`` carries the
+        grown context, so on_demand re-reserves everything its recomputed
+        KV (+1 token of headroom) needs."""
         if self.policy == "reserve":
             return self.pool.pages_for(req.prompt_len + req.max_new_tokens)
         return self.pool.pages_for(req.num_kv_tokens + 1)
+
+    def admission_pages(self, req: Request) -> int:
+        """Pages the policy demands available before ``req`` may join,
+        assuming no prefix-cache hit (the worst case — feasibility checks
+        use this).  A shared-prefill ensemble member only ever owns its
+        tail: the shared full prompt pages are the leader's."""
+        need = self._worst_case_pages(req)
+        if self._is_shared_member(req):
+            need = max(0, need - req.mask_from // self.pool.page_size)
+        return need
+
+    def unit_admission_pages(self, unit: List[Request]) -> int:
+        """Worst-case pages the whole scheduling unit needs available to
+        admit (no cache hits)."""
+        return sum(self.admission_pages(r) for r in unit)
+
+    def _plan_admission(self, unit: List[Request]) -> List[_AdmissionPlan]:
+        """Size every request of a unit against the pool's prefix cache:
+        cached prompt pages are adopted, only the uncached tail is
+        allocated fresh, and shared-prefill member tails are deferred
+        (reserve) or grown lazily (on_demand)."""
+        plans = []
+        P = self.pool.page_size
+        for req in unit:
+            if self._is_shared_member(req):
+                deferred = self.admission_pages(req) \
+                    if self.policy == "reserve" else 0
+                plans.append(_AdmissionPlan(req, [], 0, 0, deferred, []))
+                continue
+            # the chain is deterministic per (namespace, stream prefix) and
+            # streams only ever append, so reuse the hashes from a previous
+            # attempt (a blocked FCFS head replans every tick) unless a
+            # preemption grew the publishable region since
+            hashes = req.page_hashes
+            if len(hashes) != req.publishable_end // P:
+                hashes = chain_hashes(
+                    req.kv_namespace,
+                    np.asarray(req.kv_tokens[:req.publishable_end],
+                               np.int32), P)
+                req.page_hashes = hashes
+            cap = req.match_cap
+            cached = self.pool.match_pages(hashes[:cap // P]) \
+                if self.pool.cache is not None else []
+            fresh = max(0, self._worst_case_pages(req) - len(cached))
+            plans.append(_AdmissionPlan(req, cached, len(cached) * P,
+                                        fresh, 0, hashes))
+        return plans
 
     # -- lifecycle ----------------------------------------------------------
     def admit(self, now: float) -> List[Request]:
@@ -181,37 +305,59 @@ class FCFSScheduler:
             # together; preemption pushes the whole unit back together)
             assert all(self.waiting[i] is r for i, r in enumerate(unit)), \
                 "ensemble members not contiguous at queue head"
-            needs = [self.admission_pages(r) for r in unit]
-            if not self.pool.can_alloc(sum(needs)):
+            plans = self._plan_admission(unit)
+            pinned = frozenset(p for pl in plans for p in pl.cached)
+            need = sum(pl.fresh + pl.deferred for pl in plans)
+            if not self.pool.can_alloc(need, pinned=pinned):
                 break
-            for req, need in zip(unit, needs):
+            for pl in plans:
+                req = pl.req
                 self.waiting.popleft()
                 req.slot = self._free_slots.pop()
                 req.t_admitted = now
                 req.admit_seq = self._admit_counter
                 self._admit_counter += 1
-                req.prefill_pos = 0
-                self.pool.alloc_pages(req.id, need, owner=req.submodel_id)
+                req.prefill_pos = pl.cached_tokens
+                req.num_cached_tokens = pl.cached_tokens
+                req.cache_eligible_tokens = \
+                    0 if self._is_shared_member(req) else req.match_cap
+                req.page_hashes = pl.hashes
+                self.pool.alloc_pages(req.id, pl.fresh,
+                                      owner=req.submodel_id,
+                                      cached=pl.cached, deferred=pl.deferred)
                 self.running[req.slot] = req
                 admitted.append(req)
         return admitted
 
-    def grow(self, req: Request) -> List[int]:
-        """Make sure ``req`` has pages through its current context length
-        (the next decode step writes at position context_len - 1).  Only the
-        on_demand policy ever allocates here; reserve is already covered.
-        Raises PagePoolOOM on pool pressure — the engine answers by
-        preempting the youngest running sequence and retrying."""
-        return self.pool.ensure(req.id, req.context_len)
+    def fork_group(self, group: EnsembleGroup) -> int:
+        """Map the leader's shared prompt pages — the dense-encoded context
+        [0, mask_from) — into every other member's table (refcount + 1 per
+        page; the trailing partial page copy-on-writes when the member's
+        masked tail first touches it).  Members resume prefill at
+        ``mask_from``: their masked last prompt token + decode tail is all
+        they ever compute.  Returns prefill tokens saved vs. the
+        re-prefill path."""
+        leader = group.leader
+        n_shared = self.pool.pages_for(leader.mask_from)
+        shared = self.pool.table(leader.id)[:n_shared]
+        saved = 0
+        for m in group.members[1:]:
+            self.pool.adopt_prefix(m.id, shared)
+            m.prefill_pos = m.mask_from
+            saved += m.mask_from
+        group.forked = True
+        return saved
 
     def preempt_youngest(self) -> Optional[Request]:
         """Evict the most recently admitted running scheduling unit (a solo
         sequence, or a whole ensemble group) back to the HEAD of the waiting
-        queue: its pages return to the free list and its KV is recomputed on
-        re-admission via chunked prefill.  Returns the victim (a group's
-        leader), or None when fewer than two units run (evicting the sole
-        survivor could never free pages for it — that is a genuine,
-        unservable OOM the engine must surface)."""
+        queue: its page references are released (shared pages survive under
+        their other holders; exclusive pages go back to the free list or
+        the prefix cache) and its KV is recomputed on re-admission via
+        chunked prefill.  Returns the victim (a group's leader), or None
+        when fewer than two units run (evicting the sole survivor could
+        never free pages for it — that is a genuine, unservable OOM the
+        engine must surface)."""
         units: Dict[int, List[Request]] = {}      # keyed by leader id
         for req in self.running.values():
             units.setdefault(_unit(req)[0].id, _unit(req))
@@ -232,6 +378,8 @@ class FCFSScheduler:
             victim.prefill_pos = 0
             victim.num_preemptions += 1
             self.waiting.appendleft(victim)
+        if victims[0].group is not None:
+            victims[0].group.forked = False
         return victims[0]
 
     def record_token(self, slot: int, token: int, now: float) -> None:
@@ -241,7 +389,7 @@ class FCFSScheduler:
         req.out_tokens.append(token)
 
     def evict_finished(self, now: float) -> List[Request]:
-        """Free slots + pages of every finished running request."""
+        """Free slots + page references of every finished running request."""
         done = []
         for slot in sorted(self.running):
             req = self.running[slot]

@@ -154,12 +154,46 @@ def test_pool_utilization_by_owner():
     pool.alloc_pages(1, 2, owner=1)
     pool.alloc_pages(2, 1, owner=0)
     by = pool.utilization_by_owner()
-    assert by[0] == pytest.approx(4 / 8) and by[1] == pytest.approx(2 / 8)
-    assert sum(by.values()) == pytest.approx(pool.utilization())
+    assert by[0] == 4 / 8 and by[1] == 2 / 8
+    # integer page counts per owner, divided once: the documented equality
+    # holds EXACTLY, not approximately (no per-sequence float accumulation)
+    assert pool.pages_by_owner() == {0: 4, 1: 2}
+    assert sum(pool.pages_by_owner().values()) == pool.used_pages
+    assert sum(by.values()) == pool.utilization()
     pool.check_invariants()
     pool.free_seq(0)
     pool.free_seq(2)
     assert 0 not in pool.utilization_by_owner()
+    pool.check_invariants()
+
+
+def test_pool_utilization_by_owner_exact_on_awkward_capacity():
+    # capacity 7 makes 1/7-steps inexact in binary floating point: the old
+    # implementation accumulated one float fraction PER SEQUENCE, so seven
+    # single-page sequences of one owner summed to 0.9999999999999998, not
+    # utilization() == 1.0.  Integer page counts divided once per owner
+    # give exactly 7/7.
+    pool = PagePool(num_pages=8, page_size=4)
+    for seq in range(7):
+        pool.alloc_pages(seq, 1, owner="tenant")
+    by = pool.utilization_by_owner()
+    assert by == {"tenant": 1.0}
+    assert sum(by.values()) == pool.utilization() == 1.0
+    assert sum(pool.pages_by_owner().values()) == pool.used_pages == 7
+    pool.check_invariants()
+
+
+def test_pool_shared_page_attributed_once():
+    """A page mapped by several owners counts once — for the owner of the
+    earliest-registered sequence — so per-owner counts still sum exactly
+    to used_pages under fork/adopt sharing."""
+    pool = PagePool(num_pages=9, page_size=4, prefix_cache=True)
+    pool.alloc_pages(0, 2, owner=0)
+    pool.fork(0, 1, owner=1)                     # shares both pages
+    pool.alloc_pages(2, 1, owner=1)
+    assert pool.pages_by_owner() == {0: 2, 1: 1}
+    assert sum(pool.pages_by_owner().values()) == pool.used_pages == 3
+    assert sum(pool.utilization_by_owner().values()) == pool.utilization()
     pool.check_invariants()
 
 
@@ -229,20 +263,22 @@ def test_single_tenant_engine_unaffected_by_bank_plumbing():
 # ensemble: on-device combine vs dense per-circuit reference
 # ---------------------------------------------------------------------------
 def _dense_reference_ensemble(cfg, params, bank, prompt, max_new, combine):
-    """Host-side oracle: run every circuit through the dense prefill/decode
-    path, combine logits per step (mean-logit argmax, or majority vote over
-    member argmaxes; ties -> lowest token id), feed the combined token back
-    to every circuit."""
+    """Host-side oracle for the ensemble's shared-context semantics: the
+    prompt context [0, L - 1) is encoded ONCE by the dense parent (no
+    circuit masks — attention K/V is member-invariant by construction, the
+    fact the engine's fork/prefix-cache path banks on); each circuit then
+    encodes the last prompt token and its decode tail through its own
+    masked FFNs.  Per-step logits are combined (mean-logit argmax, or
+    majority vote over member argmaxes; ties -> lowest token id) and the
+    combined token is fed back to every circuit."""
     ctx = make_ctx(cfg, None)
     G = bank.num_submodels
     L = len(prompt)
-    logits, caches = [], []
-    for g in range(G):
-        masks = _serve_masks_for(bank, [g])
-        lg, cache, _ = api.prefill(
-            params, {"tokens": jnp.asarray([prompt], jnp.int32)}, cfg, ctx,
-            serve_masks=masks)
-        buf = T.init_cache(cfg, 1, L + max_new, dtype=jnp.float32)
+    buf = T.init_cache(cfg, 1, L + max_new, dtype=jnp.float32)
+    if L > 1:
+        _, shared, _ = api.prefill(
+            params, {"tokens": jnp.asarray([prompt[:-1]], jnp.int32)}, cfg,
+            ctx, serve_masks=None)
 
         def splice(b, p):
             ax = b.ndim - 3
@@ -250,8 +286,10 @@ def _dense_reference_ensemble(cfg, params, bank, prompt, max_new, combine):
             pad[ax] = (0, b.shape[ax] - p.shape[ax])
             return jnp.pad(p, pad).astype(b.dtype)
 
-        caches.append(jax.tree.map(splice, buf, cache))
-        logits.append(np.asarray(lg[0], np.float32))
+        shared = jax.tree.map(splice, buf, shared)
+    else:
+        shared = buf
+    caches = [shared for _ in range(G)]          # value-identical contexts
 
     def pick(step_logits):
         if combine == "mean_logit":
@@ -260,16 +298,18 @@ def _dense_reference_ensemble(cfg, params, bank, prompt, max_new, combine):
                             minlength=cfg.vocab_size)
         return int(np.argmax(votes))
 
-    toks = [pick(logits)]
-    for i in range(max_new - 1):
+    toks = []
+    feed = int(prompt[-1])                       # members encode this token
+    for i in range(max_new):
         step_logits = []
         for g in range(G):
             lg, caches[g] = api.decode_step(
-                params, caches[g], jnp.asarray([[toks[-1]]], jnp.int32),
-                jnp.asarray(L + i, jnp.int32), cfg, ctx,
+                params, caches[g], jnp.asarray([[feed]], jnp.int32),
+                jnp.asarray(L - 1 + i, jnp.int32), cfg, ctx,
                 serve_masks=_serve_masks_for(bank, [g]))
             step_logits.append(np.asarray(lg[0], np.float32))
         toks.append(pick(step_logits))
+        feed = toks[-1]
     return toks
 
 

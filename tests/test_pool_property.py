@@ -1,0 +1,118 @@
+"""Hypothesis property tests for the ref-counted COW PagePool: random
+alloc / ensure / fork / prepare_write / publish / free / pressure-evict
+interleavings must keep ``check_invariants`` green after every op —
+refcounts equal table references, prefix-cache-held pages are unreferenced
+by live sequences, no page is simultaneously free and mapped, and a
+COW-prepared write range is always exclusively owned by the writer.
+"""
+import numpy as np
+import pytest
+
+from repro.serving import PagePool, PagePoolOOM, chain_hashes
+
+P = 4  # page size
+
+# ---------------------------------------------------------------------------
+# hypothesis property test: random interleavings vs invariants
+# ---------------------------------------------------------------------------
+hypothesis = pytest.importorskip("hypothesis")
+from hypothesis import HealthCheck, given, settings, strategies as st  # noqa: E402
+
+
+@settings(max_examples=60, deadline=None,
+          suppress_health_check=[HealthCheck.too_slow])
+@given(st.data())
+def test_pool_random_interleavings_keep_invariants(data):
+    """alloc / ensure / fork / prepare_write / publish / free / pressure-
+    evict in random order: after every op the pool invariants hold —
+    refcounts equal table references, cache-held pages are unreferenced,
+    no page is both free and mapped, and a COW-prepared range is always
+    exclusively owned (refcount 1) by the writer."""
+    pool = PagePool(num_pages=data.draw(st.integers(6, 20), label="pages"),
+                    page_size=P, prefix_cache=True)
+    streams = {}                     # seq -> (tokens, hashes)
+    next_seq = 0
+    for _ in range(data.draw(st.integers(5, 30), label="ops")):
+        live = sorted(streams)
+        op = data.draw(st.sampled_from(
+            ["alloc", "ensure", "fork", "write", "publish", "free"]))
+        try:
+            if op == "alloc":
+                n = data.draw(st.integers(1, 3 * P))
+                toks = np.asarray(data.draw(st.lists(
+                    st.integers(0, 2), min_size=n, max_size=n)), np.int32)
+                hashes = chain_hashes(b"ns", toks, P)
+                cached = pool.match_pages(hashes[:max(0, (n - 1) // P)])
+                fresh = pool.pages_for(n) - len(cached)
+                pool.alloc_pages(next_seq, fresh, owner=next_seq % 2,
+                                 cached=cached)
+                streams[next_seq] = (toks, hashes)
+                next_seq += 1
+            elif op == "ensure" and live:
+                seq = data.draw(st.sampled_from(live))
+                toks, _ = streams[seq]
+                extra = data.draw(st.integers(1, P + 1))
+                grown = np.concatenate(
+                    [toks, np.zeros((extra,), np.int32)])
+                pool.ensure(seq, len(grown))
+                streams[seq] = (grown, chain_hashes(b"ns", grown, P))
+            elif op == "fork" and live:
+                src = data.draw(st.sampled_from(live))
+                pool.fork(src, next_seq, owner=next_seq % 2)
+                streams[next_seq] = streams[src]
+                next_seq += 1
+            elif op == "write" and live:
+                seq = data.draw(st.sampled_from(live))
+                table = pool.table(seq)
+                if table:
+                    hi = len(table) * P
+                    a = data.draw(st.integers(0, hi - 1))
+                    b = data.draw(st.integers(a + 1, hi))
+                    pool.prepare_write(seq, a, b)
+                    for i in range(a // P, pool.pages_for(b)):
+                        page = pool.table(seq)[i]
+                        assert pool.refcount(page) == 1, \
+                            "COW left a written page shared"
+            elif op == "publish" and live:
+                seq = data.draw(st.sampled_from(live))
+                toks, hashes = streams[seq]
+                pool.publish_prefix(seq, hashes, len(hashes))
+            elif op == "free" and live:
+                seq = data.draw(st.sampled_from(live))
+                pool.free_seq(seq)
+                del streams[seq]
+        except PagePoolOOM:
+            pass                      # legal outcome under pressure
+        pool.check_invariants()
+    for seq in sorted(streams):
+        pool.free_seq(seq)
+    pool.check_invariants()
+    assert pool.used_pages == 0
+
+
+@settings(max_examples=30, deadline=None)
+@given(st.data())
+def test_pool_cow_never_touches_shared_pages(data):
+    """The issue's refcount invariant, stated directly: after
+    ``prepare_write`` the written range is exclusively owned, and every
+    page another sequence still maps kept its refcount and its bytes
+    (same page id in the other table)."""
+    pool = PagePool(num_pages=16, page_size=P, prefix_cache=True)
+    n = data.draw(st.integers(1, 4)) * P
+    pool.alloc(0, n)
+    forks = data.draw(st.integers(1, 3))
+    for f in range(1, forks + 1):
+        pool.fork(0, f)
+    before = {s: pool.table(s) for s in range(forks + 1)}
+    writer = data.draw(st.integers(0, forks))
+    a = data.draw(st.integers(0, n - 1))
+    pool.prepare_write(writer, a, n)
+    for s in range(forks + 1):
+        if s == writer:
+            continue
+        assert pool.table(s) == before[s], "COW mutated a reader's table"
+    for i in range(a // P, n // P):
+        assert pool.refcount(pool.table(writer)[i]) == 1
+    pool.check_invariants()
+
+

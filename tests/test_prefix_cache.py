@@ -1,0 +1,327 @@
+"""Prefix cache + ref-counted copy-on-write PagePool tests.
+
+Pool-level: refcount/fork/adopt/COW semantics, content-hash chaining,
+publish/match/LRU-evict flow, descriptive double-free errors, and a
+hypothesis property test driving random alloc/ensure/fork/free/evict
+interleavings against ``check_invariants`` (refcounts match tables, cached
+pages are unreferenced by live sequences, no COW write ever lands on a
+page with refcount > 1).
+
+Engine-level acceptance: a prompt served twice is byte-identical with the
+second prefill mostly skipped; an ``ensemble=...`` request with the prefix
+cache on emits byte-identical streams to the per-member re-prefill path
+(greedy and temp > 0) while prefilling ~1/G of the tokens; a shared-
+system-prompt mix hits >= 50%; decode runs one tick per token (the
+redundant re-feed chunk regression).
+"""
+import numpy as np
+import jax
+import pytest
+
+from repro.configs.base import HornConfig, get_model_config, reduced
+from repro.models import api
+from repro.serving import (Engine, EngineConfig, ModelBank, PagePool,
+                           PagePoolOOM, Router, chain_hashes)
+
+P = 4  # pool-test page size
+
+
+# ---------------------------------------------------------------------------
+# content hashing
+# ---------------------------------------------------------------------------
+def test_chain_hashes_pin_the_whole_prefix():
+    a = chain_hashes(b"dense", np.arange(12), P)
+    b = chain_hashes(b"dense", np.arange(12), P)
+    assert a == b and len(a) == 3                # deterministic, full pages
+    # a change in block 0 changes EVERY downstream hash (the chain)
+    toks = np.arange(12)
+    toks[0] += 1
+    c = chain_hashes(b"dense", toks, P)
+    assert all(x != y for x, y in zip(a, c))
+    # same tokens under another namespace never collide
+    d = chain_hashes(b"sub:1", np.arange(12), P)
+    assert all(x != y for x, y in zip(a, d))
+    # partial trailing block contributes no hash
+    assert chain_hashes(b"dense", np.arange(11), P) == a[:2]
+
+
+# ---------------------------------------------------------------------------
+# pool lifecycle bugfixes
+# ---------------------------------------------------------------------------
+def test_double_free_raises_descriptive_error():
+    pool = PagePool(num_pages=8, page_size=P)
+    pool.alloc(7, 6)
+    assert pool.free_seq(7) == 2
+    with pytest.raises(ValueError, match="double free"):
+        pool.free_seq(7)                         # not a bare KeyError
+    with pytest.raises(ValueError, match="not allocated"):
+        pool.free_seq(99)
+    with pytest.raises(ValueError, match="not allocated"):
+        pool.table(99)
+    with pytest.raises(ValueError, match="not allocated"):
+        pool.ensure(99, 4)
+    pool.check_invariants()
+
+
+def test_engine_rejects_empty_prompt(tiny):
+    cfg, params = tiny
+    eng = _engine(cfg, params, prefix_cache=True)
+    with pytest.raises(ValueError, match="[Ee]mpty prompt|length 0"):
+        eng.submit(np.zeros((0,), np.int32), 4)
+    with pytest.raises(ValueError):
+        eng.submit([], 4)
+    assert not eng.sched.has_work()              # nothing was queued
+
+
+# ---------------------------------------------------------------------------
+# refcounts, fork, COW, publish/match/evict
+# ---------------------------------------------------------------------------
+def test_fork_shares_and_cow_isolates():
+    pool = PagePool(num_pages=12, page_size=P, prefix_cache=True)
+    t0 = list(pool.alloc(0, 8))
+    pool.fork(0, 1)
+    assert pool.table(1) == t0
+    assert all(pool.refcount(p) == 2 for p in t0)
+    pool.check_invariants()
+    # writer 1 touches page 1 -> private copy; page 0 stays shared
+    pairs = pool.prepare_write(1, P, 2 * P)
+    assert len(pairs) == 1 and pairs[0][0] == t0[1]
+    assert pool.table(0) == t0                   # victim table untouched
+    assert pool.table(1)[0] == t0[0] and pool.table(1)[1] != t0[1]
+    assert pool.refcount(t0[0]) == 2 and pool.refcount(t0[1]) == 1
+    # the last holder writes in place: no copy
+    assert pool.prepare_write(0, P, 2 * P) == []
+    pool.check_invariants()
+    pool.free_seq(0)
+    pool.free_seq(1)
+    assert pool.used_pages == 0
+    pool.check_invariants()
+
+
+def test_publish_match_lru_evict_roundtrip():
+    pool = PagePool(num_pages=8, page_size=P, prefix_cache=True)
+    toks = np.arange(3 * P, dtype=np.int32)
+    hs = chain_hashes(b"dense", toks, P)
+    t = list(pool.alloc(0, 3 * P))
+    assert pool.publish_prefix(0, hs, 3) == 3
+    # indexed while live: a concurrent request adopts at refcount 2
+    hit = pool.match_pages(hs)
+    assert hit == t
+    pool.alloc_pages(1, 0, cached=hit)
+    assert all(pool.refcount(p) == 2 for p in t)
+    pool.check_invariants()
+    pool.free_seq(0)
+    pool.free_seq(1)
+    # refcount 0 + published -> held by the cache, not freed
+    assert pool.used_pages == 0 and pool.cached_pages == 3
+    assert pool.match_pages(hs) == t             # still matchable
+    # allocation pressure evicts LRU-first — deepest blocks retired first,
+    # so the surviving entry is the shallow prefix page, still matchable
+    # through the chain walk
+    pool.alloc_pages(2, pool.free_pages + 2)
+    assert pool.cached_pages == 1
+    assert pool.match_pages(hs) == [t[0]]
+    pool.check_invariants()
+
+
+def test_match_is_capped_and_chained():
+    pool = PagePool(num_pages=10, page_size=P, prefix_cache=True)
+    toks = np.arange(3 * P, dtype=np.int32)
+    hs = chain_hashes(b"dense", toks, P)
+    pool.alloc(0, 3 * P)
+    pool.publish_prefix(0, hs, 3)
+    pages, n = pool.match_prefix(b"dense", toks)
+    assert n == 3 * P and len(pages) == 3
+    # a fresh prompt must keep its last token: cap excludes the final page
+    pages, n = pool.match_prefix(b"dense", toks, max_tokens=3 * P - 1)
+    assert n == 2 * P
+    # divergence after page 0 matches exactly one page
+    toks2 = toks.copy()
+    toks2[P] += 1
+    pages, n = pool.match_prefix(b"dense", toks2)
+    assert n == P
+    assert pool.match_prefix(b"sub:0", toks) == ([], 0)
+    pool.free_seq(0)
+    pool.check_invariants()
+
+
+def test_deferred_promise_blocks_interlopers():
+    pool = PagePool(num_pages=8, page_size=P)   # 7 allocatable
+    pool.alloc_pages(0, 2, deferred=3)          # owns 2, promises 3 more
+    assert pool.deferred_pages == 3
+    with pytest.raises(PagePoolOOM):
+        pool.alloc_pages(1, 3)                  # only 7-2-3=2 unpromised
+    pool.alloc_pages(1, 2)
+    pool.ensure(0, 5 * P)                       # redeems the promise
+    assert pool.deferred_pages == 0
+    pool.check_invariants()
+    pool.free_seq(0)
+    pool.free_seq(1)
+    pool.check_invariants()
+
+
+# ---------------------------------------------------------------------------
+# engine-level acceptance
+# ---------------------------------------------------------------------------
+@pytest.fixture(scope="module")
+def tiny():
+    cfg = reduced(get_model_config("qwen3-1.7b"), dtype="float32")
+    return cfg, api.model_init(jax.random.key(0), cfg)
+
+
+def _engine(cfg, params, *, prefix_cache, bank=None, slots=3,
+            temperature=0.0, pages=64, budget=32):
+    return Engine(cfg, params,
+                  EngineConfig(num_slots=slots, num_pages=pages, page_size=8,
+                               max_prompt_len=32, max_new_tokens=5,
+                               token_budget=budget, temperature=temperature,
+                               policy="on_demand", kv_dtype="float32",
+                               compute_dtype="float32",
+                               prefix_cache=prefix_cache),
+                  bank=bank,
+                  router=Router(bank.num_submodels) if bank else None)
+
+
+def test_solo_prefix_hit_is_byte_identical(tiny):
+    cfg, params = tiny
+    rng = np.random.default_rng(3)
+    prompt = rng.integers(1, cfg.vocab_size, (20,)).astype(np.int32)
+    cold = _engine(cfg, params, prefix_cache=False)
+    cold.submit(prompt, 5)
+    cold.run()
+    want = list(cold.sched.finished[0].out_tokens)
+
+    warm = _engine(cfg, params, prefix_cache=True)
+    r1 = warm.submit(prompt, 5)
+    warm.run()
+    r2 = warm.submit(prompt, 5)
+    warm.run()
+    assert list(r1.out_tokens) == list(r2.out_tokens) == want
+    # 20-token prompt, 8-token pages, last token never cached: 2 full pages
+    assert r2.num_cached_tokens == 16
+    assert warm.cache_hit_tokens == 16 and warm.prefill_tok_saved >= 16
+    warm.pool.check_invariants()
+    assert warm.pool.used_pages == 0             # retired into the cache
+    assert warm.pool.cached_pages > 0
+
+
+def test_live_pages_shared_across_concurrent_requests(tiny):
+    """The millions-of-users path: request 2 adopts request 1's pages
+    while request 1 is still decoding against them (refcount 2)."""
+    cfg, params = tiny
+    rng = np.random.default_rng(4)
+    prompt = rng.integers(1, cfg.vocab_size, (17,)).astype(np.int32)
+    eng = _engine(cfg, params, prefix_cache=True, slots=2)
+    r1 = eng.submit(prompt, 5)
+    while not r1.out_tokens:                     # prefill + publish
+        eng.step()
+    r2 = eng.submit(prompt, 5)
+    eng.run()
+    assert r2.num_cached_tokens == 16
+    assert list(r1.out_tokens) == list(r2.out_tokens)
+    eng.pool.check_invariants()
+
+
+@pytest.mark.parametrize("temperature", [0.0, 0.8])
+@pytest.mark.parametrize("combine", ["mean_logit", "majority_vote"])
+def test_ensemble_share_parity_and_prefill_savings(tiny, temperature,
+                                                   combine):
+    """The acceptance bar: with the prefix cache on, an ensemble request
+    emits byte-identical combined streams to the per-member re-prefill
+    path (greedy and sampled) while prefilling ~1/G of the tokens — the
+    leader encodes the shared context once, members fork its pages and
+    only their tails copy-on-write."""
+    cfg, params = tiny
+    G = 3
+    bank = ModelBank(cfg, HornConfig(enabled=True, keep_hidden=0.5,
+                                     keep_input=1.0, block_size=4), G,
+                     seed=1)
+    rng = np.random.default_rng(5)
+    prompt = rng.integers(1, cfg.vocab_size, (19,)).astype(np.int32)
+    L = len(prompt)
+
+    cold = _engine(cfg, params, prefix_cache=False, bank=bank,
+                   temperature=temperature)
+    gc = cold.submit(prompt, 5, ensemble=combine)
+    cold.run()
+    warm = _engine(cfg, params, prefix_cache=True, bank=bank,
+                   temperature=temperature)
+    gw = warm.submit(prompt, 5, ensemble=combine)
+    warm.run()
+
+    assert gw.out_tokens == gc.out_tokens
+    for m in gw.members:
+        assert list(m.out_tokens) == gw.out_tokens
+    # per-member re-prefill costs G * L; the share path costs the shared
+    # context once plus one masked token per member
+    assert cold.prefill_tokens == G * L
+    assert warm.prefill_tokens == (L - 1) + G
+    assert warm.prefill_tok_saved == (G - 1) * (L - 1)
+    # tails diverged off the shared partial page: one COW copy per member
+    # beyond the last holder
+    assert warm.cow_page_copies == G - 1
+    for eng in (cold, warm):
+        eng.pool.check_invariants()
+        assert eng.pool.used_pages == 0
+
+
+def test_reserve_ensemble_fits_exactly_sized_pool(tiny):
+    """Deferred-reserve accounting regression: an ensemble whose
+    worst-case (leader 3 pages + 2 member-tail promises) exactly equals
+    pool capacity must serve without preemption.  Members COW the shared
+    boundary page BEFORE the leader, redeeming their own credits; the
+    leader — whose reserve covers the original page — keeps it in place.
+    (Leader-first write-prep used to draw an unreserved page and OOM.)"""
+    cfg, params = tiny
+    G = 3
+    bank = ModelBank(cfg, HornConfig(enabled=True, keep_hidden=0.5,
+                                     keep_input=1.0, block_size=4), G,
+                     seed=1)
+    rng = np.random.default_rng(9)
+    prompt = rng.integers(1, cfg.vocab_size, (19,)).astype(np.int32)
+    eng = Engine(cfg, params,
+                 EngineConfig(num_slots=G, num_pages=6, page_size=8,
+                              max_prompt_len=24, max_new_tokens=5,
+                              token_budget=24, policy="reserve",
+                              kv_dtype="float32", compute_dtype="float32",
+                              prefix_cache=True),
+                 bank=bank, router=Router(G))
+    group = eng.submit(prompt, 5, ensemble="mean_logit")
+    eng.run()
+    assert group.finished and len(group.out_tokens) == 5
+    assert eng.preemptions == 0, "reserve must never preempt"
+    assert eng.cow_page_copies == G - 1
+    eng.pool.check_invariants()
+    assert eng.pool.deferred_pages == 0
+
+
+def test_shared_system_prompt_mix_hit_rate(tiny):
+    """>= 50% of cache-eligible prompt tokens served from the cache when
+    requests share a system prefix (3 pages of 8) with unique tails."""
+    cfg, params = tiny
+    rng = np.random.default_rng(6)
+    sys_prompt = rng.integers(1, cfg.vocab_size, (24,)).astype(np.int32)
+    eng = _engine(cfg, params, prefix_cache=True, slots=2, pages=128)
+    outs = []
+    for _ in range(6):
+        tail = rng.integers(1, cfg.vocab_size, (8,)).astype(np.int32)
+        outs.append(eng.submit(np.concatenate([sys_prompt, tail]), 4))
+        eng.run()
+    # requests 2..6 each match the 24-token system prefix of 31 eligible
+    assert eng.cache_hit_tokens == 5 * 24
+    assert eng.prefix_hit_rate >= 0.5
+    eng.pool.check_invariants()
+
+
+def test_decode_is_one_tick_per_token(tiny):
+    """Regression: decode used to alternate with a redundant 1-token
+    re-feed chunk (prefill_pos lagging the decode write), doubling ticks
+    per generated token."""
+    cfg, params = tiny
+    prompt = np.arange(1, 9, dtype=np.int32)
+    eng = _engine(cfg, params, prefix_cache=True)
+    eng.submit(prompt, 5)
+    eng.run()
+    # 1 prefill tick (records token 1) + 4 decode ticks, + admission slack
+    assert eng.steps <= 6, f"{eng.steps} ticks for 5 tokens"
+    assert eng.prefill_tokens == 8               # the prompt, once

@@ -127,7 +127,7 @@ def test_scheduler_reserve_policy_never_grows():
     before = len(pool.table(0))
     for _ in range(5):
         sched.record_token(req.slot, 1, now=0.0)
-        sched.grow(req)
+        pool.ensure(req.id, req.context_len)        # the engine's decode grow
     assert len(pool.table(0)) == before             # worst case pre-reserved
 
 
