@@ -4,7 +4,7 @@ load; emits ``BENCH_serving.json`` so the perf trajectory is recorded per PR.
     PYTHONPATH=src python benchmarks/serving_bench.py [--arch qwen3-1.7b]
         [--requests 32] [--long-frac 0.1] [--out BENCH_serving.json]
 
-Five phases:
+Six phases:
   "default"        the log-uniform prompt mix (comparable across PRs)
   "long_mix"       the adversarial mix: ``--long-frac`` of prompts pinned
                    at ``max_prompt`` exactly.  Before chunked prefill,
@@ -37,6 +37,16 @@ Five phases:
                    (warm prefill_tok ~ 1/G of cold: the leader encodes
                    the shared context once, members fork its pages and
                    copy-on-write only their decode tails).
+  "speculative"    a decode-heavy mix (short prompts, long generations)
+                   served plain and with ``--speculate-k`` draft tokens
+                   per decode tick: ``accept_rate`` (drafts surviving
+                   verification), ``accepted_tok_per_tick`` (committed
+                   tokens per speculating slot-tick; plain decode's
+                   ceiling is 1.0), and decode tok/s against the
+                   non-speculative baseline on the SAME mix.  Both runs
+                   use the replay warmup (the measured load driven once,
+                   compile-free clock) and no prefix cache, so the delta
+                   is speculation alone.
 
 Metrics (virtual arrival clock at --rate req/s, wall-clock service times):
   decode_tok_s   generated tokens / wall time of the measured phase
@@ -68,10 +78,11 @@ def run(arch: str = "qwen3-1.7b", requests: int = 32, rate: float = 16.0,
         long_frac: float = 0.0, stream: str = "poisson", seed: int = 0,
         submodels: int = 0, ensemble_frac: float = 0.0,
         prefix_cache: bool = True, shared_prefix: int = 0,
-        _engine_cache={}):
+        speculate: int = 0, draft_keep: float = 0.875,
+        warm_with_load: bool = False, _engine_cache={}):
     import jax
     from repro.configs.base import HornConfig, get_model_config, reduced
-    from repro.launch.serve import make_requests
+    from repro.launch.serve import build_draft, make_requests
     from repro.models import api
     from repro.serving import Engine, EngineConfig, ModelBank, Router
 
@@ -80,7 +91,8 @@ def run(arch: str = "qwen3-1.7b", requests: int = 32, rate: float = 16.0,
         num_slots=slots, num_pages=pages, page_size=page_size,
         max_prompt_len=-(-max_prompt // page_size) * page_size,
         max_new_tokens=gen, token_budget=max(budget, slots), seed=seed,
-        policy="on_demand", prefix_cache=prefix_cache)
+        policy="on_demand", prefix_cache=prefix_cache,
+        speculate_k=speculate)
     key = (arch, seed)
     if key not in _engine_cache:          # share params across phases
         _engine_cache.clear()
@@ -94,6 +106,9 @@ def run(arch: str = "qwen3-1.7b", requests: int = 32, rate: float = 16.0,
                                          keep_input=1.0, block_size=16),
                          submodels, seed=seed)
         router = Router(submodels)        # least-loaded
+    draft = build_draft(cfg, params, bank, speculate=speculate,
+                        draft_circuit=0, draft_keep=draft_keep,
+                        mask_block=16, seed=seed)
 
     def load(n):
         return make_requests(n, cfg.vocab_size, rng, stream=stream,
@@ -143,7 +158,8 @@ def run(arch: str = "qwen3-1.7b", requests: int = 32, rate: float = 16.0,
     # stall numbers; a random load would miss rare widths).  The final
     # max-width prompt matters when the budget is not a power of two: a
     # 24-token chunk compiles the C=32 cell no pow2-length prompt reaches
-    engine = Engine(cfg, params, ecfg, bank=bank, router=router)
+    engine = Engine(cfg, params, ecfg, bank=bank, router=router,
+                    draft=draft)
     widths, w = [engine.max_chunk], 1
     while w < engine.max_chunk:
         widths.append(w)
@@ -168,7 +184,19 @@ def run(arch: str = "qwen3-1.7b", requests: int = 32, rate: float = 16.0,
     engine.reset_stats()
 
     n_ensembles = [0]
-    wall, ticks, stalls = drive(engine, load(requests))
+    reqs = load(requests)
+    if warm_with_load:
+        # replay warmup: drive the EXACT measured load once first, so
+        # every jit cell it hits — including the speculative verify-window
+        # and draft catch-up buckets, whose (C, S_v) combinations a width
+        # sweep cannot enumerate — is compiled before the clock starts.
+        # Run with the prefix cache off, or warmup would seed the cache
+        # and the measured run would hit different cells than it compiled.
+        assert not prefix_cache, "replay warmup needs prefix_cache=False"
+        drive(engine, reqs)
+        engine.reset_stats()
+        n_ensembles[0] = 0
+    wall, ticks, stalls = drive(engine, reqs)
     # an ensemble group delivers ONE token stream through G member slots:
     # latency/TTFT/delivered-throughput count each group once (its leader),
     # while decode_tok_s keeps counting member tokens (device throughput)
@@ -197,11 +225,21 @@ def run(arch: str = "qwen3-1.7b", requests: int = 32, rate: float = 16.0,
                                   / max(engine.steps, 1), 3),
     }
     if prefix_cache:
+        hr = engine.prefix_hit_rate      # None when nothing was eligible
         out.update({
-            "prefix_hit_rate": round(engine.prefix_hit_rate, 4),
+            "prefix_hit_rate": None if hr is None else round(hr, 4),
             "prefill_tok_saved": engine.prefill_tok_saved,
             "cache_evictions": engine.cache_evictions,
             "cow_page_copies": engine.cow_page_copies,
+        })
+    if speculate:
+        out.update({
+            "speculate_k": speculate,
+            "accept_rate": round(engine.accept_rate, 4),
+            "accepted_tok_per_tick": round(engine.accepted_tok_per_tick, 4),
+            "spec_drafted": engine.spec_drafted,
+            "draft_calls": engine.spec.draft_calls,
+            "draft_kept_frac": round(engine.spec.draft.kept_frac, 4),
         })
     if bank is not None:
         out.update({
@@ -239,6 +277,9 @@ def main() -> None:
     ap.add_argument("--ensemble-frac", type=float, default=0.25,
                     help="fraction of multi_submodel requests fanned across "
                          "all circuits (mean-logit)")
+    ap.add_argument("--speculate-k", type=int, default=4,
+                    help="draft tokens per decode tick in the speculative "
+                         "phase")
     ap.add_argument("--out", default="BENCH_serving.json")
     args = ap.parse_args()
     if args.ensemble_frac > 0 and args.submodels > args.slots:
@@ -277,6 +318,18 @@ def main() -> None:
             "ensemble_warm": run(**common, submodels=args.submodels,
                                  ensemble_frac=1.0, prefix_cache=True),
         },
+        # speculative decoding vs plain decode on an identical decode-heavy
+        # closed-loop mix: short prompts, long generations, few slots (the
+        # decode-bound regime where landing K+1 tokens per tick pays)
+        "speculative": dict(
+            (name, run(arch=args.arch, requests=args.requests,
+                       slots=4, pages=args.pages,
+                       page_size=args.page_size, max_prompt=16, gen=24,
+                       budget=args.budget, stream="batch",
+                       prefix_cache=False, warm_with_load=True,
+                       speculate=k))
+            for name, k in (("baseline", 0), ("speculate",
+                                              args.speculate_k))),
     }
     with open(args.out, "w") as f:
         json.dump(res, f, indent=2)

@@ -270,6 +270,28 @@ def make_unified_paged_step(run: RunConfig, mesh, *, num_pages: int,
     entirely — no [B, V] one-hot, no second sampling pass — at the cost of
     one extra compile per chunk-width bucket the first time an ensemble
     tick hits it.
+
+    Speculative verify (``draft_lens``/``draft_probs``): a speculating
+    slot's chunk is [pending token, d_1 .. d_dl] — the last committed
+    token plus ``draft_lens[b]`` tokens a draft circuit proposed — and the
+    step scores a *verify window* of S_v = draft_probs.shape[1] + 1
+    positions per slot in the same single call (S_v is static via the
+    ``draft_probs`` shape; the non-speculative engine always passes
+    S_v == 1, which reduces bit-exactly to the classic last-position
+    sampling path).  Greedy (temperature <= 0) accepts the longest prefix
+    of drafts matching the parent argmax and emits the parent's token at
+    the first mismatch (or the bonus token after d_dl when all match).
+    With temperature > 0 the step runs standard rejection sampling against
+    the draft distribution ``draft_probs`` (accept d_j with prob
+    min(1, p_j(d_j)/q_j(d_j)); on rejection resample from
+    norm(max(p - q, 0))) — byte-reproducible: every random draw folds in
+    (req_id, sample_step + j) exactly like plain sampling, with a further
+    fold_in(1)/fold_in(2) separating the accept-uniform and the resample
+    from the bonus categorical.  Returns (sampled [B], accepted [B],
+    cache): ``accepted[b]`` drafts are good, ``sampled[b]`` is the one
+    verified-not-drafted token that follows them.  Non-speculating slots
+    (draft_lens == 0, including every ensemble member) report accepted 0
+    and sample at their last valid position as always.
     """
     cfg = run.model
     ctx = make_ctx(cfg, mesh, run.shape)
@@ -282,21 +304,107 @@ def make_unified_paged_step(run: RunConfig, mesh, *, num_pages: int,
                 keys, logits.astype(f32) / temperature)
         return jnp.argmax(logits, axis=-1)
 
+    def verify(logits_w, tokens, draft_lens, draft_probs, req_ids,
+               sample_steps, root_key):
+        """Accept/advance every slot against its verify window.
+
+        logits_w: [B, S_v, V] — window position j holds the parent's
+        distribution for the token AFTER chunk position j (speculating
+        slots: chunk == window; plain slots: the window right-aligns on
+        the last valid position, only j == S_v - 1 is meaningful).
+        Returns (sampled [B], accepted [B])."""
+        B, S_v, _ = logits_w.shape
+        dl = draft_lens
+        drafts = tokens[:, 1:S_v]                          # [B, S_v-1]
+        tgt = jnp.argmax(logits_w, axis=-1)                # [B, S_v]
+        if temperature <= 0:
+            ok = (tgt[:, :S_v - 1] == drafts) \
+                & (jnp.arange(S_v - 1)[None, :] < dl[:, None])
+            acc = jnp.cumprod(ok.astype(jnp.int32), axis=-1).sum(axis=-1)
+            # acc accepted drafts put the next decision at window position
+            # acc — the correction when acc < dl, the bonus when acc == dl
+            pick = jnp.where(dl > 0, acc, S_v - 1)
+            sampled = jnp.take_along_axis(tgt, pick[:, None], axis=1)[:, 0]
+            return sampled, acc
+        lw = logits_w.astype(f32) / temperature
+        kb = jax.vmap(lambda r: jax.random.fold_in(root_key, r))(req_ids)
+        if S_v == 1:              # no drafts anywhere: classic sampling
+            kp = jax.vmap(jax.random.fold_in)(kb, sample_steps)
+            return jax.vmap(jax.random.categorical)(kp, lw[:, 0]), \
+                jnp.zeros((B,), jnp.int32)
+        p_w = jax.nn.softmax(lw, axis=-1)                  # [B, S_v, V]
+        # the accept-uniform for draft j folds in the step the token would
+        # occupy (sample_step + j), then salt 1 — never colliding with the
+        # categorical draw at that step (no salt) or the resample (salt 2)
+        jj = jnp.arange(S_v - 1)
+        ukeys = jax.vmap(jax.vmap(
+            lambda k, s: jax.random.fold_in(jax.random.fold_in(k, s), 1),
+            in_axes=(None, 0)))(kb, sample_steps[:, None] + jj[None, :])
+        u = jax.vmap(jax.vmap(jax.random.uniform))(ukeys)  # [B, S_v-1]
+        pd = jnp.take_along_axis(p_w[:, :S_v - 1], drafts[..., None],
+                                 axis=-1)[..., 0]
+        qd = jnp.take_along_axis(draft_probs, drafts[..., None],
+                                 axis=-1)[..., 0]
+        ok = (u * jnp.maximum(qd, 1e-30) < pd) \
+            & (jj[None, :] < dl[:, None])
+        acc = jnp.cumprod(ok.astype(jnp.int32), axis=-1).sum(axis=-1)
+        rejected = (dl > 0) & (acc < dl)
+        pick = jnp.where(dl > 0, acc, S_v - 1)
+        # the bonus/plain draw: categorical on the raw scaled logits with
+        # the classic (req_id, step) key — at S_v == 1 this IS the
+        # non-speculative sampling path, bit for bit
+        kp = jax.vmap(jax.random.fold_in)(
+            kb, sample_steps + jnp.where(dl > 0, pick, 0))
+        lp = jnp.take_along_axis(
+            lw, pick[:, None, None], axis=1)[:, 0]         # [B, V]
+        bonus = jax.vmap(jax.random.categorical)(kp, lp)
+        # the rejection resample: norm(max(p - q, 0)) at the first
+        # rejected position (falls back to p when the residual vanishes —
+        # q >= p everywhere means the accept test already passed a.s.)
+        ridx = jnp.minimum(pick, S_v - 2)
+        q_r = jnp.take_along_axis(
+            draft_probs, ridx[:, None, None], axis=1)[:, 0]
+        p_r = jnp.take_along_axis(p_w, ridx[:, None, None], axis=1)[:, 0]
+        res = jnp.maximum(p_r - q_r, 0.0)
+        res = jnp.where(res.sum(-1, keepdims=True) > 0, res, p_r)
+        rkeys = jax.vmap(lambda k: jax.random.fold_in(k, 2))(kp)
+        rtok = jax.vmap(jax.random.categorical)(
+            rkeys, jnp.log(jnp.maximum(res, 1e-30)))
+        sampled = jnp.where(rejected, rtok, bonus)
+        return sampled, acc
+
     def unified_step(params, cache, tokens, starts, chunk_lens, block_tables,
                      req_ids, sample_steps, submodel_ids, seg_ids,
-                     vote_flags, root_key, *, ensembles=False):
+                     vote_flags, draft_lens, draft_probs, root_key, *,
+                     ensembles=False):
         cparams = cast_tree(params, run.compute_dtype)
         serve_masks = None
         if bank_masks is not None:
             serve_masks = jax.tree.map(lambda m: m[submodel_ids], bank_masks)
-        logits, new_cache = api.paged_step(
+        B = tokens.shape[0]
+        S_v = draft_probs.shape[1] + 1
+        j = jnp.arange(S_v)[None, :]
+        cl = chunk_lens[:, None]
+        # speculating slots verify their whole chunk (window == chunk,
+        # left-aligned — a slot clamped below the tick's draft length just
+        # ignores the tail); everyone else right-aligns on the last valid
+        # position so j == S_v - 1 is the classic sampling position
+        widx = jnp.where(draft_lens[:, None] > 0,
+                         jnp.minimum(j, jnp.maximum(cl - 1, 0)),
+                         jnp.clip(cl - S_v + j, 0, tokens.shape[1] - 1))
+        logits_w, new_cache = api.paged_step(
             cparams, cache, tokens, starts, chunk_lens, block_tables,
-            cfg, ctx, serve_masks=serve_masks)
-        if bank_masks is None or not ensembles:  # no combine work this tick
-            sampled = sample(logits, req_ids, sample_steps, root_key)
-        else:
-            B = logits.shape[0]
-            lf = logits.astype(f32)
+            cfg, ctx, serve_masks=serve_masks, logit_index=widx)
+        sampled, accepted = verify(logits_w, tokens, draft_lens,
+                                   draft_probs, req_ids, sample_steps,
+                                   root_key)
+        if bank_masks is not None and ensembles:
+            # ensemble members never speculate (draft_lens == 0): combine
+            # their last-position logits exactly as before and let the
+            # verify result stand for speculating / solo slots
+            lf = jnp.take_along_axis(
+                logits_w, jnp.where(draft_lens > 0, 0, S_v - 1)
+                [:, None, None], axis=1)[:, 0].astype(f32)
             ones = jnp.ones((B,), f32)
             counts = jax.ops.segment_sum(ones, seg_ids, num_segments=B)
             mean = jax.ops.segment_sum(lf, seg_ids, num_segments=B) \
@@ -311,8 +419,11 @@ def make_unified_paged_step(run: RunConfig, mesh, *, num_pages: int,
                 jax.nn.one_hot(own_tok, lf.shape[-1], dtype=f32),
                 seg_ids, num_segments=B)
             vote_tok = jnp.argmax(votes, axis=-1)[seg_ids]
-            sampled = jnp.where(vote_flags, vote_tok, mean_tok)
-        return sampled.astype(jnp.int32), new_cache
+            combined = jnp.where(vote_flags, vote_tok, mean_tok)
+            sampled = jnp.where(draft_lens > 0, sampled, combined)
+            accepted = jnp.where(draft_lens > 0, accepted, 0)
+        return sampled.astype(jnp.int32), accepted.astype(jnp.int32), \
+            new_cache
 
     paxes = api.model_axes(cfg)
     p_shard = tree_shardings(paxes, ctx)
@@ -320,7 +431,7 @@ def make_unified_paged_step(run: RunConfig, mesh, *, num_pages: int,
         lambda: T.init_paged_cache(cfg, num_pages, page_size))
     variants = {
         flag: jax.jit(partial(unified_step, ensembles=flag),
-                      in_shardings=(p_shard,) + (None,) * 11,
+                      in_shardings=(p_shard,) + (None,) * 13,
                       out_shardings=None, donate_argnums=(1,))
         for flag in (False, True)}
 
@@ -328,6 +439,81 @@ def make_unified_paged_step(run: RunConfig, mesh, *, num_pages: int,
         return variants[ensembles](*args)
 
     return step, {"params": p_shard, "cache_struct": cache_struct}
+
+
+def make_draft_spec_step(run: RunConfig, mesh, *, num_pages: int,
+                         page_size: int, k: int, temperature: float = 0.0,
+                         draft_salt: int = 0x5bec):
+    """One jitted *draft tick* for speculative decoding: catch the draft
+    circuit up on each slot's committed stream and autoregressively propose
+    ``k`` tokens, all inside a single device call.
+
+    step(params, cache, tokens [B, C], starts [B], chunk_lens [B],
+         block_tables [B, maxp], req_ids [B], sample_steps [B], root_key)
+      -> (drafts [B, k] int32, draft_probs [B, k, Vq] f32, cache)
+
+    ``tokens`` is the catch-up chunk: the committed tokens the draft has
+    not yet written K/V for, ending with the pending token (the one the
+    parent will decode next), so the chunk's last-position logits propose
+    d_1.  The remaining k - 1 proposals run as a ``lax.scan`` of C == 1
+    paged steps feeding each draft back in — K sequential *model* steps
+    but ONE host dispatch, which is what makes drafting cheaper than the
+    K parent ticks it replaces.  K/V for d_1 .. d_{k-1} is appended to the
+    draft's own page pool as it goes (d_k's K/V is written by the next
+    tick's catch-up, exactly like the engine's pending token).
+
+    Greedy drafts are argmax and ``draft_probs`` is a [B, k, 1] dummy;
+    with temperature > 0 each proposal is a categorical draw under a
+    *draft-private* key chain (root folded with ``draft_salt``, then
+    (req_id, sample_step + i)) — independent of every verify-side draw by
+    construction — and ``draft_probs`` carries the full proposal
+    distribution q_i the verifier's rejection sampler needs.  ``k`` is
+    static: the engine builds one step per draft length it actually runs
+    (jit then caches per catch-up-width bucket)."""
+    cfg = run.model
+    ctx = make_ctx(cfg, mesh, run.shape)
+
+    def sample(logits, req_ids, steps, droot):
+        lf = logits.astype(f32)
+        if temperature > 0:
+            keys = jax.vmap(lambda r, s: jax.random.fold_in(
+                jax.random.fold_in(droot, r), s))(req_ids, steps)
+            tok = jax.vmap(jax.random.categorical)(keys, lf / temperature)
+            q = jax.nn.softmax(lf / temperature, axis=-1)
+        else:
+            tok = jnp.argmax(lf, axis=-1)
+            q = jnp.zeros(lf.shape[:-1] + (1,), f32)
+        return tok.astype(jnp.int32), q
+
+    def draft_step(params, cache, tokens, starts, chunk_lens, block_tables,
+                   req_ids, sample_steps, root_key):
+        cparams = cast_tree(params, run.compute_dtype)
+        droot = jax.random.fold_in(root_key, draft_salt)
+        logits, cache = api.paged_step(
+            cparams, cache, tokens, starts, chunk_lens, block_tables,
+            cfg, ctx)
+        d0, q0 = sample(logits, req_ids, sample_steps, droot)
+        if k == 1:
+            return d0[:, None], q0[:, None], cache
+
+        def body(carry, i):
+            cache, tok, pos = carry
+            lg, cache = api.paged_step(
+                cparams, cache, tok[:, None], pos,
+                jnp.ones_like(pos), block_tables, cfg, ctx)
+            nt, q = sample(lg, req_ids, sample_steps + i, droot)
+            return (cache, nt, pos + 1), (nt, q)
+
+        (cache, _, _), (ds, qs) = jax.lax.scan(
+            body, (cache, d0, starts + chunk_lens), jnp.arange(1, k))
+        drafts = jnp.concatenate([d0[:, None], jnp.moveaxis(ds, 0, 1)], 1)
+        probs = jnp.concatenate([q0[:, None], jnp.moveaxis(qs, 0, 1)], 1)
+        return drafts, probs, cache
+
+    paxes = api.model_axes(cfg)
+    p_shard = tree_shardings(paxes, make_ctx(cfg, mesh, run.shape))
+    return jax.jit(draft_step, in_shardings=(p_shard,) + (None,) * 8,
+                   out_shardings=None, donate_argnums=(1,))
 
 
 def make_page_copy_step():

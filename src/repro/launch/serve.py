@@ -30,6 +30,14 @@ combine logits on device (``--combine``).
 identical prompt prefixes are prefilled once and adopted (refcounted,
 copy-on-write) by later requests; an ensemble's shared prompt context is
 prefilled once by its leader and forked into all G members.
+
+``--speculate K`` turns on speculative decoding: a materialized Horn
+small circuit (``--draft-circuit`` of the serving bank, or a draft-only
+``--draft-keep`` bank when running the dense parent) proposes K tokens
+per decode tick in one jitted draft call, and the parent verifies all
+K+1 positions inside its one budgeted call — greedy output stays
+byte-identical to non-speculative serving, it just lands up to K+1
+tokens per tick.
 """
 from __future__ import annotations
 
@@ -43,6 +51,23 @@ from repro.configs.base import HornConfig, get_model_config, list_archs, \
     reduced
 from repro.models import api
 from repro.serving import Engine, EngineConfig, EngineOOM, ModelBank, Router
+
+
+def build_draft(cfg, params, bank, *, speculate: int, draft_circuit: int,
+                draft_keep: float, mask_block: int, seed: int):
+    """The draft circuit for ``--speculate K``: cut from the serving bank
+    when one exists (the drafted tokens are verified per-slot under each
+    request's own circuit masks, so any bank circuit is a valid proposer),
+    else from a throwaway draft-only bank over the same parent weights at
+    ``--draft-keep`` (the dense parent is the verifier)."""
+    if speculate <= 0:
+        return None
+    if bank is not None:
+        return bank.draft_model(draft_circuit, params)
+    horn = HornConfig(enabled=True, keep_hidden=draft_keep, keep_input=1.0,
+                      block_size=mask_block)
+    dbank = ModelBank(cfg, horn, draft_circuit + 1, seed=seed)
+    return dbank.draft_model(draft_circuit, params)
 
 
 def make_requests(n: int, vocab_size: int, rng: np.random.Generator, *,
@@ -112,6 +137,18 @@ def main() -> None:
                          "their prompt pages across all circuits "
                          "(--no-prefix-cache re-prefills per request)")
     ap.add_argument("--temperature", type=float, default=0.0)
+    ap.add_argument("--speculate", type=int, default=0, metavar="K",
+                    help="speculative decoding: a materialized draft "
+                         "circuit proposes K tokens per decode tick, the "
+                         "parent verifies all K+1 positions in its one "
+                         "budgeted call (0 = off)")
+    ap.add_argument("--draft-circuit", type=int, default=0,
+                    help="bank circuit the draft is materialized from")
+    ap.add_argument("--draft-keep", type=float, default=0.875,
+                    help="FFN keep rate of the draft-only bank when "
+                         "--submodels 0 (acceptance tracks draft<->parent "
+                         "agreement: keep it high for untrained parents, "
+                         "Horn-trained circuits accept well lower)")
     ap.add_argument("--submodels", type=int, default=0,
                     help="serve G Horn circuits from one ModelBank "
                          "(0 = single dense parent)")
@@ -142,7 +179,7 @@ def main() -> None:
         max_prompt_len=-(-args.max_prompt // args.page_size) * args.page_size,
         max_new_tokens=args.gen, token_budget=max(args.budget, args.slots),
         temperature=args.temperature, seed=args.seed, policy=args.policy,
-        prefix_cache=args.prefix_cache)
+        prefix_cache=args.prefix_cache, speculate_k=args.speculate)
     import jax
     params = api.model_init(jax.random.key(args.seed), cfg)
     bank = router = None
@@ -154,7 +191,12 @@ def main() -> None:
         bank = ModelBank(cfg, horn, args.submodels, seed=args.seed)
         router = Router(args.submodels, policy=args.router)
     try:
-        engine = Engine(cfg, params, ecfg, bank=bank, router=router)
+        draft = build_draft(cfg, params, bank, speculate=args.speculate,
+                            draft_circuit=args.draft_circuit,
+                            draft_keep=args.draft_keep,
+                            mask_block=args.mask_block, seed=args.seed)
+        engine = Engine(cfg, params, ecfg, bank=bank, router=router,
+                        draft=draft)
     except ValueError as e:
         raise SystemExit(f"{args.arch}: {e}")
 
@@ -234,10 +276,19 @@ def main() -> None:
           f"block-table rows synced/tick: "
           f"{engine.bt_rows_synced / max(engine.steps, 1):.2f}")
     if args.prefix_cache:
-        print(f"prefix cache: hit rate {engine.prefix_hit_rate:.0%}  "
+        hr = engine.prefix_hit_rate     # None when nothing was eligible
+        print(f"prefix cache: hit rate "
+              f"{'n/a' if hr is None else format(hr, '.0%')}  "
               f"prefill tok saved {engine.prefill_tok_saved}  "
               f"evictions {engine.cache_evictions}  "
               f"COW copies {engine.cow_page_copies}")
+    if args.speculate:
+        print(f"speculative: accept rate {engine.accept_rate:.0%}  "
+              f"accepted tok/tick {engine.accepted_tok_per_tick:.2f}  "
+              f"drafted {engine.spec_drafted}  "
+              f"draft calls {engine.spec.draft_calls}  "
+              f"(K={args.speculate}, circuit {engine.spec.draft.circuit}, "
+              f"kept {engine.spec.draft.kept_frac:.0%})")
     if bank is not None:
         per = "  ".join(
             f"sub{g}: {engine.tokens_by_submodel.get(g, 0) / max(wall, 1e-9):6.1f} tok/s"

@@ -113,7 +113,8 @@ def prefill(params, batch, cfg: ModelConfig, ctx: ShardingCtx, *,
 
 
 def paged_step(params, cache, tokens, starts, chunk_lens, block_tables,
-               cfg: ModelConfig, ctx: ShardingCtx, *, serve_masks=None):
+               cfg: ModelConfig, ctx: ShardingCtx, *, serve_masks=None,
+               logit_index=None):
     """One unified serving tick over paged KV pools: every slot advances by
     a chunk of up to C tokens (decode slots: exactly 1; admitting prompts:
     a prompt chunk; idle slots: 0 — the scheduler packs them into one token
@@ -124,16 +125,27 @@ def paged_step(params, cache, tokens, starts, chunk_lens, block_tables,
     [B, maxp] page ids (empty slots: all-zero rows -> null page).
     Returns (logits [B, vocab] at each slot's last *valid* chunk position,
     new_cache).  Idle slots return garbage logits the caller must ignore.
+
+    ``logit_index`` ([B, n] int32, optional) instead selects n chunk
+    positions per slot for the lm head — the speculative verify window:
+    position j's logits are the parent's distribution for the token AFTER
+    chunk token j, so one call scores every drafted continuation.  Returns
+    (logits [B, n, vocab], new_cache).  Still never materializes [B, C, V]:
+    the head runs on exactly the gathered positions (n == chunk width only
+    when every position is verified).
     """
     hidden, new_cache, _, _ = forward_hidden(
         params, {"tokens": tokens}, cfg, ctx, mode="decode", remat=False,
         cache=cache, cache_index=starts, block_tables=block_tables,
         chunk_lens=chunk_lens, serve_masks=serve_masks)
+    dec_params = _decoder_params(params, cfg)
+    if logit_index is not None:
+        win = jnp.take_along_axis(hidden, logit_index[..., None], axis=1)
+        return T.lm_logits(dec_params, win, cfg, ctx), new_cache
     # the lm head runs on one position per slot, not the whole chunk — at
     # vocab 150k+ the [B, C, V] logits would dwarf the forward itself
     last = jnp.take_along_axis(
         hidden, jnp.maximum(chunk_lens - 1, 0)[:, None, None], axis=1)
-    dec_params = _decoder_params(params, cfg)
     logits = T.lm_logits(dec_params, last, cfg, ctx)
     return logits[:, 0], new_cache
 

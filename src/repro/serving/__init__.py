@@ -24,6 +24,13 @@ Layering (each importable on its own):
                  physically smaller weights.
   router.py      tags each request with a submodel_id: explicit id,
                  hash-affinity, or least-loaded.
+  speculative.py DraftRunner: a materialized small circuit
+                 (ModelBank.draft_model) proposes K tokens per decode tick
+                 in one jitted call (catch-up chunk + on-device scan)
+                 against its own never-OOM page pool; the engine's unified
+                 step verifies all K+1 positions per slot in the same
+                 budgeted call and rolls rejected tails back by
+                 ref-release.
   engine.py      ties them to the model: one unified token-budget tick per
                  step — decode tokens and chunked-prefill prompt chunks
                  from ALL sub-models share a single jitted call that
@@ -39,10 +46,13 @@ The device kernel behind it is ``repro.kernels.paged_attention``
 from repro.serving.engine import Engine, EngineConfig, EngineOOM
 from repro.serving.kv_cache import (PagePool, PagePoolOOM, PrefixCache,
                                     chain_hashes)
-from repro.serving.model_bank import ModelBank
+from repro.serving.model_bank import DraftModel, ModelBank
 from repro.serving.router import Router
-from repro.serving.scheduler import EnsembleGroup, FCFSScheduler, Request
+from repro.serving.scheduler import (EnsembleGroup, FCFSScheduler, Request,
+                                     speculative_draft_len)
+from repro.serving.speculative import DraftRunner
 
-__all__ = ["Engine", "EngineConfig", "EngineOOM", "EnsembleGroup",
-           "FCFSScheduler", "ModelBank", "PagePool", "PagePoolOOM",
-           "PrefixCache", "Request", "Router", "chain_hashes"]
+__all__ = ["DraftModel", "DraftRunner", "Engine", "EngineConfig",
+           "EngineOOM", "EnsembleGroup", "FCFSScheduler", "ModelBank",
+           "PagePool", "PagePoolOOM", "PrefixCache", "Request", "Router",
+           "chain_hashes", "speculative_draft_len"]

@@ -1,0 +1,66 @@
+"""Host->device block-table mirror with incremental row sync.
+
+Both paged engines — the parent serving engine and the speculative draft
+runner — keep the device-resident block table their jitted step reads in
+sync with a host mirror, re-uploading only the ROWS whose page sets
+changed since the last device call (new pages appended/adopted, COW or
+rollback swaps, slot re-assigned, slot vacated).  Steady decode within a
+page uploads nothing and reuses the same device array.  One
+implementation serves both so the dirtiness scheme can never drift
+between the two tables; what counts as "changed" is the caller's
+``state_key`` (the engine folds in ``admit_seq`` so a preempt/re-admit
+cycle landing the same request back in its old slot still re-syncs; the
+draft runner needs only (id, table version))."""
+from __future__ import annotations
+
+from typing import Callable, Dict, List, Optional
+
+import jax.numpy as jnp
+import numpy as np
+
+
+def pow2_bucket(n: int) -> int:
+    """Smallest power of two >= n (jit compile-cell bucketing)."""
+    return 1 << max(0, int(n - 1).bit_length())
+
+
+class BlockTableMirror:
+    """[num_slots, max_pages] int32 device table + host mirror + per-slot
+    dirtiness state.  ``rows_synced`` counts lifetime row uploads."""
+
+    def __init__(self, num_slots: int, max_pages_per_seq: int):
+        self.host = np.zeros((num_slots, max_pages_per_seq), np.int32)
+        self.dev = jnp.asarray(self.host)
+        self._state: List[Optional[tuple]] = [None] * num_slots
+        self.rows_synced = 0
+
+    def sync(self, pool, active: Dict[int, object],
+             state_key: Callable[[object], tuple]) -> int:
+        """Re-upload the rows whose ``state_key`` changed.  ``active``
+        maps slot -> request (a vacated slot's row resets to the null
+        page); ``state_key(req)`` must include the pool's table version
+        so any table mutation dirties the row.  Returns rows uploaded."""
+        dirty: List[int] = []
+        for slot in range(len(self._state)):
+            req = active.get(slot)
+            if req is None:
+                if self._state[slot] is not None:
+                    self.host[slot] = 0       # vacated -> null page
+                    self._state[slot] = None
+                    dirty.append(slot)
+                continue
+            state = state_key(req)
+            if self._state[slot] == state:
+                continue
+            table = pool.table(req.id)
+            row = self.host[slot]
+            row[:] = 0
+            row[:len(table)] = table
+            self._state[slot] = state
+            dirty.append(slot)
+        if dirty:
+            idx = np.asarray(dirty, np.int32)
+            self.dev = self.dev.at[jnp.asarray(idx)].set(
+                jnp.asarray(self.host[idx]))
+            self.rows_synced += len(dirty)
+        return len(dirty)

@@ -49,7 +49,23 @@ costs ~1/G of the re-prefill path, byte-identically.
 
 The host->device block-table mirror is synced incrementally: only rows
 whose page tables changed since the last device call are re-uploaded
-(steady decode inside a page uploads nothing)."""
+(steady decode inside a page uploads nothing).
+
+Speculative decoding (``EngineConfig.speculate_k`` + a
+``ModelBank.draft_model``): each speculating decode slot first runs the
+materialized draft circuit for up to K tokens — one jitted draft call per
+tick, batched across slots, against the draft's private page pool
+(``serving/speculative.py``) — then the parent verifies all K+1 positions
+inside the SAME single token-budget call the tick would have made anyway
+(a verify chunk is a K+1-token chunk through the existing chunk-append
+path, scored over a window of logits).  Greedy acceptance is the longest
+draft prefix matching the parent argmax — byte-identical to sequential
+greedy decode — and temperature > 0 runs on-device rejection sampling
+against the draft distribution, byte-reproducible per (req_id,
+sample_step) fold_in.  A rejected tail rolls back by releasing page
+references (``PagePool.truncate_seq``), never by copying.  The budget
+meters parent compute: a speculating slot consumes 1 + K verified tokens,
+drafted tokens are free."""
 from __future__ import annotations
 
 import time
@@ -64,10 +80,13 @@ from repro.configs.base import (ATTN, LOCAL, HornConfig, ModelConfig,
                                 RunConfig, ShapeConfig)
 from repro.core import steps as S
 from repro.models import transformer as T
+from repro.serving.block_table import BlockTableMirror, pow2_bucket
 from repro.serving.kv_cache import PagePool, PagePoolOOM
-from repro.serving.model_bank import ModelBank
+from repro.serving.model_bank import DraftModel, ModelBank
 from repro.serving.router import Router
-from repro.serving.scheduler import EnsembleGroup, FCFSScheduler, Request
+from repro.serving.scheduler import (EnsembleGroup, FCFSScheduler, Request,
+                                     speculative_draft_len)
+from repro.serving.speculative import DraftRunner
 
 COMBINES = ("mean_logit", "majority_vote")
 
@@ -95,6 +114,9 @@ class EngineConfig:
     compute_dtype: str = "bfloat16"  # model compute dtype
     prefix_cache: bool = True        # content-addressed page reuse + COW
                                      # (off: PR-3-style per-request prefill)
+    speculate_k: int = 0             # draft tokens verified per decode tick
+                                     # (0: no speculation; > 0 needs a
+                                     # DraftModel passed to the Engine)
 
     @property
     def max_model_len(self) -> int:
@@ -113,12 +135,15 @@ class _Entry:
     mask_id: int                     # circuit-mask row the step gathers for
                                      # this chunk (the dense sentinel for an
                                      # ensemble's shared prompt context)
+    draft_len: int = 0               # drafted tokens this chunk verifies
+                                     # (tokens[1:1+draft_len] are proposals)
 
 
 class Engine:
     def __init__(self, cfg: ModelConfig, params, ecfg: EngineConfig,
                  mesh=None, *, bank: Optional[ModelBank] = None,
-                 router: Optional[Router] = None):
+                 router: Optional[Router] = None,
+                 draft: Optional[DraftModel] = None):
         bad = [k for k in cfg.layer_pattern if k not in (ATTN, LOCAL)]
         if bad or cfg.is_encoder_decoder or cfg.num_patches or cfg.learned_pos:
             raise ValueError(
@@ -157,6 +182,20 @@ class Engine:
         # ensemble's shared prompt context): device_masks pads an all-ones
         # row at index G
         self._dense_mask_id = bank.num_submodels if bank is not None else 0
+        if ecfg.speculate_k > 0:
+            if draft is None:
+                raise ValueError(
+                    "speculate_k > 0 needs a DraftModel "
+                    "(ModelBank.draft_model) to propose tokens")
+            if draft.cfg.vocab_size != cfg.vocab_size:
+                raise ValueError(
+                    f"draft vocab {draft.cfg.vocab_size} != parent vocab "
+                    f"{cfg.vocab_size} — drafted ids would be meaningless")
+            self.spec: Optional[DraftRunner] = DraftRunner(draft, ecfg, mesh)
+        elif draft is not None:
+            raise ValueError("a DraftModel needs speculate_k > 0 to be used")
+        else:
+            self.spec = None
 
         run = RunConfig(model=cfg,
                         shape=ShapeConfig("serve", "decode",
@@ -177,17 +216,16 @@ class Engine:
         # max_model_len - 1 kv tokens) just takes one extra tick instead of
         # minting a wider compile cell no warmup sweep would have seen
         self.max_chunk = min(ecfg.token_budget, ecfg.max_prompt_len)
-        # incremental block-table sync: the device-resident table is the
-        # source the step reads; a host mirror plus per-slot sync state
-        # ((req_id, admit_seq, table_version)) decides which ROWS changed
-        # since the last device call — only those are re-uploaded.  The
-        # pool bumps a sequence's table version on every mutation (page
-        # appended, adopted, or COW-swapped), and admit_seq keys a
+        # incremental block-table sync (shared with the draft runner —
+        # serving/block_table.py): per-slot (req_id, admit_seq,
+        # table_version) keys decide which ROWS re-upload; the pool bumps
+        # a sequence's version on every table mutation (page appended,
+        # adopted, COW- or rollback-swapped), and admit_seq keys a
         # preempt/re-admit cycle that lands the same request back in its
         # old slot.
-        self._bt_host = np.zeros((B, self.max_pages_per_seq), np.int32)
-        self._bt_dev = jnp.asarray(self._bt_host)
-        self._bt_state: List[Optional[Tuple[int, int, int]]] = [None] * B
+        self._bt = BlockTableMirror(B, self.max_pages_per_seq)
+        # the S_v == 1 verify window of a tick with no speculating slot
+        self._noprobs = jnp.zeros((B, 0, 1), jnp.float32)
         self._root_key = jax.random.key(ecfg.seed)
         self._next_id = 0
         self._next_group_id = 0
@@ -206,10 +244,28 @@ class Engine:
         self.prefill_tok_saved = 0       # hit tokens + ensemble fork savings
         self.cow_page_copies = 0         # device page copies issued
         self._evictions_base = 0         # pool evictions at last reset
+        # speculative-decode accounting
+        self.spec_slot_ticks = 0         # (speculating slot, tick) pairs
+        self.spec_drafted = 0            # draft tokens the parent verified
+        self.spec_accepted = 0           # drafts that survived verification
+        self.spec_committed = 0          # tokens committed by verify ticks
+                                         # (accepted + the verified bonus/
+                                         # correction token)
 
     @property
     def preemptions(self) -> int:
         return self.sched.preemptions
+
+    @property
+    def accept_rate(self) -> float:
+        """Fraction of drafted tokens the parent accepted."""
+        return self.spec_accepted / max(1, self.spec_drafted)
+
+    @property
+    def accepted_tok_per_tick(self) -> float:
+        """Tokens committed per (speculating slot, tick) — 1.0 is plain
+        decode's ceiling; anything above it is speculation's win."""
+        return self.spec_committed / max(1, self.spec_slot_ticks)
 
     @property
     def cobatch_ratio(self) -> float:
@@ -218,10 +274,15 @@ class Engine:
         return self.ticks_cobatched / max(1, self.ticks_nonempty)
 
     @property
-    def prefix_hit_rate(self) -> float:
+    def prefix_hit_rate(self) -> Optional[float]:
         """Fraction of cache-eligible prompt tokens served from the prefix
-        cache since the last ``reset_stats``."""
-        return self.cache_hit_tokens / max(1, self.cache_eligible_tokens)
+        cache since the last ``reset_stats`` — or None when nothing was
+        eligible (cache disabled, or no lookup could match), so stats
+        lines report "n/a"/null instead of a misleading 0.0 (or a
+        division crash)."""
+        if self.cache_eligible_tokens == 0:
+            return None
+        return self.cache_hit_tokens / self.cache_eligible_tokens
 
     @property
     def cache_evictions(self) -> int:
@@ -249,6 +310,12 @@ class Engine:
         self.cache_eligible_tokens = 0
         self.prefill_tok_saved = 0
         self.cow_page_copies = 0
+        self.spec_slot_ticks = 0
+        self.spec_drafted = 0
+        self.spec_accepted = 0
+        self.spec_committed = 0
+        if self.spec is not None:
+            self.spec.draft_calls = 0
         if self.pool.cache is not None:
             self._evictions_base = self.pool.cache.evictions
         self.sched.preemptions = 0
@@ -345,36 +412,14 @@ class Engine:
     # -- internals -----------------------------------------------------------
     def _chunk_bucket(self, n: int) -> int:
         """Power-of-two chunk-width bucket (bounds unified-step retraces)."""
-        return 1 << max(0, int(n - 1).bit_length())
+        return pow2_bucket(n)
 
     def _sync_block_tables(self) -> None:
-        """Re-upload only the block-table ROWS whose page sets changed since
-        the last device call (new pages appended/adopted, COW swap, slot
-        re-assigned, slot vacated).  Steady decode within a page uploads
-        nothing and reuses the same device array."""
-        dirty: List[int] = []
-        for slot in range(self.ecfg.num_slots):
-            req = self.sched.running.get(slot)
-            if req is None:
-                if self._bt_state[slot] is not None:
-                    self._bt_host[slot] = 0       # vacated -> null page
-                    self._bt_state[slot] = None
-                    dirty.append(slot)
-                continue
-            state = (req.id, req.admit_seq, self.pool.table_version(req.id))
-            if self._bt_state[slot] == state:
-                continue
-            table = self.pool.table(req.id)
-            row = self._bt_host[slot]
-            row[:] = 0
-            row[:len(table)] = table
-            self._bt_state[slot] = state
-            dirty.append(slot)
-        if dirty:
-            idx = np.asarray(dirty, np.int32)
-            self._bt_dev = self._bt_dev.at[jnp.asarray(idx)].set(
-                jnp.asarray(self._bt_host[idx]))
-            self.bt_rows_synced += len(dirty)
+        """Incremental row sync of the device block table (see
+        ``serving/block_table.py``)."""
+        self.bt_rows_synced += self._bt.sync(
+            self.pool, self.sched.running,
+            lambda r: (r.id, r.admit_seq, self.pool.table_version(r.id)))
 
     def _sample_peak(self) -> None:
         self.peak_utilization = max(self.peak_utilization,
@@ -388,6 +433,9 @@ class Engine:
         if self.router is not None:
             for req in done:
                 self.router.release(req.submodel_id)
+        if self.spec is not None:
+            for req in done:
+                self.spec.drop(req.id)
 
     def _clock(self, now: Optional[float]) -> float:
         return time.monotonic() if now is None else now
@@ -427,12 +475,21 @@ class Engine:
             try:
                 return self._try_plan()
             except PagePoolOOM as e:
-                if self.sched.preempt_youngest() is None:
+                victim = self.sched.preempt_youngest()
+                if victim is None:
                     raise EngineOOM(
                         f"tick {self.steps}: {e}; no other sequence left to "
                         f"preempt — this request can never fit; raise "
                         f"--pages, lower --gen, or use --policy reserve"
                         ) from e
+                if self.spec is not None:
+                    # the draft pool stays bounded by the running slots: a
+                    # preempted request's draft KV is recomputed by one
+                    # catch-up chunk on re-admission
+                    unit = victim.group.members if victim.group is not None \
+                        else [victim]
+                    for m in unit:
+                        self.spec.drop(m.id)
 
     def _try_plan(self) -> Dict[int, _Entry]:
         entries: Dict[int, _Entry] = {}
@@ -441,18 +498,46 @@ class Engine:
         for slot, req in sorted(self.sched.running.items()):
             (prefill if req.in_prefill else decode).append((slot, req))
 
+        # speculative draft length for this tick: uniform across the
+        # speculating slots (one verify-window width per call), sized so
+        # the parent budget covers every decode slot's pending token plus
+        # 1 + k verified tokens per speculating slot
+        spec_k = self.ecfg.speculate_k if self.spec is not None else 0
+
+        def allowance(r: Request) -> int:
+            # a tick commits at most 1 + dl tokens, so drafting past the
+            # request's remaining allowance minus one can never land (it
+            # would only burn draft/verify budget and depress accept_rate
+            # at every request tail).  The same bound keeps K/V writes
+            # inside both max_model_len and the reserve-policy admission
+            # reservation: the verify chunk ends at
+            # context + dl <= prompt + max_new - 1
+            return r.prompt_len + r.max_new_tokens - r.context_len - 1
+
+        # only slots that can actually land a draft share the speculative
+        # budget — a slot one token from its cap drafts nothing and must
+        # not dilute the others' split
+        n_spec = sum(1 for _, r in decode
+                     if r.spec_eligible and allowance(r) > 0) \
+            if spec_k else 0
+        k_tick = min(speculative_draft_len(spec_k, budget, len(decode),
+                                           n_spec), self.max_chunk - 1)
         for slot, req in decode:
-            # grows the table through context_len (on_demand growth /
-            # deferred-reserve redemption) and COWs any shared page the
-            # decode write would touch; may raise PagePoolOOM
+            dl = 0
+            if k_tick > 0 and req.spec_eligible:
+                dl = max(0, min(k_tick, allowance(req)))
+            # grows the table through context_len (+ the draft tail) and
+            # COWs any shared page the writes would touch; may raise
+            # PagePoolOOM
             self._prepare_entry_write(req, req.context_len - 1,
-                                      req.context_len)
+                                      req.context_len + dl)
+            toks = np.zeros((1 + dl,), np.int32)
+            toks[0] = req.out_tokens[-1]     # drafts land in toks[1:] later
             entries[slot] = _Entry(
-                req=req, start=req.context_len - 1,
-                tokens=np.asarray([req.out_tokens[-1]], np.int32),
-                chunk_len=1, sample_step=len(req.out_tokens), record=True,
-                mask_id=req.submodel_id)
-            budget -= 1
+                req=req, start=req.context_len - 1, tokens=toks,
+                chunk_len=1 + dl, sample_step=len(req.out_tokens),
+                record=True, mask_id=req.submodel_id, draft_len=dl)
+            budget -= 1 + dl
         # prompt chunks soak up whatever budget the decode tokens left,
         # oldest admission first (it holds pages; finish it soonest).
         # Ensemble groups advance in LOCKSTEP: every member gets the same
@@ -556,6 +641,20 @@ class Engine:
             self._release(done)
             return done
 
+        # draft proposals first: one jitted draft-circuit call covering
+        # every speculating slot (catch-up chunk + on-device scan), then
+        # the drafted tokens ride the verify chunks of the parent call
+        spec_units = [(slot, e) for slot, e in entries.items()
+                      if e.draft_len > 0]
+        if spec_units:
+            k_tick = max(e.draft_len for _, e in spec_units)
+            drafts, draft_probs = self.spec.propose(
+                [(s, e.req) for s, e in spec_units], k_tick, self._root_key)
+            for slot, e in spec_units:
+                e.tokens[1:1 + e.draft_len] = drafts[slot, :e.draft_len]
+        else:
+            draft_probs = self._noprobs
+
         B = self.ecfg.num_slots
         C = self._chunk_bucket(max(e.chunk_len for e in entries.values()))
         tokens = np.zeros((B, C), np.int32)
@@ -566,6 +665,7 @@ class Engine:
         submodel_ids = np.zeros((B,), np.int32)
         seg_ids = np.arange(B, dtype=np.int32)    # solo: own segment
         vote_flags = np.zeros((B,), bool)
+        draft_lens = np.zeros((B,), np.int32)
         for slot, e in entries.items():
             tokens[slot, :e.chunk_len] = e.tokens
             starts[slot] = e.start
@@ -573,6 +673,7 @@ class Engine:
             req_ids[slot] = e.req.id
             sample_steps[slot] = e.sample_step
             submodel_ids[slot] = e.mask_id
+            draft_lens[slot] = e.draft_len
             group = e.req.group
             if group is not None:
                 seg_ids[slot] = group.leader.slot
@@ -590,14 +691,16 @@ class Engine:
         # ticks without an ensemble group skip the on-device combine
         # entirely (static jit arg: one extra compile per bucket at most)
         ensembles = any(e.req.group is not None for e in entries.values())
-        sampled, self.cache = self._step(
+        sampled, accepted, self.cache = self._step(
             self.params, self.cache, jnp.asarray(tokens),
             jnp.asarray(starts), jnp.asarray(chunk_lens),
-            self._bt_dev, jnp.asarray(req_ids),
+            self._bt.dev, jnp.asarray(req_ids),
             jnp.asarray(sample_steps), jnp.asarray(submodel_ids),
-            jnp.asarray(seg_ids), jnp.asarray(vote_flags), self._root_key,
+            jnp.asarray(seg_ids), jnp.asarray(vote_flags),
+            jnp.asarray(draft_lens), draft_probs, self._root_key,
             ensembles=ensembles)
         sampled = np.asarray(sampled)             # forces the tick
+        accepted = np.asarray(accepted)
         self.steps += 1
         post = tick_now()
 
@@ -606,6 +709,10 @@ class Engine:
             was_prefill = req.in_prefill
             if was_prefill:
                 self.prefill_tokens += e.chunk_len
+            if e.draft_len:
+                self._commit_spec(slot, e, int(sampled[slot]),
+                                  int(accepted[slot]), post)
+                continue
             # decode writes K/V too (position context_len - 1), so advance
             # prefill_pos past every write this tick — otherwise the next
             # generated token flips the request back into "prefill" and
@@ -629,6 +736,47 @@ class Engine:
         finished = self.sched.evict_finished(post)
         self._release(done + finished)
         return done + finished
+
+    def _commit_spec(self, slot: int, e: _Entry, sampled: int, acc: int,
+                     now: float) -> None:
+        """Land a verify verdict: commit the accepted draft prefix plus
+        the one verified (bonus or correction) token the parent sampled
+        after it — stopping at EOS / max_new exactly where sequential
+        decode would — then roll the page tail back to the committed K/V
+        (a ref-release via ``truncate_seq``, never a copy) and tell the
+        draft runner which of its proposals survived."""
+        req = e.req
+        acc = min(acc, e.draft_len)
+        n0 = req.context_len                  # before any commit
+        commit = [int(t) for t in e.tokens[1:1 + acc]] + [sampled]
+        c = 0
+        for tok in commit:
+            self.sched.record_token(slot, tok, now)
+            c += 1
+            self.generated_tokens += 1
+            sid = req.submodel_id
+            self.tokens_by_submodel[sid] = \
+                self.tokens_by_submodel.get(sid, 0) + 1
+            if req.finished:                  # EOS or max_new mid-window
+                break
+        self.spec_slot_ticks += 1
+        self.spec_drafted += e.draft_len
+        self.spec_accepted += min(acc, c)
+        self.spec_committed += c
+        if req.finished:
+            # pages are freed wholesale by evict_finished and the draft
+            # state by _release; prefill_pos only needs to stay consistent
+            req.prefill_pos = n0 + min(acc, c)
+            return
+        # valid K/V = committed stream minus its pending last token: the
+        # context plus exactly the accepted drafts (the verify chunk wrote
+        # K/V for every draft; the rejected tail is stale and its pages go
+        # back — recredited under reserve so the admission-time
+        # reservation survives the rollback)
+        req.prefill_pos = n0 + acc
+        self.pool.truncate_seq(req.id, req.prefill_pos,
+                               recredit=self.ecfg.policy == "reserve")
+        self.spec.commit(req, acc)
 
     def finished_streams(self) -> List[Request]:
         """Finished requests deduplicated to one per delivered token

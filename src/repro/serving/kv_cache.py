@@ -87,8 +87,10 @@ class PrefixCache:
     def __init__(self) -> None:
         self.index: Dict[bytes, int] = {}        # hash -> page id
         self.lru: "OrderedDict[int, bytes]" = OrderedDict()  # evictable
-        self.hits = 0           # pages served from the index by match()
-        self.misses = 0         # first lookup miss per match() walk
+        self.neg: set = set()   # chain-head hashes known cold (see match)
+        self.hits = 0           # pages adopted from the index
+        self.misses = 0         # adoptions whose lookup fell short
+        self.neg_hits = 0       # walks short-circuited by the negative cache
         self.evictions = 0      # cached pages reclaimed for allocation
         self.inserts = 0
 
@@ -96,18 +98,41 @@ class PrefixCache:
     def evictable(self) -> int:
         return len(self.lru)
 
-    def match(self, hashes: Sequence[bytes]) -> List[int]:
+    def match(self, hashes: Sequence[bytes], *,
+              peek: bool = False) -> List[int]:
         """Longest indexed prefix of ``hashes`` -> page ids.  Chained
-        hashes make prefix matching a linear walk: the first miss ends it."""
+        hashes make prefix matching a linear walk: the first miss ends it.
+
+        ``peek`` marks a feasibility probe (a blocked FCFS head replanning
+        every tick): it must not distort the hit/miss statistics — those
+        are committed once, on actual adoption, via ``commit_match``.
+        Either way the walk consults (and feeds) the *negative cache*: a
+        chain-head hash that missed is remembered as cold, so a blocked or
+        cold-prompt request stops re-probing every tick; ``publish``
+        invalidates the negative set (new pages may warm any prefix)."""
+        if hashes and hashes[0] in self.neg:
+            self.neg_hits += 1
+            if not peek:               # a committed cold lookup is a miss
+                self.commit_match(0, True)
+            return []
         pages: List[int] = []
         for h in hashes:
             page = self.index.get(h)
             if page is None:
-                self.misses += 1
                 break
             pages.append(page)
-        self.hits += len(pages)
+        if hashes and not pages:
+            self.neg.add(hashes[0])      # known-cold until the next publish
+        if not peek:
+            self.commit_match(len(pages), len(pages) < len(hashes))
         return pages
+
+    def commit_match(self, n_hit: int, missed: bool) -> None:
+        """Fold one *adopted* lookup into the hit/miss statistics (peek
+        probes are free — only admissions that actually map pages count)."""
+        self.hits += n_hit
+        if missed:
+            self.misses += 1
 
     def publish(self, h: bytes, page: int) -> bool:
         """Index ``page`` under ``h``; no-op (False) when the hash is
@@ -117,6 +142,10 @@ class PrefixCache:
             return False
         self.index[h] = page
         self.inserts += 1
+        # a fresh page can warm any prefix whose walk previously went cold
+        # at its chain head — the negative cache is only valid between
+        # publishes, so drop it wholesale
+        self.neg.clear()
         return True
 
     def release(self, page: int, h: bytes) -> None:
@@ -414,10 +443,20 @@ class PagePool:
         return pairs
 
     # -- prefix cache -------------------------------------------------------
-    def match_pages(self, hashes: Sequence[bytes]) -> List[int]:
+    def match_pages(self, hashes: Sequence[bytes], *,
+                    peek: bool = False) -> List[int]:
         """Longest content-indexed prefix of ``hashes`` -> page ids (empty
-        when the pool runs without a prefix cache)."""
-        return self.cache.match(hashes) if self.cache is not None else []
+        when the pool runs without a prefix cache).  ``peek`` marks a
+        feasibility probe that must not count toward hit/miss stats."""
+        if self.cache is None:
+            return []
+        return self.cache.match(hashes, peek=peek)
+
+    def commit_match(self, n_hit: int, missed: bool) -> None:
+        """Commit one adopted lookup's hit/miss statistics (the peek
+        probes that sized it were free)."""
+        if self.cache is not None:
+            self.cache.commit_match(n_hit, missed)
 
     def match_prefix(self, namespace: bytes, tokens,
                      max_tokens: Optional[int] = None
@@ -454,6 +493,35 @@ class PagePool:
                 self._hash_of[page] = hashes[i]
                 new += 1
         return new
+
+    def truncate_seq(self, seq_id: int, num_tokens: int, *,
+                     recredit: bool = False) -> int:
+        """Drop ``seq_id``'s page references beyond the pages covering its
+        first ``num_tokens`` tokens — the speculative-decode rollback: a
+        rejected draft tail is a ref-release, not a copy.  Shared pages
+        survive under their other holders; exclusive pages return to the
+        free list (or the prefix cache when published).  ``recredit`` turns
+        each physically reclaimed page into a deferred credit for
+        ``seq_id`` (reserve-policy engines: the reservation made at
+        admission must survive the rollback, or a later re-grow could OOM
+        against pages another admission took in between).  Returns pages
+        released."""
+        table = self._tables[self._known(seq_id)]
+        keep = self.pages_for(num_tokens)
+        dropped = 0
+        while len(table) > keep:
+            page = table.pop()
+            self._ref[page] -= 1
+            if self._ref[page] == 0:
+                del self._ref[page]
+                self._retire(page)
+                if recredit:
+                    self._deferred[seq_id] = \
+                        self._deferred.get(seq_id, 0) + 1
+            dropped += 1
+        if dropped:
+            self._version[seq_id] += 1
+        return dropped
 
     # -- release ------------------------------------------------------------
     def free_seq(self, seq_id: int) -> int:
@@ -509,6 +577,8 @@ class PagePool:
             for p, h in self.cache.lru.items():
                 assert self.cache.index.get(h) == p, \
                     f"evictable page {p} not content-indexed"
+            assert not self.cache.neg & set(self.cache.index), \
+                "negative-cache entry for an indexed chain head"
         for p in self._hash_of:
             assert p in refs or p in cached, \
                 f"published page {p} neither mapped nor cache-held"

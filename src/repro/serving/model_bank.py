@@ -38,6 +38,19 @@ from repro.core.parallel_dropout import expand_units, group_block_mask
 
 f32 = jnp.float32
 
+
+@dataclasses.dataclass(frozen=True)
+class DraftModel:
+    """A materialized circuit packaged as a speculative-decoding draft:
+    physically smaller standalone weights whose forward is logit-equivalent
+    to the masked parent forward of ``circuit`` — the cheap proposer the
+    dense parent verifies against (ROADMAP: "speculative small-circuit
+    drafting for the dense parent")."""
+    cfg: ModelConfig
+    params: dict
+    circuit: int                        # bank circuit id it was cut from
+    kept_frac: float                    # mean FFN keep fraction (reporting)
+
 # plan() axis name -> serve-mask key consumed by transformer.lm_forward
 _AXIS_KEY = {"ffn_hidden": "ffn", "moe_hidden": "moe",
              "attn_heads": "heads", "input_embed": "input"}
@@ -175,6 +188,20 @@ class ModelBank:
         small_cfg = dataclasses.replace(cfg, d_ff=ffk,
                                         name=f"{cfg.name}-sub{g}")
         return small_cfg, new_params
+
+    def draft_model(self, g: int, params) -> DraftModel:
+        """Package circuit ``g`` as a speculative-decoding draft.
+
+        Draft-circuit guidance: acceptance tracks how often the circuit's
+        next-token distribution agrees with the verifier's, so prefer the
+        highest-keep circuit you can afford to run — a Horn-trained
+        keep-0.5 circuit is distilled toward the parent and accepts well,
+        while an *untrained* parent needs a high-keep draft (the shared
+        attention + embedding path dominates agreement; every dropped FFN
+        block decorrelates the argmax a little)."""
+        cfg, p = self.materialize(g, params)
+        return DraftModel(cfg, p, g,
+                          float((self.masks["ffn"][g] > 0).mean()))
 
     # -- reporting ----------------------------------------------------------
     def kept_fractions(self) -> Dict[str, List[float]]:

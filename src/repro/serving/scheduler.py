@@ -126,6 +126,15 @@ class Request:
         return self.prompt_len - 1
 
     @property
+    def spec_eligible(self) -> bool:
+        """May a draft circuit speculate for this request this tick?
+        Decode-phase solo (or routed) requests only: ensemble members
+        advance in lockstep through on-device logit combining, so a
+        per-member draft tail would have to be accepted by the *combined*
+        distribution — they decode one token per tick instead."""
+        return self.group is None and not self.in_prefill
+
+    @property
     def in_prefill(self) -> bool:
         """Still streaming prompt (or recomputed) KV into pages; a fresh
         request stays in prefill until its first token is sampled."""
@@ -189,6 +198,23 @@ def _unit(req: Request) -> List[Request]:
     return req.group.members if req.group is not None else [req]
 
 
+def speculative_draft_len(k: int, budget: int, n_decode: int,
+                          n_spec: int) -> int:
+    """Uniform per-tick draft length for the tick's speculating slots.
+
+    A speculating slot consumes ``1 + draft_len`` tokens of the tick's
+    budget — the budget meters *parent* compute, so it counts the tokens
+    the parent verifies (the pending token plus every draft), never the
+    tokens the draft circuit generated to propose them.  Every decode slot
+    (speculating or not) costs its one pending token first; whatever
+    remains is split evenly across the speculating slots so the tick keeps
+    a single verify window width.  Clamped to [0, k]; 0 degrades the tick
+    to plain decode (budget exhausted by the decode batch itself)."""
+    if n_spec <= 0 or k <= 0:
+        return 0
+    return max(0, min(k, (budget - n_decode) // n_spec))
+
+
 @dataclass
 class _AdmissionPlan:
     """Sized admission for one request of a unit."""
@@ -198,6 +224,7 @@ class _AdmissionPlan:
     fresh: int                          # pages to allocate now
     deferred: int                       # pages to promise (reserve members)
     hashes: List[bytes]                 # content ids for publish_prefix
+    probed: int = 0                     # hashes the cache lookup walked over
 
 
 class FCFSScheduler:
@@ -261,7 +288,13 @@ class FCFSScheduler:
         """Size every request of a unit against the pool's prefix cache:
         cached prompt pages are adopted, only the uncached tail is
         allocated fresh, and shared-prefill member tails are deferred
-        (reserve) or grown lazily (on_demand)."""
+        (reserve) or grown lazily (on_demand).
+
+        Lookups here are non-promoting *peeks*: a blocked FCFS head replans
+        every tick, and counting each retry as a cache hit (or letting it
+        refresh LRU recency) would keep stale pages hot and inflate the hit
+        rate — stats are committed only when ``admit`` actually adopts the
+        plan (the negative cache still short-circuits known-cold walks)."""
         plans = []
         P = self.pool.page_size
         for req in unit:
@@ -282,11 +315,12 @@ class FCFSScheduler:
                                np.int32), P)
                 req.page_hashes = hashes
             cap = req.match_cap
-            cached = self.pool.match_pages(hashes[:cap // P]) \
+            probe = hashes[:cap // P]
+            cached = self.pool.match_pages(probe, peek=True) \
                 if self.pool.cache is not None else []
             fresh = max(0, self._worst_case_pages(req) - len(cached))
             plans.append(_AdmissionPlan(req, cached, len(cached) * P,
-                                        fresh, 0, hashes))
+                                        fresh, 0, hashes, len(probe)))
         return plans
 
     # -- lifecycle ----------------------------------------------------------
@@ -322,6 +356,9 @@ class FCFSScheduler:
                 req.cache_eligible_tokens = \
                     0 if self._is_shared_member(req) else req.match_cap
                 req.page_hashes = pl.hashes
+                if pl.probed:      # adoption commits the peeked lookup
+                    self.pool.commit_match(len(pl.cached),
+                                           len(pl.cached) < pl.probed)
                 self.pool.alloc_pages(req.id, pl.fresh,
                                       owner=req.submodel_id,
                                       cached=pl.cached, deferred=pl.deferred)

@@ -1,0 +1,165 @@
+"""Speculative decoding: a materialized Horn small circuit drafts, the
+parent verifies.
+
+Per engine tick, every speculating decode slot runs the draft circuit
+autoregressively for up to K tokens — ONE jitted draft call (catch-up
+chunk + an on-device ``lax.scan`` of single-token steps), batched across
+slots — and the parent then verifies all K+1 positions inside the same
+single token-budget call every other slot shares (the chunk-append paged
+path: a verify chunk is just a K+1-token chunk whose window of logits is
+scored against the drafts).  K sequential parent ticks collapse into one.
+
+The draft's KV lives in a *private* page pool + paged cache, NOT the
+parent's: the circuit's K/V bytes differ from the parent's for the same
+tokens (different FFNs feed the residual stream), so pages can never be
+shared across the two — and a draft page must never answer a parent
+prefix-cache lookup.  The pool is deliberately sized so it can never OOM
+(``num_slots`` sequences of at most ``max_model_len + K`` tokens): draft
+state is a pure function of a request's committed stream, is rebuilt by
+the catch-up chunk after preemption, and therefore needs none of the
+parent pool's preemption/COW machinery.  That is also why a dense
+per-slot scratch cache was rejected only narrowly: paging reuses the
+existing chunk kernel and per-slot depths for free, at identical memory.
+
+Rollback is a ref-release: when the parent rejects a draft tail, the
+runner's ``commit`` (and the engine, for the parent pages) truncate the
+page tables back to the accepted prefix — stale K/V beyond it is
+overwritten by the next write at those positions and is never read
+(attention masks beyond each slot's valid length)."""
+from __future__ import annotations
+
+from typing import Dict, List, Tuple
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import HornConfig, RunConfig, ShapeConfig
+from repro.core import steps as S
+from repro.models import transformer as T
+from repro.serving.block_table import BlockTableMirror, pow2_bucket
+from repro.serving.kv_cache import PagePool
+from repro.serving.model_bank import DraftModel
+from repro.serving.scheduler import Request
+
+
+class DraftRunner:
+    """Host-side orchestration of the draft circuit's speculative state:
+    one private page pool + paged cache, a per-request draft position
+    (committed tokens whose K/V the draft has written), and one jitted
+    draft step per draft length in use."""
+
+    def __init__(self, draft: DraftModel, ecfg, mesh=None):
+        self.draft = draft
+        self.ecfg = ecfg
+        B = ecfg.num_slots
+        self.k_max = ecfg.speculate_k
+        psize = ecfg.page_size
+        # worst case per slot: a full context plus the drafted tail
+        max_tokens = ecfg.max_model_len + self.k_max
+        self.max_pages_per_seq = -(-max_tokens // psize)
+        self.pool = PagePool(B * self.max_pages_per_seq + 1, psize)
+        self._run = RunConfig(
+            model=draft.cfg,
+            shape=ShapeConfig("serve", "decode", ecfg.max_model_len, B),
+            horn=HornConfig(enabled=False), compute_dtype=ecfg.compute_dtype)
+        self._mesh = mesh
+        self.cache = T.init_paged_cache(draft.cfg, self.pool.num_pages,
+                                        psize, dtype=jnp.dtype(ecfg.kv_dtype))
+        self._steps: Dict[int, object] = {}      # draft length -> jitted step
+        self._pos: Dict[int, int] = {}           # req id -> draft tokens in KV
+        self._pending: Dict[int, Tuple[int, int]] = {}  # req id -> (n, k)
+        self._bt = BlockTableMirror(B, self.max_pages_per_seq)
+        self.draft_calls = 0
+
+    def _step_for(self, k: int):
+        if k not in self._steps:
+            self._steps[k] = S.make_draft_spec_step(
+                self._run, self._mesh, num_pages=self.pool.num_pages,
+                page_size=self.ecfg.page_size, k=k,
+                temperature=self.ecfg.temperature)
+        return self._steps[k]
+
+    def _catch_up_chunk(self, req: Request) -> np.ndarray:
+        """The committed tokens the draft has not written K/V for:
+        stream[pos, context_len) of prompt + out_tokens, sliced without
+        rebuilding the whole stream (steady-state decode needs 1-2 tokens
+        off the out_tokens tail, not an O(context) concat per tick)."""
+        lo, plen = self._pos[req.id], req.prompt_len
+        tail = np.asarray(req.out_tokens[max(0, lo - plen):], np.int32)
+        if lo >= plen:
+            return tail
+        return np.concatenate([req.prompt[lo:], tail]) if len(tail) \
+            else req.prompt[lo:]
+
+    # -- per-tick API --------------------------------------------------------
+    def propose(self, units: List[Tuple[int, Request]], k: int, root_key
+                ) -> Tuple[np.ndarray, jnp.ndarray]:
+        """Draft ``k`` tokens for every (slot, request) in ``units`` in one
+        jitted call.  Returns (drafts [B, k] host int32, draft_probs
+        [B, k, Vq] device f32 — the rejection sampler's q, a dummy width-1
+        array under greedy).  Rows for slots not in ``units`` are garbage
+        the verifier masks out (draft_lens == 0)."""
+        B = self.ecfg.num_slots
+        planned: Dict[int, Tuple[Request, np.ndarray]] = {}
+        width = 1
+        for slot, req in units:
+            if req.id not in self._pos:
+                self.pool.alloc_pages(req.id, 0, owner="draft")
+                self._pos[req.id] = 0
+            # K/V for d_k is written by the NEXT catch-up, like the
+            # engine's pending token — hence context_len + k - 1
+            self.pool.ensure(req.id, req.context_len + k - 1)
+            chunk = self._catch_up_chunk(req)
+            planned[slot] = (req, chunk)
+            width = max(width, len(chunk))
+        C = pow2_bucket(width)
+        tokens = np.zeros((B, C), np.int32)
+        starts = np.zeros((B,), np.int32)
+        lens = np.zeros((B,), np.int32)
+        req_ids = np.zeros((B,), np.int32)
+        steps = np.zeros((B,), np.int32)
+        for slot, (req, chunk) in planned.items():
+            tokens[slot, :len(chunk)] = chunk
+            starts[slot] = self._pos[req.id]
+            lens[slot] = len(chunk)
+            req_ids[slot] = req.id
+            steps[slot] = len(req.out_tokens)
+        # Only THIS tick's drafters are active: a slot not drafting is
+        # deliberately synced to the null page, because the in-call scan
+        # feeds every slot a token per step and an idle slot's garbage
+        # writes must land on page 0, never in a live draft table.  The
+        # state key folds in admit_seq like the engine's: table versions
+        # reset on free/realloc, so (id, version) alone could repeat
+        # across a preempt/re-admit cycle and keep a stale row.
+        self._bt.sync(self.pool, {s: r for s, (r, _) in planned.items()},
+                      lambda r: (r.id, r.admit_seq,
+                                 self.pool.table_version(r.id)))
+        drafts, probs, self.cache = self._step_for(k)(
+            self.draft.params, self.cache, jnp.asarray(tokens),
+            jnp.asarray(starts), jnp.asarray(lens), self._bt.dev,
+            jnp.asarray(req_ids), jnp.asarray(steps), root_key)
+        self.draft_calls += 1
+        for slot, (req, _) in planned.items():
+            self._pending[req.id] = (req.context_len, k)
+            self._pos[req.id] = req.context_len + k - 1
+        return np.asarray(drafts), probs
+
+    def commit(self, req: Request, accepted: int) -> None:
+        """Verify verdict for ``req``'s last proposal: keep the accepted
+        draft prefix's K/V, release the rejected tail's pages (ref-release;
+        stale K/V inside the boundary page is overwritten by the next
+        catch-up write at those positions)."""
+        n, k = self._pending.pop(req.id)
+        self._pos[req.id] = min(n + accepted, n + k - 1)
+        self.pool.truncate_seq(req.id, self._pos[req.id])
+
+    def drop(self, req_id: int) -> None:
+        """Forget a request entirely (finished, preempted, or aborted):
+        draft state is reconstructible from the committed stream, so a
+        preempted request simply pays one catch-up chunk on re-admission —
+        and the never-OOM pool sizing needs at most ``num_slots`` live
+        draft sequences."""
+        if req_id in self._pos:
+            self.pool.free_seq(req_id)
+            del self._pos[req_id]
+            self._pending.pop(req_id, None)

@@ -35,7 +35,8 @@ def test_pool_random_interleavings_keep_invariants(data):
     for _ in range(data.draw(st.integers(5, 30), label="ops")):
         live = sorted(streams)
         op = data.draw(st.sampled_from(
-            ["alloc", "ensure", "fork", "write", "publish", "free"]))
+            ["alloc", "ensure", "fork", "write", "publish", "free",
+             "truncate"]))
         try:
             if op == "alloc":
                 n = data.draw(st.integers(1, 3 * P))
@@ -81,6 +82,15 @@ def test_pool_random_interleavings_keep_invariants(data):
                 seq = data.draw(st.sampled_from(live))
                 pool.free_seq(seq)
                 del streams[seq]
+            elif op == "truncate" and live:
+                # speculative partial-accept rollback: drop the tail
+                seq = data.draw(st.sampled_from(live))
+                toks, _ = streams[seq]
+                keep = data.draw(st.integers(0, max(0, len(toks))))
+                pool.truncate_seq(seq, keep,
+                                  recredit=data.draw(st.booleans()))
+                kept = toks[:pool.pages_for(keep) * P] if keep else toks[:0]
+                streams[seq] = (kept, chain_hashes(b"ns", kept, P))
         except PagePoolOOM:
             pass                      # legal outcome under pressure
         pool.check_invariants()
@@ -114,5 +124,47 @@ def test_pool_cow_never_touches_shared_pages(data):
     for i in range(a // P, n // P):
         assert pool.refcount(pool.table(writer)[i]) == 1
     pool.check_invariants()
+
+
+@settings(max_examples=30, deadline=None)
+@given(st.data())
+def test_fork_then_partial_rollback_releases_only_the_tail(data):
+    """The speculative-decode lifecycle: fork a published prefix, COW the
+    tail for draft writes, then roll a rejected tail back with
+    ``truncate_seq`` — the reader's table is untouched, only tail pages
+    are released, and under ``recredit`` the freed pages stay promised to
+    the writer (its later re-grow can never lose them to a bystander)."""
+    pool = PagePool(num_pages=16, page_size=P, prefix_cache=True)
+    n_pages = data.draw(st.integers(2, 4), label="pages")
+    n = n_pages * P
+    toks = np.asarray(data.draw(st.lists(st.integers(0, 2),
+                                         min_size=n, max_size=n)), np.int32)
+    hashes = chain_hashes(b"ns", toks, P)
+    pool.alloc(0, n)
+    pool.publish_prefix(0, hashes, n_pages)
+    pool.fork(0, 1)                       # the speculating sequence
+    spec_end = n + data.draw(st.integers(1, 2 * P), label="drafted")
+    pool.ensure(1, spec_end)              # draft tail pages
+    pool.prepare_write(1, n - 1, spec_end)
+    reader_before = pool.table(0)
+    used_before = pool.used_pages
+    keep = data.draw(st.integers(n, spec_end), label="accepted")
+    recredit = data.draw(st.booleans(), label="recredit")
+    released = pool.truncate_seq(1, keep, recredit=recredit)
+    pool.check_invariants()
+    assert pool.table(0) == reader_before, "rollback mutated the reader"
+    assert released == pool.pages_for(spec_end) - pool.pages_for(keep)
+    assert pool.used_pages == used_before - released
+    if recredit:
+        assert pool.deferred_pages == released
+        # the promise is redeemable even after a bystander drains the
+        # free list: the writer re-grows to where it was, OOM-free
+        grabber = 2
+        free_now = pool.free_pages - pool.deferred_pages
+        if free_now:
+            pool.alloc_pages(grabber, free_now)
+        pool.ensure(1, spec_end)
+        assert pool.deferred_pages == 0
+        pool.check_invariants()
 
 

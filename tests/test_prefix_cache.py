@@ -161,6 +161,96 @@ def test_deferred_promise_blocks_interlopers():
 
 
 # ---------------------------------------------------------------------------
+# lookup-lifecycle bugfixes: peek probes, negative cache, null hit rate
+# ---------------------------------------------------------------------------
+def test_peek_match_counts_nothing():
+    pool = PagePool(num_pages=8, page_size=P, prefix_cache=True)
+    toks = np.arange(2 * P, dtype=np.int32)
+    hs = chain_hashes(b"dense", toks, P)
+    t = list(pool.alloc(0, 2 * P))
+    pool.publish_prefix(0, hs, 2)
+    for _ in range(4):
+        assert pool.match_pages(hs, peek=True) == t
+    assert pool.cache.hits == 0 and pool.cache.misses == 0
+    assert pool.match_pages(hs) == t             # committed lookup counts
+    assert pool.cache.hits == 2 and pool.cache.misses == 0
+    pool.free_seq(0)
+    pool.check_invariants()
+
+
+def test_blocked_head_replans_without_stat_or_lru_distortion():
+    """The regression: a blocked FCFS head replans (and so re-probes the
+    prefix cache) every tick; those feasibility peeks must not inflate the
+    hit/miss counters or touch LRU recency — only the tick that actually
+    adopts the pages commits one lookup."""
+    from repro.serving import FCFSScheduler, Request
+
+    pool = PagePool(num_pages=10, page_size=P, prefix_cache=True)
+    toks = np.arange(3 * P, dtype=np.int32)
+    hs = chain_hashes(b"dense", toks, P)
+    pool.alloc(100, 3 * P)
+    pool.publish_prefix(100, hs, 3)
+    pool.free_seq(100)                           # 3 cached, evictable pages
+    lru_before = list(pool.cache.lru)
+    pool.alloc_pages(101, pool.free_pages)       # a hog drains the free list
+    sched = FCFSScheduler(2, pool, policy="on_demand")
+    prompt = np.concatenate([toks, np.asarray([7, 8, 9], np.int32)])
+    sched.submit(Request(id=0, prompt=prompt, max_new_tokens=4))
+    for _ in range(5):                           # blocked head, 5 replans
+        assert sched.admit(0.0) == []
+    assert pool.cache.hits == 0 and pool.cache.misses == 0, \
+        "feasibility peeks counted as cache traffic"
+    assert list(pool.cache.lru) == lru_before, \
+        "a blocked head refreshed LRU recency"
+    pool.free_seq(101)
+    admitted = sched.admit(1.0)                  # now it fits: adopt + count
+    assert len(admitted) == 1 and admitted[0].num_cached_tokens == 3 * P
+    assert pool.cache.hits == 3 and pool.cache.misses == 0
+    pool.check_invariants()
+
+
+def test_negative_cache_remembers_cold_chain_heads():
+    pool = PagePool(num_pages=8, page_size=P, prefix_cache=True)
+    toks = np.arange(2 * P, dtype=np.int32)
+    hs = chain_hashes(b"dense", toks, P)
+    assert pool.match_pages(hs, peek=True) == []
+    assert hs[0] in pool.cache.neg               # cold head remembered
+    base = pool.cache.neg_hits
+    pool.match_pages(hs, peek=True)
+    pool.match_pages(hs)
+    assert pool.cache.neg_hits == base + 2       # walks short-circuited
+    # publish invalidates the negative set: the same lookup now hits
+    t = list(pool.alloc(0, 2 * P))
+    pool.publish_prefix(0, hs, 2)
+    assert not pool.cache.neg
+    assert pool.match_pages(hs) == t
+    pool.check_invariants()
+    # a partial hit (miss past page 0) is NOT a cold head: no neg entry
+    toks2 = toks.copy()
+    toks2[P] += 1
+    hs2 = chain_hashes(b"dense", toks2, P)
+    assert pool.match_pages(hs2, peek=True) == [t[0]]
+    assert hs2[0] not in pool.cache.neg
+    pool.free_seq(0)
+
+
+def test_prefix_hit_rate_is_none_when_nothing_eligible():
+    cfg = reduced(get_model_config("qwen3-1.7b"), dtype="float32")
+    params = api.model_init(jax.random.key(0), cfg)
+    for prefix_cache in (False, True):
+        eng = Engine(cfg, params,
+                     EngineConfig(num_slots=2, num_pages=16, page_size=8,
+                                  max_prompt_len=16, max_new_tokens=2,
+                                  kv_dtype="float32",
+                                  compute_dtype="float32",
+                                  prefix_cache=prefix_cache))
+        assert eng.prefix_hit_rate is None       # no lookup was eligible
+    eng.submit(np.arange(1, 10, dtype=np.int32), 2)
+    eng.run()
+    assert eng.prefix_hit_rate == 0.0            # eligible but cold
+
+
+# ---------------------------------------------------------------------------
 # engine-level acceptance
 # ---------------------------------------------------------------------------
 @pytest.fixture(scope="module")

@@ -502,6 +502,90 @@ def test_engine_oom_only_when_unservable():
     eng.pool.check_invariants()                     # state stays consistent
 
 
+@pytest.mark.parametrize("speculate", [0, 3])
+def test_engine_oom_leaks_no_pages_and_releases_router(speculate):
+    """Every EngineOOM raise path must leave the engine consistent: the
+    raising step allocates no pages it keeps (used_pages unchanged across
+    it), pool invariants hold, and router loads still count exactly the
+    live (unfinished) requests — finished work released, nothing double-
+    released."""
+    from repro.configs.base import HornConfig, get_model_config, reduced
+    from repro.models import api
+    from repro.serving import (Engine, EngineConfig, EngineOOM, ModelBank,
+                               Router)
+
+    cfg = reduced(get_model_config("qwen3-1.7b"), dtype="float32")
+    params = api.model_init(jax.random.key(0), cfg)
+    horn = HornConfig(enabled=True, keep_hidden=0.875, keep_input=1.0,
+                      block_size=16)
+    bank = ModelBank(cfg, horn, 2, seed=0)
+    router = Router(2)
+    draft = bank.draft_model(0, params) if speculate else None
+    eng = Engine(cfg, params,
+                 EngineConfig(num_slots=2, num_pages=4, page_size=4,
+                              max_prompt_len=8, max_new_tokens=8,
+                              policy="on_demand", kv_dtype="float32",
+                              compute_dtype="float32",
+                              speculate_k=speculate),
+                 bank=bank, router=router, draft=draft)
+    # 3 allocatable pages: the 8-token prompt admits on_demand but needs a
+    # 4th page mid-decode with nothing left to preempt
+    eng.submit(np.arange(1, 9, dtype=np.int32), 8)
+    eng.submit(np.arange(1, 5, dtype=np.int32), 8)
+    raised = False
+    for _ in range(64):
+        used = eng.pool.used_pages
+        try:
+            eng.step(0.0)
+        except EngineOOM:
+            raised = True
+            assert eng.pool.used_pages == used, \
+                "the raising step leaked pool pages"
+            break
+    assert raised, "pool was never exhausted"
+    eng.pool.check_invariants()
+    live = len(eng.sched.running) + len(eng.sched.waiting)
+    assert sum(router.loads) == live, \
+        f"router loads {router.loads} out of sync with {live} live requests"
+    if speculate:
+        eng.spec.pool.check_invariants()
+        assert eng.spec.pool.num_seqs <= len(eng.sched.running)
+
+
+def test_engine_oom_unadmittable_head_releases_and_keeps_pool():
+    """The empty-batch raise path (a waiting head whose recompute stream
+    can never fit, e.g. after preemption grew it): no allocation, loads
+    consistent, and the raise repeats deterministically without corrupting
+    state."""
+    from repro.configs.base import get_model_config, reduced
+    from repro.models import api
+    from repro.serving import Engine, EngineConfig, EngineOOM
+
+    cfg = reduced(get_model_config("qwen3-1.7b"), dtype="float32")
+    params = api.model_init(jax.random.key(0), cfg)
+    eng = Engine(cfg, params,
+                 EngineConfig(num_slots=1, num_pages=6, page_size=4,
+                              max_prompt_len=8, max_new_tokens=24,
+                              policy="on_demand", kv_dtype="float32",
+                              compute_dtype="float32"))
+    a = eng.submit(np.arange(1, 5, dtype=np.int32), 2)
+    b = eng.submit(np.arange(1, 9, dtype=np.int32), 24)   # waits: 1 slot
+    # simulate the state preemption leaves behind: b evicted after 16
+    # generated tokens, so its recompute stream (8 + 16 kv tokens) needs
+    # more pages than the whole pool holds
+    b.out_tokens.extend(range(100, 116))
+    with pytest.raises(EngineOOM):
+        for _ in range(64):
+            eng.step(0.0)
+    assert a.finished                      # earlier work completed cleanly
+    assert eng.pool.used_pages == 0        # nothing admitted, nothing kept
+    eng.pool.check_invariants()
+    used = eng.pool.used_pages
+    with pytest.raises(EngineOOM):         # deterministic, not corrupting
+        eng.step(0.0)
+    assert eng.pool.used_pages == used
+
+
 def test_engine_rejects_infeasible_request():
     """A request that could never be admitted must fail at submit, not pin
     the FCFS head and spin the drive loop forever."""
