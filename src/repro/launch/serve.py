@@ -38,6 +38,14 @@ per decode tick in one jitted draft call, and the parent verifies all
 K+1 positions inside its one budgeted call — greedy output stays
 byte-identical to non-speculative serving, it just lands up to K+1
 tokens per tick.
+
+Observability (``repro.serving.observability``): ``--stats-every N``
+prints a periodic stats line off the engine's telemetry snapshot;
+``--trace-out trace.json`` records every tick's plan / host-prep /
+device-step / commit phases plus one track per slot and writes Chrome
+Trace Event JSON (open in https://ui.perfetto.dev); ``--slo-class
+name:ttft:latency`` configures per-class SLO targets and reports
+attainment at exit.
 """
 from __future__ import annotations
 
@@ -51,6 +59,8 @@ from repro.configs.base import HornConfig, get_model_config, list_archs, \
     reduced
 from repro.models import api
 from repro.serving import Engine, EngineConfig, EngineOOM, ModelBank, Router
+from repro.serving.observability import (Telemetry, parse_slo_class,
+                                         percentile)
 
 
 def build_draft(cfg, params, bank, *, speculate: int, draft_circuit: int,
@@ -105,10 +115,6 @@ def make_requests(n: int, vocab_size: int, rng: np.random.Generator, *,
         g = int(rng.integers(max(1, gen // 2), gen + 1))
         out.append((t, prompt, g))
     return out
-
-
-def percentile(xs, p):
-    return float(np.percentile(np.asarray(xs), p)) if xs else float("nan")
 
 
 def main() -> None:
@@ -166,6 +172,21 @@ def main() -> None:
                          "need <= d_ff/4 for distinct circuits)")
     ap.add_argument("--full-config", action="store_true")
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--trace-out", metavar="PATH", default=None,
+                    help="record the per-tick timeline (plan / host-prep / "
+                         "device-step / commit phases + one track per slot) "
+                         "and write Chrome Trace Event JSON here — open in "
+                         "https://ui.perfetto.dev or chrome://tracing")
+    ap.add_argument("--stats-every", type=int, default=0, metavar="TICKS",
+                    help="print a periodic stats line every N engine ticks "
+                         "(0 = off)")
+    ap.add_argument("--slo-class", action="append", default=[],
+                    metavar="NAME:TTFT:LAT",
+                    help="SLO targets (seconds; '-' leaves a bound unset), "
+                         "e.g. 'default:0.5:5'; repeatable.  Launcher "
+                         "traffic is scored under class 'default'; "
+                         "Engine.submit(slo_class=...) routes other "
+                         "classes.  Attainment is reported at exit.")
     args = ap.parse_args()
 
     cfg = get_model_config(args.arch)
@@ -191,12 +212,15 @@ def main() -> None:
         bank = ModelBank(cfg, horn, args.submodels, seed=args.seed)
         router = Router(args.submodels, policy=args.router)
     try:
+        telemetry = Telemetry(
+            timeline=args.trace_out is not None,
+            slo_classes=[parse_slo_class(s) for s in args.slo_class])
         draft = build_draft(cfg, params, bank, speculate=args.speculate,
                             draft_circuit=args.draft_circuit,
                             draft_keep=args.draft_keep,
                             mask_block=args.mask_block, seed=args.seed)
         engine = Engine(cfg, params, ecfg, bank=bank, router=router,
-                        draft=draft)
+                        draft=draft, telemetry=telemetry)
     except ValueError as e:
         raise SystemExit(f"{args.arch}: {e}")
 
@@ -214,6 +238,23 @@ def main() -> None:
     t0 = time.monotonic()
     max_running = 0
     expected = 0
+    next_stats = args.stats_every
+
+    def stats_line() -> str:
+        """One compact periodic line off the telemetry snapshot."""
+        m = engine.metrics()
+        c, tick = m["counters"], m["tick"]["tick_s"]
+        wall = max(time.monotonic() - t0, 1e-9)
+        hr = m["derived"]["prefix_hit_rate"]
+        return (f"  [tick {c['steps']}] "
+                f"{c['generated_tokens'] / wall:6.1f} tok/s  "
+                f"run {len(engine.sched.running)}/{args.slots}  "
+                f"wait {len(engine.sched.waiting)}  "
+                f"pool {m['pool']['utilization']:.0%}  "
+                f"tick p50 {(tick['p50'] or 0) * 1e3:.1f}ms  "
+                f"hit {'n/a' if hr is None else format(hr, '.0%')}  "
+                f"preempt {m['derived']['preemptions']}")
+
     try:
         while pending or engine.sched.has_work():
             now = time.monotonic() - t0
@@ -244,6 +285,9 @@ def main() -> None:
                       f"latency {req.t_done - req.arrival_time:6.3f}s"
                       f"{tag}{pre}")
             max_running = max(max_running, len(engine.sched.running))
+            if args.stats_every and engine.steps >= next_stats:
+                print(stats_line())
+                next_stats = engine.steps + args.stats_every
     except EngineOOM as e:
         print(f"FATAL: unservable request — {e}", file=sys.stderr)
         sys.exit(2)
@@ -295,6 +339,22 @@ def main() -> None:
             f" (peak util {engine.peak_util_by_submodel.get(g, 0.0):.0%})"
             for g in range(args.submodels))
         print(f"co-batch ratio: {engine.cobatch_ratio:.0%}  {per}")
+    if args.slo_class:
+        for name, rep in engine.obs.slo.report().items():
+            att = rep["attainment"]
+            tt = rep["ttft_target_s"]
+            lt = rep["latency_target_s"]
+            print(f"SLO [{name}] attainment "
+                  f"{'n/a' if att is None else format(att, '.0%')} "
+                  f"({rep['met']}/{rep['finished']}; targets "
+                  f"ttft {'-' if tt is None else f'{tt:g}s'} "
+                  f"latency {'-' if lt is None else f'{lt:g}s'}; "
+                  f"violations ttft {rep['ttft_violations']} "
+                  f"latency {rep['latency_violations']})")
+    if args.trace_out:
+        n = engine.obs.timeline.export(args.trace_out)
+        print(f"trace: {n} events over {engine.obs.timeline.ticks} ticks "
+              f"-> {args.trace_out} (open in https://ui.perfetto.dev)")
 
 
 if __name__ == "__main__":

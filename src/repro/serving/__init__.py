@@ -31,6 +31,14 @@ Layering (each importable on its own):
                  step verifies all K+1 positions per slot in the same
                  budgeted call and rolls rejected tails back by
                  ref-release.
+  observability/ the telemetry substrate every other layer writes into and
+                 every consumer reads from: MetricsRegistry (counters /
+                 gauges / streaming histograms with per-label views),
+                 EngineStats (the engine's counter dataclass),
+                 RequestTracer (typed lifecycle events on the engine
+                 clock), TickTimeline (per-tick phase spans -> Chrome
+                 Trace Event JSON for Perfetto), SLOTracker (per-class
+                 TTFT/latency attainment).  Host-side only.
   engine.py      ties them to the model: one unified token-budget tick per
                  step — decode tokens and chunked-prefill prompt chunks
                  from ALL sub-models share a single jitted call that
@@ -47,12 +55,20 @@ from repro.serving.engine import Engine, EngineConfig, EngineOOM
 from repro.serving.kv_cache import (PagePool, PagePoolOOM, PrefixCache,
                                     chain_hashes)
 from repro.serving.model_bank import DraftModel, ModelBank
+from repro.serving.observability import (EngineStats, MetricsRegistry,
+                                         RequestTracer, SLOClass, SLOTracker,
+                                         Telemetry, TickTimeline,
+                                         parse_slo_class, percentile,
+                                         validate_chrome_trace)
 from repro.serving.router import Router
 from repro.serving.scheduler import (EnsembleGroup, FCFSScheduler, Request,
                                      speculative_draft_len)
 from repro.serving.speculative import DraftRunner
 
 __all__ = ["DraftModel", "DraftRunner", "Engine", "EngineConfig",
-           "EngineOOM", "EnsembleGroup", "FCFSScheduler", "ModelBank",
-           "PagePool", "PagePoolOOM", "PrefixCache", "Request", "Router",
-           "chain_hashes", "speculative_draft_len"]
+           "EngineOOM", "EngineStats", "EnsembleGroup", "FCFSScheduler",
+           "MetricsRegistry", "ModelBank", "PagePool", "PagePoolOOM",
+           "PrefixCache", "Request", "RequestTracer", "Router", "SLOClass",
+           "SLOTracker", "Telemetry", "TickTimeline", "chain_hashes",
+           "parse_slo_class", "percentile", "speculative_draft_len",
+           "validate_chrome_trace"]

@@ -68,6 +68,7 @@ meters parent compute: a speculating slot consumes 1 + K verified tokens,
 drafted tokens are free."""
 from __future__ import annotations
 
+import dataclasses
 import time
 from dataclasses import dataclass
 from typing import Dict, List, Optional, Tuple, Union
@@ -83,6 +84,7 @@ from repro.models import transformer as T
 from repro.serving.block_table import BlockTableMirror, pow2_bucket
 from repro.serving.kv_cache import PagePool, PagePoolOOM
 from repro.serving.model_bank import DraftModel, ModelBank
+from repro.serving.observability import EngineStats, Telemetry
 from repro.serving.router import Router
 from repro.serving.scheduler import (EnsembleGroup, FCFSScheduler, Request,
                                      speculative_draft_len)
@@ -143,7 +145,8 @@ class Engine:
     def __init__(self, cfg: ModelConfig, params, ecfg: EngineConfig,
                  mesh=None, *, bank: Optional[ModelBank] = None,
                  router: Optional[Router] = None,
-                 draft: Optional[DraftModel] = None):
+                 draft: Optional[DraftModel] = None,
+                 telemetry: Optional[Telemetry] = None):
         bad = [k for k in cfg.layer_pattern if k not in (ATTN, LOCAL)]
         if bad or cfg.is_encoder_decoder or cfg.num_patches or cfg.learned_pos:
             raise ValueError(
@@ -229,28 +232,12 @@ class Engine:
         self._root_key = jax.random.key(ecfg.seed)
         self._next_id = 0
         self._next_group_id = 0
-        self.steps = 0
-        self.generated_tokens = 0
-        self.prefill_tokens = 0
-        self.peak_utilization = 0.0
-        self.bt_rows_synced = 0
-        self.ticks_nonempty = 0
-        self.ticks_cobatched = 0
-        self.tokens_by_submodel: Dict[int, int] = {}
-        self.peak_util_by_submodel: Dict[int, float] = {}
-        # prefix-cache / COW accounting
-        self.cache_hit_tokens = 0        # prompt tokens served from cache
-        self.cache_eligible_tokens = 0   # prompt tokens lookups could cover
-        self.prefill_tok_saved = 0       # hit tokens + ensemble fork savings
-        self.cow_page_copies = 0         # device page copies issued
+        # serving counters live on an EngineStats dataclass (observability/
+        # stats.py); module-level properties below keep every counter
+        # readable/writable as a plain engine attribute
+        self.stats = EngineStats()
         self._evictions_base = 0         # pool evictions at last reset
-        # speculative-decode accounting
-        self.spec_slot_ticks = 0         # (speculating slot, tick) pairs
-        self.spec_drafted = 0            # draft tokens the parent verified
-        self.spec_accepted = 0           # drafts that survived verification
-        self.spec_committed = 0          # tokens committed by verify ticks
-                                         # (accepted + the verified bonus/
-                                         # correction token)
+        self.obs = telemetry if telemetry is not None else Telemetry()
 
     @property
     def preemptions(self) -> int:
@@ -258,31 +245,19 @@ class Engine:
 
     @property
     def accept_rate(self) -> float:
-        """Fraction of drafted tokens the parent accepted."""
-        return self.spec_accepted / max(1, self.spec_drafted)
+        return self.stats.accept_rate
 
     @property
     def accepted_tok_per_tick(self) -> float:
-        """Tokens committed per (speculating slot, tick) — 1.0 is plain
-        decode's ceiling; anything above it is speculation's win."""
-        return self.spec_committed / max(1, self.spec_slot_ticks)
+        return self.stats.accepted_tok_per_tick
 
     @property
     def cobatch_ratio(self) -> float:
-        """Fraction of non-empty ticks whose single jitted call carried
-        tokens from >= 2 distinct sub-models (the multi-submodel win)."""
-        return self.ticks_cobatched / max(1, self.ticks_nonempty)
+        return self.stats.cobatch_ratio
 
     @property
     def prefix_hit_rate(self) -> Optional[float]:
-        """Fraction of cache-eligible prompt tokens served from the prefix
-        cache since the last ``reset_stats`` — or None when nothing was
-        eligible (cache disabled, or no lookup could match), so stats
-        lines report "n/a"/null instead of a misleading 0.0 (or a
-        division crash)."""
-        if self.cache_eligible_tokens == 0:
-            return None
-        return self.cache_hit_tokens / self.cache_eligible_tokens
+        return self.stats.prefix_hit_rate
 
     @property
     def cache_evictions(self) -> int:
@@ -292,45 +267,41 @@ class Engine:
             return 0
         return self.pool.cache.evictions - self._evictions_base
 
+    def metrics(self) -> dict:
+        """Full telemetry snapshot — counters, derived rates, pool/router/
+        cache/spec state, latency + tick distributions, SLO attainment.
+        The stats line and the benchmark phases read this instead of
+        engine internals; it also refreshes ``self.obs.registry``."""
+        self.obs.collect(self)
+        return self.obs.snapshot(self)
+
     def reset_stats(self) -> None:
         """Zero the serving counters without touching compile caches or the
         pool — benchmarks warm up on the engine they measure (a fresh Engine
         would also mean a fresh jit cache) and then discard the warmup's
-        contribution here."""
-        self.steps = 0
-        self.generated_tokens = 0
-        self.prefill_tokens = 0
-        self.peak_utilization = 0.0
-        self.bt_rows_synced = 0
-        self.ticks_nonempty = 0
-        self.ticks_cobatched = 0
-        self.tokens_by_submodel.clear()
-        self.peak_util_by_submodel.clear()
-        self.cache_hit_tokens = 0
-        self.cache_eligible_tokens = 0
-        self.prefill_tok_saved = 0
-        self.cow_page_copies = 0
-        self.spec_slot_ticks = 0
-        self.spec_drafted = 0
-        self.spec_accepted = 0
-        self.spec_committed = 0
+        contribution here.  Telemetry (histograms, traces, timeline, SLO
+        scores) resets with the counters."""
+        self.stats.reset()
         if self.spec is not None:
             self.spec.draft_calls = 0
         if self.pool.cache is not None:
             self._evictions_base = self.pool.cache.evictions
         self.sched.preemptions = 0
         self.sched.finished.clear()
+        self.obs.reset()
 
     # -- request intake ------------------------------------------------------
     def submit(self, prompt, max_new_tokens: Optional[int] = None,
                arrival_time: float = 0.0, *,
                submodel_id: Optional[int] = None, session=None,
-               ensemble: Optional[str] = None
+               ensemble: Optional[str] = None, slo_class: str = "default"
                ) -> Union[Request, EnsembleGroup]:
         """Queue one request.  With a ModelBank attached, the Router picks
         (or validates) the circuit; ``ensemble`` ("mean_logit" |
         "majority_vote") instead fans the prompt across ALL G circuits as
-        one lockstep group and returns the EnsembleGroup."""
+        one lockstep group and returns the EnsembleGroup.  ``slo_class``
+        names the priority class the finished request is scored under
+        (observability/slo.py)."""
         prompt = np.asarray(prompt, np.int32).reshape(-1)
         if not 0 < len(prompt) <= self.ecfg.max_prompt_len:
             raise ValueError(
@@ -367,7 +338,8 @@ class Engine:
                 Request(id=self._next_id + g, prompt=prompt,
                         max_new_tokens=mnt, arrival_time=arrival_time,
                         eos_id=self.ecfg.eos_id, submodel_id=g, group=group,
-                        kv_namespace=b"dense", mask_from=len(prompt) - 1)
+                        kv_namespace=b"dense", mask_from=len(prompt) - 1,
+                        slo_class=slo_class)
                 for g in range(G)]
             self._check_feasible(group.members[0])
             self._next_id += G
@@ -376,10 +348,12 @@ class Engine:
                     self.router.acquire(g)
             for req in group.members:
                 self.sched.submit(req)
+                self.obs.on_submit(req, arrival_time)
             return group
 
         req = Request(id=self._next_id, prompt=prompt, max_new_tokens=mnt,
-                      arrival_time=arrival_time, eos_id=self.ecfg.eos_id)
+                      arrival_time=arrival_time, eos_id=self.ecfg.eos_id,
+                      slo_class=slo_class)
         self._check_feasible(req)
         if self.bank is not None:
             req.submodel_id = self.router.route(
@@ -389,6 +363,7 @@ class Engine:
             raise ValueError("submodel routing requires a ModelBank")
         self._next_id += 1
         self.sched.submit(req)
+        self.obs.on_submit(req, arrival_time)
         return req
 
     def _check_feasible(self, req: Request) -> None:
@@ -430,6 +405,10 @@ class Engine:
                     self.peak_util_by_submodel[owner] = util
 
     def _release(self, done: List[Request]) -> None:
+        for req in done:
+            # every finished request passes through here exactly once, on
+            # every tick path (early returns and OOM raises included)
+            self.obs.on_finish(req, req.t_done)
         if self.router is not None:
             for req in done:
                 self.router.release(req.submodel_id)
@@ -465,7 +444,7 @@ class Engine:
         self._flush_copies(self.pool.prepare_write(req.id, start, end))
 
     # -- tick planning -------------------------------------------------------
-    def _plan_tick(self) -> Dict[int, _Entry]:
+    def _plan_tick(self, now: float) -> Dict[int, _Entry]:
         """Fill the token budget: one decode token per decode-phase slot,
         then prompt chunks for prefill-phase slots in admission order.
         Preempts the youngest running sequence (and replans) whenever decode
@@ -482,13 +461,15 @@ class Engine:
                         f"preempt — this request can never fit; raise "
                         f"--pages, lower --gen, or use --policy reserve"
                         ) from e
-                if self.spec is not None:
-                    # the draft pool stays bounded by the running slots: a
-                    # preempted request's draft KV is recomputed by one
-                    # catch-up chunk on re-admission
-                    unit = victim.group.members if victim.group is not None \
-                        else [victim]
-                    for m in unit:
+                unit = victim.group.members if victim.group is not None \
+                    else [victim]
+                for m in unit:
+                    m.t_preempted = now
+                    self.obs.on_preempt(m, now)
+                    if self.spec is not None:
+                        # the draft pool stays bounded by the running slots:
+                        # a preempted request's draft KV is recomputed by
+                        # one catch-up chunk on re-admission
                         self.spec.drop(m.id)
 
     def _try_plan(self) -> Dict[int, _Entry]:
@@ -608,10 +589,13 @@ class Engine:
         ``now``."""
         now = self._clock(now)
         tick_now = tick_clock if tick_clock else (lambda: now)
+        pc = time.perf_counter                    # timeline clock (µs spans)
+        m_start = pc()
         for req in self.sched.admit(now):
             self.cache_hit_tokens += req.num_cached_tokens
             self.cache_eligible_tokens += req.cache_eligible_tokens
             self.prefill_tok_saved += req.num_cached_tokens
+            self.obs.on_admit(req, now)
         self._sample_peak()                       # admissions allocate pages
         done = self.sched.evict_finished(tick_now())  # e.g. max_new_tokens==1
         if not self.sched.running:
@@ -632,7 +616,7 @@ class Engine:
             return done
 
         try:
-            entries = self._plan_tick()
+            entries = self._plan_tick(now)
         except EngineOOM:
             self._release(done)           # don't leak router loads on raise
             raise
@@ -640,18 +624,22 @@ class Engine:
         if not entries:                           # nothing runnable this tick
             self._release(done)
             return done
+        m_plan = pc()
 
         # draft proposals first: one jitted draft-circuit call covering
         # every speculating slot (catch-up chunk + on-device scan), then
         # the drafted tokens ride the verify chunks of the parent call
         spec_units = [(slot, e) for slot, e in entries.items()
                       if e.draft_len > 0]
+        draft_span = ()
         if spec_units:
+            t_draft = pc()
             k_tick = max(e.draft_len for _, e in spec_units)
             drafts, draft_probs = self.spec.propose(
                 [(s, e.req) for s, e in spec_units], k_tick, self._root_key)
             for slot, e in spec_units:
                 e.tokens[1:1 + e.draft_len] = drafts[slot, :e.draft_len]
+            draft_span = (("draft", t_draft, pc()),)
         else:
             draft_probs = self._noprobs
 
@@ -691,6 +679,7 @@ class Engine:
         # ticks without an ensemble group skip the on-device combine
         # entirely (static jit arg: one extra compile per bucket at most)
         ensembles = any(e.req.group is not None for e in entries.values())
+        m_host = pc()
         sampled, accepted, self.cache = self._step(
             self.params, self.cache, jnp.asarray(tokens),
             jnp.asarray(starts), jnp.asarray(chunk_lens),
@@ -701,6 +690,7 @@ class Engine:
             ensembles=ensembles)
         sampled = np.asarray(sampled)             # forces the tick
         accepted = np.asarray(accepted)
+        m_dev = pc()
         self.steps += 1
         post = tick_now()
 
@@ -709,6 +699,7 @@ class Engine:
             was_prefill = req.in_prefill
             if was_prefill:
                 self.prefill_tokens += e.chunk_len
+                self.obs.on_prefill_chunk(req, post, e.start, e.chunk_len)
             if e.draft_len:
                 self._commit_spec(slot, e, int(sampled[slot]),
                                   int(accepted[slot]), post)
@@ -732,9 +723,31 @@ class Engine:
                 sid = req.submodel_id
                 self.tokens_by_submodel[sid] = \
                     self.tokens_by_submodel.get(sid, 0) + 1
+                self.obs.on_token(req, post)
 
         finished = self.sched.evict_finished(post)
         self._release(done + finished)
+        # the tick's phase spans + per-slot device-window annotations —
+        # per-slot tuples are only built when a timeline is recording
+        if self.obs.timeline is not None:
+            slot_events = [
+                (slot, f"verify+{e.draft_len}" if e.draft_len
+                 else ("decode" if e.sample_step else "prefill"),
+                 m_host, m_dev,
+                 {"req": e.req.id, "tokens": e.chunk_len, "start": e.start})
+                for slot, e in entries.items()]
+            counters = {"used_pages": self.pool.used_pages,
+                        "cached_pages": self.pool.cached_pages,
+                        "running": len(self.sched.running),
+                        "waiting": len(self.sched.waiting)}
+        else:
+            slot_events, counters = (), None
+        self.obs.on_tick(self.steps - 1, (m_start, m_plan, m_host, m_dev,
+                                          pc()),
+                         slot_events=slot_events, extra_spans=draft_span,
+                         counters=counters,
+                         tokens=int(sum(e.chunk_len
+                                        for e in entries.values())))
         return done + finished
 
     def _commit_spec(self, slot: int, e: _Entry, sampled: int, acc: int,
@@ -763,6 +776,8 @@ class Engine:
         self.spec_drafted += e.draft_len
         self.spec_accepted += min(acc, c)
         self.spec_committed += c
+        self.obs.on_speculate(req, now, e.draft_len, min(acc, c), c)
+        self.obs.on_token(req, now, n=c)
         if req.finished:
             # pages are freed wholesale by evict_finished and the draft
             # state by _release; prefill_pos only needs to stay consistent
@@ -793,3 +808,22 @@ class Engine:
         while self.sched.has_work():
             self.step(clock())
         return self.sched.finished
+
+
+def _stats_attr(name: str) -> property:
+    def get(self):
+        return getattr(self.stats, name)
+
+    def set_(self, v):
+        setattr(self.stats, name, v)
+
+    return property(get, set_)
+
+
+# every EngineStats counter stays a plain engine attribute
+# (``engine.generated_tokens``, ``self.steps += 1``) — derived from the
+# dataclass fields, so a counter added to EngineStats is automatically an
+# engine attribute too
+for _f in dataclasses.fields(EngineStats):
+    setattr(Engine, _f.name, _stats_attr(_f.name))
+del _f

@@ -98,6 +98,20 @@ class PrefixCache:
     def evictable(self) -> int:
         return len(self.lru)
 
+    def stats(self) -> Dict[str, int]:
+        """Lifetime counters + current index occupancy, for the telemetry
+        snapshot (the engine's windowed eviction delta stays on the
+        engine: these never reset)."""
+        return {
+            "indexed_pages": len(self.index),
+            "evictable_pages": self.evictable,
+            "hits": self.hits,
+            "misses": self.misses,
+            "neg_hits": self.neg_hits,
+            "evictions": self.evictions,
+            "inserts": self.inserts,
+        }
+
     def match(self, hashes: Sequence[bytes], *,
               peek: bool = False) -> List[int]:
         """Longest indexed prefix of ``hashes`` -> page ids.  Chained
@@ -253,6 +267,22 @@ class PagePool:
         """Per-owner fraction of allocatable pages: integer page counts
         per owner (``pages_by_owner``) divided once by ``capacity``."""
         return {o: n / self.capacity for o, n in self.pages_by_owner().items()}
+
+    def stats(self) -> Dict[str, object]:
+        """Point-in-time occupancy snapshot for the telemetry layer (the
+        `pool` block of ``Engine.metrics()`` and the Perfetto counter
+        track)."""
+        return {
+            "capacity": self.capacity,
+            "used_pages": self.used_pages,
+            "free_pages": self.free_pages,
+            "cached_pages": self.cached_pages,
+            "deferred_pages": self.deferred_pages,
+            "utilization": self.utilization(),
+            "cow_copies": self.cow_copies,
+            "live_seqs": len(self._tables),
+            "pages_by_owner": dict(self.pages_by_owner()),
+        }
 
     def pages_for(self, num_tokens: int) -> int:
         return -(-num_tokens // self.page_size)       # ceil div

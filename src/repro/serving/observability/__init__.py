@@ -1,0 +1,24 @@
+"""Serving observability: metrics registry, request lifecycle tracing,
+per-tick Perfetto timelines, and SLO attainment — the single telemetry
+substrate the engine writes and everything else (stats lines,
+benchmarks, CI gates) reads.  See README "Observability"."""
+from .metrics import (Counter, Gauge, Histogram, MetricsRegistry,
+                      percentile, percentile_or_none)
+from .slo import DEFAULT_CLASS, SLOClass, SLOTracker, parse_slo_class
+from .stats import EngineStats
+from .telemetry import Telemetry
+from .trace import (ADMIT, EVENT_KINDS, FINISH, PREEMPT, PREFILL_CHUNK,
+                    PREFIX_ADOPT, SPECULATE, SUBMIT, TICK_PHASES, TOKEN,
+                    RequestTrace, RequestTracer, TickTimeline, TraceEvent,
+                    validate_chrome_trace)
+
+__all__ = [
+    "Counter", "Gauge", "Histogram", "MetricsRegistry",
+    "percentile", "percentile_or_none",
+    "DEFAULT_CLASS", "SLOClass", "SLOTracker", "parse_slo_class",
+    "EngineStats", "Telemetry",
+    "SUBMIT", "ADMIT", "PREFIX_ADOPT", "PREFILL_CHUNK", "TOKEN",
+    "SPECULATE", "PREEMPT", "FINISH", "EVENT_KINDS", "TICK_PHASES",
+    "TraceEvent", "RequestTrace", "RequestTracer", "TickTimeline",
+    "validate_chrome_trace",
+]

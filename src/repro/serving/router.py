@@ -80,3 +80,11 @@ class Router:
         if self.loads[g] <= 0:
             raise ValueError(f"release without matching route on {g}")
         self.loads[g] -= 1
+
+    def stats(self) -> dict:
+        """Per-circuit load/assignment snapshot for the telemetry layer."""
+        return {
+            "policy": self.policy,
+            "loads": {g: n for g, n in enumerate(self.loads)},
+            "routed": {g: n for g, n in enumerate(self.routed)},
+        }

@@ -62,6 +62,9 @@ class Request:
                                         # apply at (ensemble members share a
                                         # dense-encoded prompt context
                                         # [0, mask_from); solo requests: 0)
+    slo_class: str = "default"          # SLO priority class (observability/
+                                        # slo.py) the finished request is
+                                        # scored under
 
     # runtime (engine/scheduler-owned)
     slot: Optional[int] = None
@@ -76,6 +79,7 @@ class Request:
     t_admitted: Optional[float] = None
     t_first_token: Optional[float] = None
     t_done: Optional[float] = None
+    t_preempted: Optional[float] = None  # last preemption (engine clock)
 
     @property
     def prompt_len(self) -> int:

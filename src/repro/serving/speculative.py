@@ -163,3 +163,12 @@ class DraftRunner:
             self.pool.free_seq(req_id)
             del self._pos[req_id]
             self._pending.pop(req_id, None)
+
+    def stats(self) -> dict:
+        """Draft-side snapshot for the telemetry layer (acceptance
+        accounting lives on the parent engine's counters)."""
+        return {
+            "draft_calls": self.draft_calls,
+            "live_seqs": len(self._pos),
+            "pool_utilization": self.pool.utilization(),
+        }
