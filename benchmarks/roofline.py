@@ -39,6 +39,19 @@ def fmt_table(rows, mesh="16x16"):
     return "\n".join(out)
 
 
+def fmt_kernel_table(kb):
+    """Render BENCH_serving.json's ``kernel_bench`` phase (paged-attention
+    variant micro-bench: pages_per_step x {f32, int8}) as the same style of
+    markdown table — tok/s and achieved KV bytes/s per kernel variant."""
+    out = ["| variant | pages/step | wall_us | tok/s | KV GB/s |",
+           "|---|---|---|---|---|"]
+    for dtype in ("f32", "int8"):
+        for pps, row in sorted(kb.get(dtype, {}).items()):
+            out.append(f"| {dtype} | {pps[3:]} | {row['wall_us']} "
+                       f"| {row['tok_s']} | {row['kv_gb_s']} |")
+    return "\n".join(out)
+
+
 def run():
     rows = load_rows()
     csv = []
@@ -59,3 +72,8 @@ if __name__ == "__main__":
     print(fmt_table(rows))
     print()
     print(fmt_table(rows, mesh="2x16x16"))
+    if os.path.exists("BENCH_serving.json"):
+        kb = json.load(open("BENCH_serving.json")).get("kernel_bench")
+        if kb:
+            print()
+            print(fmt_kernel_table(kb))

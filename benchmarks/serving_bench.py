@@ -4,7 +4,7 @@ load; emits ``BENCH_serving.json`` so the perf trajectory is recorded per PR.
     PYTHONPATH=src python benchmarks/serving_bench.py [--arch qwen3-1.7b]
         [--requests 32] [--long-frac 0.1] [--out BENCH_serving.json]
 
-Seven phases:
+Nine phases:
   "default"        the log-uniform prompt mix (comparable across PRs)
   "long_mix"       the adversarial mix: ``--long-frac`` of prompts pinned
                    at ``max_prompt`` exactly.  Before chunked prefill,
@@ -47,6 +47,16 @@ Seven phases:
                    use the replay warmup (the measured load driven once,
                    compile-free clock) and no prefix cache, so the delta
                    is speculation alone.
+  "kernel_bench"   roofline-style micro-bench of the paged chunk-attention
+                   kernel variants: pages_per_step in {1, 2, 4} x
+                   {f32, int8} pools, reporting per-variant wall time,
+                   decode tok/s and achieved KV bytes/s (interpret mode on
+                   CPU — a scheduling proxy; the compiled kernel on TPU).
+  "int8"           the quantized paged-KV phase: effective capacity ratio
+                   of int8 pages + f32 scale sidecars vs bf16 at equal
+                   HBM, the squeeze load rerun with the page count that
+                   budget affords under int8 (preemptions must drop), and
+                   the greedy-decode divergence bound vs an f32 engine.
   "observability"  the decode-heavy closed-loop mix served with telemetry
                    fully off (no lifecycle tracer, no timeline) and fully
                    on (tracer + per-tick Perfetto timeline, unbounded
@@ -86,7 +96,8 @@ def run(arch: str = "qwen3-1.7b", requests: int = 32, rate: float = 16.0,
         prefix_cache: bool = True, shared_prefix: int = 0,
         speculate: int = 0, draft_keep: float = 0.875,
         warm_with_load: bool = False, observability: str = "default",
-        keep_ticks: bool = False, _engine_cache={}):
+        keep_ticks: bool = False, kv_dtype: str = "bfloat16",
+        pages_per_step: int = 1, _engine_cache={}):
     import jax
     from repro.configs.base import HornConfig, get_model_config, reduced
     from repro.launch.serve import build_draft, make_requests
@@ -101,7 +112,8 @@ def run(arch: str = "qwen3-1.7b", requests: int = 32, rate: float = 16.0,
         max_prompt_len=-(-max_prompt // page_size) * page_size,
         max_new_tokens=gen, token_budget=max(budget, slots), seed=seed,
         policy="on_demand", prefix_cache=prefix_cache,
-        speculate_k=speculate)
+        speculate_k=speculate, kv_dtype=kv_dtype,
+        pages_per_step=pages_per_step)
     key = (arch, seed)
     if key not in _engine_cache:          # share params across phases
         _engine_cache.clear()
@@ -338,6 +350,144 @@ def observability_phase(args, repeats: int = 3) -> dict:
     }
 
 
+def kernel_bench_phase(args, reps: int = 3) -> dict:
+    """Roofline-style micro-bench of the paged chunk-attention kernel
+    (the unified tick's decode workhorse) across its new variants:
+    pages_per_step x {f32, int8}.  Each variant reports best-of-``reps``
+    wall time per call, decode tok/s (one token per batch row per call),
+    and achieved KV bytes/s — the page bytes one layer's grid must move
+    from HBM, ``kv_page_bytes`` per live page, so the f32-vs-int8 bytes/s
+    gap shows the quantized pool shrinking the memory term, not the
+    clock.  On CPU the kernels run in Pallas interpret mode, so absolute
+    numbers are a scheduling proxy (per-grid-step overhead dominates:
+    pages_per_step > 1 shows up directly as fewer, fatter steps); on TPU
+    the same harness times the compiled kernel against the HBM roofline."""
+    import jax
+    import jax.numpy as jnp
+    from repro.configs.base import get_model_config, reduced
+    from repro.kernels.paged_attention.kernel import paged_chunk_attention
+    from repro.optim.compression import quantize_int8
+    from repro.serving.kv_cache import kv_page_bytes
+
+    cfg = reduced(get_model_config(args.arch))
+    H, KH, D = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    B, psize, maxp = 4, args.page_size, 16
+    interpret = jax.default_backend() == "cpu"
+    rng = np.random.default_rng(0)
+    P = B * maxp + 1
+    q = jnp.asarray(rng.normal(size=(B, 1, H, D)), jnp.float32)
+    kp = jnp.asarray(rng.normal(size=(P, psize, KH, D)), jnp.float32)
+    vp = jnp.asarray(rng.normal(size=(P, psize, KH, D)), jnp.float32)
+    kq, ks = quantize_int8(kp, axis=(1, 3))
+    vq, vs = quantize_int8(vp, axis=(1, 3))
+    ks, vs = ks[:, 0, :, 0], vs[:, 0, :, 0]
+    bt = np.zeros((B, maxp), np.int32)
+    for b in range(B):                       # every row at full context
+        bt[b] = 1 + b * maxp + np.arange(maxp)
+    bt = jnp.asarray(bt)
+    starts = jnp.full((B,), maxp * psize - 1, jnp.int32)
+    clens = jnp.ones((B,), jnp.int32)
+
+    def bench(pools, scales, dtype_name):
+        kw = dict(scale=D ** -0.5, interpret=interpret, **scales)
+        out = {}
+        for pps in (1, 2, 4):
+            fn = lambda: paged_chunk_attention(
+                *pools, bt, starts, clens, pages_per_step=pps, **kw)
+            jax.block_until_ready(fn())      # compile/trace warmup
+            best = min(_timed(fn) for _ in range(reps))
+            kv_bytes = B * maxp * kv_page_bytes(psize, KH, D, dtype_name)
+            out[f"pps{pps}"] = {
+                "wall_us": round(best * 1e6, 1),
+                "tok_s": round(B / best, 2),
+                "kv_gb_s": round(kv_bytes / best / 1e9, 4),
+                # the page-axis extent one (slot, kv-head) pair walks —
+                # what pages_per_step actually collapses (the DMA-overlap
+                # win this buys is hardware-only; interpret wall time
+                # pays python-level plumbing per extra BlockSpec instead)
+                "grid_steps": -(-maxp // pps),
+            }
+        return out
+
+    def _timed(fn):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn())
+        return time.perf_counter() - t0
+
+    return {
+        "B": B, "heads": H, "kv_heads": KH, "head_dim": D,
+        "page_size": psize, "pages_per_seq": maxp,
+        "interpret": interpret,
+        "f32": bench((q, kp, vp), {}, "float32"),
+        "int8": bench((q, kq, vq),
+                      dict(k_scale=ks, v_scale=vs), "int8"),
+    }
+
+
+def int8_phase(args, squeeze_f32: dict) -> dict:
+    """The quantized-pool phase: (1) effective capacity — int8 pages +
+    scale sidecars vs bf16 at equal HBM bytes (``capacity_ratio`` must
+    clear ~2x); (2) the squeeze load rerun under int8 with the page count
+    the SAME HBM budget now affords — pool pressure drops, so preemptions
+    must come in strictly below the bf16 squeeze; (3) greedy-decode
+    divergence vs an f32-pool engine on one load (quantize-on-append
+    requantizes whole pages, so exact token match is not expected —
+    ``greedy_match_frac`` documents the bound CI gates on)."""
+    import jax
+    from repro.configs.base import get_model_config, reduced
+    from repro.models import api
+    from repro.serving import Engine, EngineConfig
+    from repro.serving.kv_cache import kv_page_bytes
+
+    cfg = reduced(get_model_config(args.arch))
+    KH, D = cfg.num_kv_heads, cfg.head_dim
+
+    def ratio_at(psize):
+        return (kv_page_bytes(psize, KH, D, "bfloat16")
+                / kv_page_bytes(psize, KH, D, "int8"))
+
+    # headline capacity at the serving default geometry (the ~2x claim
+    # needs psize * head_dim to amortize the per-head scale sidecar; the
+    # squeeze phase's deliberately tiny 4-token pages sit a bit lower and
+    # get their own ratio for the equal-HBM page-count conversion)
+    sq_psize, sq_pages = 4, 13               # the squeeze phase's geometry
+    pages_int8 = int(sq_pages * ratio_at(sq_psize))
+    squeeze_int8 = run(arch=args.arch, requests=args.requests,
+                       rate=args.rate, slots=4, pages=pages_int8,
+                       page_size=sq_psize, max_prompt=16, gen=12, budget=16,
+                       stream="batch", kv_dtype="int8")
+
+    params = api.model_init(jax.random.key(0), cfg)
+    rng = np.random.default_rng(7)
+    gen = 12
+    prompts = [rng.integers(1, cfg.vocab_size, size=int(n)).astype(np.int32)
+               for n in rng.integers(3, 13, size=8)]
+
+    def greedy(kv_dtype):
+        eng = Engine(cfg, params, EngineConfig(
+            num_slots=4, num_pages=64, page_size=4, max_prompt_len=16,
+            max_new_tokens=gen, token_budget=24, policy="on_demand",
+            kv_dtype=kv_dtype, compute_dtype="float32"))
+        for p in prompts:
+            eng.submit(p, gen)
+        fin = eng.run()
+        return [list(r.out_tokens) for r in sorted(fin, key=lambda r: r.id)]
+
+    f32_out, q8_out = greedy("float32"), greedy("int8")
+    match = float(np.mean([np.mean([a == b for a, b in zip(x, y)])
+                           for x, y in zip(f32_out, q8_out)]))
+    return {
+        "capacity_ratio": round(ratio_at(args.page_size), 4),
+        "squeeze_capacity_ratio": round(ratio_at(sq_psize), 4),
+        "squeeze_pages": {"bf16": sq_pages, "int8": pages_int8},
+        "squeeze_preemptions": {"bf16": squeeze_f32["preemptions"],
+                                "int8": squeeze_int8["preemptions"]},
+        "squeeze_int8": squeeze_int8,
+        "greedy_match_frac": round(match, 4),
+        "greedy_requests": len(prompts), "greedy_gen": gen,
+    }
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="qwen3-1.7b")
@@ -414,7 +564,13 @@ def main() -> None:
         # closed-loop mix (replay-warmed, compile-free): the decode tok/s
         # cost of observability, CI-gated at <= 3%
         "observability": observability_phase(args),
+        # roofline-style kernel micro-bench: pages_per_step x {f32, int8}
+        # variants of the paged chunk-attention kernel, tok/s + KV bytes/s
+        "kernel_bench": kernel_bench_phase(args),
     }
+    # quantized-pool phase needs the squeeze result for its preemption
+    # comparison at equal HBM budget
+    res["int8"] = int8_phase(args, res["squeeze"])
     with open(args.out, "w") as f:
         json.dump(res, f, indent=2)
         f.write("\n")

@@ -225,7 +225,7 @@ def make_decode_step(run: RunConfig, mesh):
 # ---------------------------------------------------------------------------
 def make_unified_paged_step(run: RunConfig, mesh, *, num_pages: int,
                             page_size: int, temperature: float = 0.0,
-                            bank_masks=None):
+                            bank_masks=None, kv_dtype=jnp.bfloat16):
     """THE serving step: one jitted call per engine tick, whatever the tick
     holds.  The scheduler packs a token budget with a mix of decode tokens
     (one per running slot) and prompt chunks from admitting requests; the
@@ -428,7 +428,8 @@ def make_unified_paged_step(run: RunConfig, mesh, *, num_pages: int,
     paxes = api.model_axes(cfg)
     p_shard = tree_shardings(paxes, ctx)
     cache_struct = jax.eval_shape(
-        lambda: T.init_paged_cache(cfg, num_pages, page_size))
+        lambda: T.init_paged_cache(cfg, num_pages, page_size,
+                                   dtype=kv_dtype))
     variants = {
         flag: jax.jit(partial(unified_step, ensembles=flag),
                       in_shardings=(p_shard,) + (None,) * 13,
@@ -525,15 +526,18 @@ def make_page_copy_step():
     power-of-two width with (0, 0) pairs — copying the null page onto
     itself is a no-op by construction — so jit compiles one executable per
     width bucket, not per COW event.  Paged-cache leaves are
-    [num_pages, psize, KH, D] (remainder layers) or [R, num_pages, psize,
-    KH, D] (scanned superblocks); the page axis is ndim - 4."""
+    [num_pages, psize, KH, D] pools or [num_pages, KH] int8-mode scale
+    sidecars (remainder layers), each optionally prefixed by the scanned-
+    superblock [R, ...] axis — the page axis is 0 for even rank, 1 for odd,
+    and scale rows travel with their pages (COW / prefix-cache publishes
+    never split a page from its scale)."""
 
     @partial(jax.jit, donate_argnums=(0,))
     def copy(cache, src, dst):
         def cp(x):
-            if x.ndim == 4:
+            if x.ndim % 2 == 0:              # [P, ...] pool or scale leaf
                 return x.at[dst].set(x[src])
-            return x.at[:, dst].set(x[:, src])
+            return x.at[:, dst].set(x[:, src])   # [R, P, ...] scanned stack
         return jax.tree.map(cp, cache)
 
     return copy

@@ -9,7 +9,8 @@ dropped output tile is *skipped* (``pl.when``), so FLOPs and VMEM traffic
 scale with the kept fraction (~keep_rate at steady state).
 
 Grid: (G, M/bm, N/bn, K/bk), K innermost (sequential accumulation in a VMEM
-scratch accumulator, fp32).
+scratch accumulator, fp32; the only ``arbitrary`` dimension — G/M/N tiles
+are independent and declared ``parallel`` for TPU megacore partitioning).
 """
 from __future__ import annotations
 
@@ -71,5 +72,8 @@ def dropout_matmul(x, w, mask_blocks, *, block_m: int = 128,
         out_specs=pl.BlockSpec((1, bm, bn), lambda g, mi, ni, ki: (g, mi, ni)),
         out_shape=jax.ShapeDtypeStruct((G, M, N), f32),
         scratch_shapes=[pltpu.VMEM((bm, bn), f32)],
+        compiler_params=pltpu.TPUCompilerParams(
+            dimension_semantics=("parallel", "parallel", "parallel",
+                                 "arbitrary")),
         interpret=interpret,
     )(mask_blocks.astype(f32), x, w)

@@ -1,6 +1,9 @@
 """Flash attention Pallas kernel (TPU): blocked online softmax in VMEM.
 
-Grid: (B, H, Sq/bq, Skv/bk) — kv innermost (sequential); the running
+Grid: (B, H, Sq/bq, Skv/bk) — kv innermost (sequential, the only
+``arbitrary`` dimension: the online-softmax carry lives across its steps;
+batch/head/q-block are declared ``parallel`` so the Mosaic compiler may
+split them across TPU megacore); the running
 (max, sum, acc) live in VMEM scratch, so per-step HBM traffic is just the
 Q/K/V tiles + final O tile instead of the [Sq, Skv] score matrix the ref path
 streams through HBM (the dominant memory term of the dry-run baselines).
@@ -114,5 +117,8 @@ def flash_attention(q, k, v, *, scale: float, causal: bool = True,
         scratch_shapes=[pltpu.VMEM((bq, D), f32),
                         pltpu.VMEM((bq, 1), f32),
                         pltpu.VMEM((bq, 1), f32)],
+        compiler_params=pltpu.TPUCompilerParams(
+            dimension_semantics=("parallel", "parallel", "parallel",
+                                 "arbitrary")),
         interpret=interpret,
     )(q, k, v)

@@ -15,19 +15,44 @@ Per-sequence KV is addressed through a block table (the vLLM technique: KV
 lives in a shared pool of fixed-size pages, so sequences of wildly different
 lengths pack the HBM densely and join/leave a batch without reshuffling).
 
-Grid: (B, KH, maxp) — pages innermost (sequential).  The block table and the
-per-sequence lengths ride in as *scalar-prefetch* operands
-(``pltpu.PrefetchScalarGridSpec``) so the K/V ``index_map`` can resolve
-``block_tables[b, p]`` before the DMA is issued: the gather costs zero extra
-HBM traffic versus a contiguous cache.  Running (max, sum, acc) live in VMEM
-scratch across page iterations (online softmax, as in flash_attention).
+Grid: (B, KH, ceil(maxp / pages_per_step)) — pages innermost (sequential).
+``dimension_semantics`` marks the (slot, kv-head) dimensions ``parallel`` so
+TPU megacore splits the work across cores; only the page axis stays
+``arbitrary`` (it carries the online-softmax (max, sum, acc) state in VMEM
+scratch).  The block table and the per-sequence lengths ride in as
+*scalar-prefetch* operands (``pltpu.PrefetchScalarGridSpec``) so the K/V
+``index_map`` can resolve ``block_tables[b, page]`` before the DMA is
+issued: the gather costs zero extra HBM traffic versus a contiguous cache.
+
+``pages_per_step`` widens each grid step to ``pps`` whole pages: the grid's
+innermost extent collapses by that factor and every step carries ``pps``
+independently-indexed K and V blocks, so Pallas double-buffers the next
+step's page DMAs against the current step's compute (gathered pages are not
+contiguous in the pool, hence one BlockSpec *per page offset* rather than
+one wider block).  ``pages_per_step=1`` reproduces the single-page kernel
+bit-for-bit.
+
+Dead grid steps (pages past ``ceil(len / psize)``) are clamped to the null
+page 0 *in the index map* — stale or garbage block-table entries past a
+sequence's length never reach the DMA engine (previously they triggered
+real gathers of arbitrary pool pages, masked only at compute time), and the
+compute is skipped via ``pl.when``.
+
+int8 paged KV: pass ``k_scale``/``v_scale`` ([P, KH] f32, one symmetric
+scale per (page, kv-head) — see ``optim/compression.quantize_int8`` with
+``axis=(1, 3)``) and int8 pools; each gathered page is dequantized
+in-register right after the DMA, so the HBM traffic per page is ~half of
+bf16 and ~quarter of f32.
+
+Fused verify windows: ``paged_chunk_attention(..., logit_index=[B, S])``
+additionally emits the S selected chunk rows per slot as a second,
+window-compacted output — gathered in the kernel epilogue while the chunk
+output is still in VMEM, so speculative verify stops paying a separate
+device-wide gather pass over the full-width output.
 
 GQA: the grid iterates kv heads; each step processes the whole [G, D] group
-of query heads that share the kv head — no materialized K/V repeat.  Pages
-past ``ceil(len / psize)`` are skipped via ``pl.when`` (no DMA is wasted on
-them being masked; they still occupy grid steps, which is the price of a
-static grid).  Sequences with ``length == 0`` (empty decode slots) emit
-zeros.
+of query heads that share the kv head — no materialized K/V repeat.
+Sequences with ``length == 0`` (empty decode slots) emit zeros.
 """
 from __future__ import annotations
 
@@ -42,10 +67,53 @@ from jax.experimental.pallas import tpu as pltpu
 f32 = jnp.float32
 NEG_INF = -1e30
 
+# (slot, kv-head) are embarrassingly parallel — megacore may split them;
+# the page axis is sequential (online-softmax carry in VMEM scratch)
+DIM_SEMANTICS = ("parallel", "parallel", "arbitrary")
 
-def _kernel(bt_ref, len_ref, q_ref, k_ref, v_ref, o_ref,
-            acc_ref, m_ref, l_ref, *, scale: float, window: Optional[int],
-            softcap: Optional[float], psize: int, n_pages: int):
+
+def _kv_page_specs(*, pps: int, psize: int, maxp: int, D: int, length_of,
+                   quantized: bool):
+    """One (1, psize, 1, D) K/V BlockSpec per page offset j of a grid step,
+    plus (1, 1) per-page scale specs in int8 mode.  Dead pages (past the
+    sequence's live length) are clamped to the null page 0 in the index map
+    itself, so garbage block-table entries are never dereferenced and no
+    DMA bandwidth is spent on them."""
+    def page_of(b, p, j, refs):
+        bt = refs[0]
+        pg = p * pps + j
+        live = pg * psize < length_of(b, refs)
+        return jnp.where(live, bt[b, jnp.minimum(pg, maxp - 1)], 0)
+
+    def kv_map(j):
+        return lambda b, h, p, *refs: (page_of(b, p, j, refs), 0, h, 0)
+
+    def sc_map(j):
+        return lambda b, h, p, *refs: (page_of(b, p, j, refs), h)
+
+    kv = [pl.BlockSpec((1, psize, 1, D), kv_map(j)) for j in range(pps)]
+    sc = [pl.BlockSpec((1, 1), sc_map(j)) for j in range(pps)] \
+        if quantized else []
+    return kv, sc
+
+
+def _split_kv_refs(rest, *, pps: int, quantized: bool):
+    """Kernel ref layout: k_0..k_{pps-1}, v_0.., [ksc_0.., vsc_0..], rest."""
+    k_refs, v_refs = rest[:pps], rest[pps:2 * pps]
+    base = 2 * pps
+    ks_refs = vs_refs = None
+    if quantized:
+        ks_refs, vs_refs = rest[base:base + pps], rest[base + pps:base + 2 * pps]
+        base += 2 * pps
+    return k_refs, v_refs, ks_refs, vs_refs, rest[base:]
+
+
+def _kernel(bt_ref, len_ref, q_ref, *rest, scale: float,
+            window: Optional[int], softcap: Optional[float], psize: int,
+            grid_p: int, pps: int, quantized: bool):
+    k_refs, v_refs, ks_refs, vs_refs, tail = _split_kv_refs(
+        rest, pps=pps, quantized=quantized)
+    o_ref, acc_ref, m_ref, l_ref = tail
     b, p = pl.program_id(0), pl.program_id(2)
 
     @pl.when(p == 0)
@@ -55,48 +123,67 @@ def _kernel(bt_ref, len_ref, q_ref, k_ref, v_ref, o_ref,
         l_ref[...] = jnp.zeros_like(l_ref)
 
     length = len_ref[b]
-    live = p * psize < length
+    for j in range(pps):
+        pg = p * pps + j
+        live = pg * psize < length
 
-    @pl.when(live)
-    def _page():
-        q = q_ref[0, 0].astype(f32)                     # [G, D]
-        k = k_ref[0, :, 0].astype(f32)                  # [psize, D]
-        v = v_ref[0, :, 0].astype(f32)
-        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
-                                preferred_element_type=f32) * scale
-        if softcap:
-            s = jnp.tanh(s / softcap) * softcap
-        kpos = p * psize + jax.lax.broadcasted_iota(
-            jnp.int32, s.shape, 1)                      # [G, psize]
-        mask = jnp.where(kpos >= length, NEG_INF, 0.0)
-        if window is not None:
-            mask = jnp.where(kpos <= length - 1 - window, NEG_INF, mask)
-        s = s + mask
-        m_prev = m_ref[...]
-        m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1, keepdims=True))
-        prob = jnp.exp(s - m_new)
-        corr = jnp.exp(m_prev - m_new)
-        l_ref[...] = l_ref[...] * corr + jnp.sum(prob, -1, keepdims=True)
-        acc_ref[...] = acc_ref[...] * corr + jax.lax.dot_general(
-            prob, v, (((1,), (0,)), ((), ())), preferred_element_type=f32)
-        m_ref[...] = m_new
+        @pl.when(live)
+        def _page(j=j, pg=pg):
+            q = q_ref[0, 0].astype(f32)                 # [G, D]
+            k = k_refs[j][0, :, 0].astype(f32)          # [psize, D]
+            v = v_refs[j][0, :, 0].astype(f32)
+            if quantized:                               # in-register dequant
+                k = k * ks_refs[j][0, 0]
+                v = v * vs_refs[j][0, 0]
+            s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                    preferred_element_type=f32) * scale
+            if softcap:
+                s = jnp.tanh(s / softcap) * softcap
+            kpos = pg * psize + jax.lax.broadcasted_iota(
+                jnp.int32, s.shape, 1)                  # [G, psize]
+            mask = jnp.where(kpos >= length, NEG_INF, 0.0)
+            if window is not None:
+                mask = jnp.where(kpos <= length - 1 - window, NEG_INF, mask)
+            s = s + mask
+            m_prev = m_ref[...]
+            m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1, keepdims=True))
+            prob = jnp.exp(s - m_new)
+            corr = jnp.exp(m_prev - m_new)
+            l_ref[...] = l_ref[...] * corr + jnp.sum(prob, -1, keepdims=True)
+            acc_ref[...] = acc_ref[...] * corr + jax.lax.dot_general(
+                prob, v, (((1,), (0,)), ((), ())), preferred_element_type=f32)
+            m_ref[...] = m_new
 
-    @pl.when(p == n_pages - 1)
+    @pl.when(p == grid_p - 1)
     def _emit():
         o_ref[0, 0] = (acc_ref[...]
                        / jnp.maximum(l_ref[...], 1e-30)).astype(o_ref.dtype)
 
 
-def _chunk_kernel(bt_ref, start_ref, clen_ref, q_ref, k_ref, v_ref, o_ref,
-                  acc_ref, m_ref, l_ref, *, scale: float,
+def _chunk_kernel(bt_ref, start_ref, clen_ref, *rest, scale: float,
                   window: Optional[int], softcap: Optional[float],
-                  psize: int, n_pages: int, C: int, G: int):
+                  psize: int, grid_p: int, pps: int, C: int, G: int,
+                  quantized: bool, S_w: int):
     """Chunk-append variant: q is [C * G, D] per (sequence, kv-head) — C
     chunk tokens x G grouped query heads.  Row r holds chunk token r // G at
     absolute position ``start + r // G``; the mask adds a causal constraint
     against the token's own chunk prefix on top of the decode kernel's
     length mask.  Padding rows (token index >= chunk_len) are zeroed at
-    emit.  With C == 1 every op matches ``_kernel`` bit-for-bit."""
+    emit.  With C == 1 every op matches ``_kernel`` bit-for-bit.
+
+    ``S_w > 0``: a ``logit_index`` [B, S_w] scalar-prefetch operand follows
+    the block table, and the epilogue additionally writes the S_w selected
+    chunk rows into a window-compacted second output (the fused speculative
+    verify window — no separate full-width gather pass)."""
+    if S_w:
+        widx_ref, rest = rest[0], rest[1:]
+    q_ref, rest = rest[0], rest[1:]
+    k_refs, v_refs, ks_refs, vs_refs, tail = _split_kv_refs(
+        rest, pps=pps, quantized=quantized)
+    if S_w:
+        o_ref, ow_ref, acc_ref, m_ref, l_ref = tail
+    else:
+        o_ref, acc_ref, m_ref, l_ref = tail
     b, p = pl.program_id(0), pl.program_id(2)
 
     @pl.when(p == 0)
@@ -108,57 +195,92 @@ def _chunk_kernel(bt_ref, start_ref, clen_ref, q_ref, k_ref, v_ref, o_ref,
     start = start_ref[b]
     clen = clen_ref[b]
     length = start + clen
-    live = p * psize < length
+    for j in range(pps):
+        pg = p * pps + j
+        live = pg * psize < length
 
-    @pl.when(live)
-    def _page():
-        q = q_ref[0, 0].astype(f32)                     # [C * G, D]
-        k = k_ref[0, :, 0].astype(f32)                  # [psize, D]
-        v = v_ref[0, :, 0].astype(f32)
-        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
-                                preferred_element_type=f32) * scale
-        if softcap:
-            s = jnp.tanh(s / softcap) * softcap
-        kpos = p * psize + jax.lax.broadcasted_iota(
-            jnp.int32, s.shape, 1)                      # [C*G, psize]
-        qpos = start + jax.lax.broadcasted_iota(
-            jnp.int32, s.shape, 0) // G                 # row r -> token r // G
-        mask = jnp.where(kpos >= length, NEG_INF, 0.0)
-        mask = jnp.where(kpos > qpos, NEG_INF, mask)    # causal own-chunk
-        if window is not None:
-            mask = jnp.where(kpos <= qpos - window, NEG_INF, mask)
-        s = s + mask
-        m_prev = m_ref[...]
-        m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1, keepdims=True))
-        prob = jnp.exp(s - m_new)
-        corr = jnp.exp(m_prev - m_new)
-        l_ref[...] = l_ref[...] * corr + jnp.sum(prob, -1, keepdims=True)
-        acc_ref[...] = acc_ref[...] * corr + jax.lax.dot_general(
-            prob, v, (((1,), (0,)), ((), ())), preferred_element_type=f32)
-        m_ref[...] = m_new
+        @pl.when(live)
+        def _page(j=j, pg=pg):
+            q = q_ref[0, 0].astype(f32)                 # [C * G, D]
+            k = k_refs[j][0, :, 0].astype(f32)          # [psize, D]
+            v = v_refs[j][0, :, 0].astype(f32)
+            if quantized:                               # in-register dequant
+                k = k * ks_refs[j][0, 0]
+                v = v * vs_refs[j][0, 0]
+            s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                    preferred_element_type=f32) * scale
+            if softcap:
+                s = jnp.tanh(s / softcap) * softcap
+            kpos = pg * psize + jax.lax.broadcasted_iota(
+                jnp.int32, s.shape, 1)                  # [C*G, psize]
+            qpos = start + jax.lax.broadcasted_iota(
+                jnp.int32, s.shape, 0) // G             # row r -> token r // G
+            mask = jnp.where(kpos >= length, NEG_INF, 0.0)
+            mask = jnp.where(kpos > qpos, NEG_INF, mask)   # causal own-chunk
+            if window is not None:
+                mask = jnp.where(kpos <= qpos - window, NEG_INF, mask)
+            s = s + mask
+            m_prev = m_ref[...]
+            m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1, keepdims=True))
+            prob = jnp.exp(s - m_new)
+            corr = jnp.exp(m_prev - m_new)
+            l_ref[...] = l_ref[...] * corr + jnp.sum(prob, -1, keepdims=True)
+            acc_ref[...] = acc_ref[...] * corr + jax.lax.dot_general(
+                prob, v, (((1,), (0,)), ((), ())), preferred_element_type=f32)
+            m_ref[...] = m_new
 
-    @pl.when(p == n_pages - 1)
+    @pl.when(p == grid_p - 1)
     def _emit():
         out = acc_ref[...] / jnp.maximum(l_ref[...], 1e-30)
         tok = jax.lax.broadcasted_iota(jnp.int32, out.shape, 0) // G
-        o_ref[0, 0] = jnp.where(tok < clen, out, 0.0).astype(o_ref.dtype)
+        final = jnp.where(tok < clen, out, 0.0).astype(o_ref.dtype)
+        o_ref[0, 0] = final
+        if S_w:
+            # fused verify window: gather the S_w selected rows while the
+            # chunk output sits in VMEM (row tok t -> q-head group t*G:+G)
+            for sw in range(S_w):
+                t = widx_ref[b, sw]
+                ow_ref[0, 0, sw * G:(sw + 1) * G, :] = \
+                    jax.lax.dynamic_slice_in_dim(final, t * G, G, axis=0)
+
+
+def _check_quant(k_pages, k_scale, v_scale):
+    if (k_scale is None) != (v_scale is None):
+        raise ValueError("k_scale and v_scale must be passed together")
+    if k_scale is not None and k_pages.dtype != jnp.int8:
+        raise ValueError(
+            f"scales given but pages are {k_pages.dtype}, expected int8")
+    return k_scale is not None
 
 
 @functools.partial(jax.jit, static_argnames=(
-    "scale", "window", "softcap", "interpret"))
+    "scale", "window", "softcap", "interpret", "pages_per_step"))
 def paged_chunk_attention(q, k_pages, v_pages, block_tables, starts,
                           chunk_lens, *, scale: float,
                           window: Optional[int] = None,
                           softcap: Optional[float] = None,
-                          interpret: bool = False):
+                          interpret: bool = False,
+                          pages_per_step: int = 1,
+                          k_scale=None, v_scale=None, logit_index=None):
     """q: [B, C, H, D] right-padded chunks; k/v_pages: [P, psize, KH, D]
     (the chunk's own K/V already appended); block_tables: [B, maxp];
     starts/chunk_lens: [B] -> [B, C, H, D].  See paged_chunk_attention_ref
-    for the contract; C == 1 reproduces ``paged_attention`` bit-for-bit."""
+    for the contract; C == 1 reproduces ``paged_attention`` bit-for-bit.
+
+    ``pages_per_step`` processes that many pages per grid step (double-
+    buffered page DMAs); 1 reproduces the single-page kernel bit-for-bit.
+    ``k_scale``/``v_scale`` ([P, KH] f32) enable the int8-pool mode.
+    ``logit_index`` ([B, S] int32 chunk positions, each < chunk_len or 0)
+    switches the return to ``(out [B, C, H, D], out_win [B, S, H, D])``
+    with the window rows gathered in the kernel epilogue."""
     B, C, H, D = q.shape
     psize, KH = k_pages.shape[1], k_pages.shape[2]
     maxp = block_tables.shape[1]
     G = H // KH
+    quantized = _check_quant(k_pages, k_scale, v_scale)
+    pps = max(1, min(pages_per_step, maxp))
+    grid_p = -(-maxp // pps)
+    S_w = 0 if logit_index is None else logit_index.shape[1]
     # [B, KH, C*G, D]: chunk tokens x grouped query heads, flattened so the
     # kernel works on one 2-D block per (seq, kv head) like the decode kernel
     qg = q.reshape(B, C, KH, G, D).transpose(0, 2, 1, 3, 4).reshape(
@@ -166,73 +288,103 @@ def paged_chunk_attention(q, k_pages, v_pages, block_tables, starts,
 
     kernel = functools.partial(
         _chunk_kernel, scale=scale, window=window, softcap=softcap,
-        psize=psize, n_pages=maxp, C=C, G=G)
+        psize=psize, grid_p=grid_p, pps=pps, C=C, G=G, quantized=quantized,
+        S_w=S_w)
+    kv_specs, sc_specs = _kv_page_specs(
+        pps=pps, psize=psize, maxp=maxp, D=D,
+        length_of=lambda b, refs: refs[1][b] + refs[2][b], quantized=quantized)
+    q_spec = pl.BlockSpec((1, 1, C * G, D), lambda b, h, p, *refs: (b, h, 0, 0))
+    out_spec = pl.BlockSpec((1, 1, C * G, D),
+                            lambda b, h, p, *refs: (b, h, 0, 0))
+    out_shape = jax.ShapeDtypeStruct((B, KH, C * G, D), q.dtype)
+    out_specs, out_shapes = out_spec, out_shape
+    if S_w:
+        out_specs = [out_spec,
+                     pl.BlockSpec((1, 1, S_w * G, D),
+                                  lambda b, h, p, *refs: (b, h, 0, 0))]
+        out_shapes = [out_shape,
+                      jax.ShapeDtypeStruct((B, KH, S_w * G, D), q.dtype)]
     grid_spec = pltpu.PrefetchScalarGridSpec(
-        num_scalar_prefetch=3,
-        grid=(B, KH, maxp),
-        in_specs=[
-            pl.BlockSpec((1, 1, C * G, D),
-                         lambda b, h, p, bt, st, cl: (b, h, 0, 0)),
-            pl.BlockSpec((1, psize, 1, D),
-                         lambda b, h, p, bt, st, cl: (bt[b, p], 0, h, 0)),
-            pl.BlockSpec((1, psize, 1, D),
-                         lambda b, h, p, bt, st, cl: (bt[b, p], 0, h, 0)),
-        ],
-        out_specs=pl.BlockSpec((1, 1, C * G, D),
-                               lambda b, h, p, bt, st, cl: (b, h, 0, 0)),
+        num_scalar_prefetch=3 + (1 if S_w else 0),
+        grid=(B, KH, grid_p),
+        in_specs=[q_spec] + kv_specs + kv_specs + sc_specs + sc_specs,
+        out_specs=out_specs,
         scratch_shapes=[pltpu.VMEM((C * G, D), f32),
                         pltpu.VMEM((C * G, 1), f32),
                         pltpu.VMEM((C * G, 1), f32)],
     )
+    scalars = [block_tables.astype(jnp.int32), starts.astype(jnp.int32),
+               chunk_lens.astype(jnp.int32)]
+    if S_w:
+        scalars.append(logit_index.astype(jnp.int32))
+    args = scalars + [qg] + [k_pages] * pps + [v_pages] * pps
+    if quantized:
+        args += [k_scale] * pps + [v_scale] * pps
     out = pl.pallas_call(
         kernel,
         grid_spec=grid_spec,
-        out_shape=jax.ShapeDtypeStruct((B, KH, C * G, D), q.dtype),
+        out_shape=out_shapes,
+        compiler_params=pltpu.TPUCompilerParams(
+            dimension_semantics=DIM_SEMANTICS),
         interpret=interpret,
-    )(block_tables.astype(jnp.int32), starts.astype(jnp.int32),
-      chunk_lens.astype(jnp.int32), qg, k_pages, v_pages)
-    return out.reshape(B, KH, C, G, D).transpose(0, 2, 1, 3, 4).reshape(
-        B, C, H, D)
+    )(*args)
+
+    def unflatten(o, n):
+        return o.reshape(B, KH, n, G, D).transpose(0, 2, 1, 3, 4).reshape(
+            B, n, H, D)
+
+    if S_w:
+        return unflatten(out[0], C), unflatten(out[1], S_w)
+    return unflatten(out, C)
 
 
 @functools.partial(jax.jit, static_argnames=(
-    "scale", "window", "softcap", "interpret"))
+    "scale", "window", "softcap", "interpret", "pages_per_step"))
 def paged_attention(q, k_pages, v_pages, block_tables, lengths, *,
                     scale: float, window: Optional[int] = None,
                     softcap: Optional[float] = None,
-                    interpret: bool = False):
+                    interpret: bool = False, pages_per_step: int = 1,
+                    k_scale=None, v_scale=None):
     """q: [B, H, D]; k/v_pages: [P, psize, KH, D]; block_tables: [B, maxp];
-    lengths: [B] -> [B, H, D]."""
+    lengths: [B] -> [B, H, D].  ``pages_per_step``/``k_scale``/``v_scale``
+    as in ``paged_chunk_attention``."""
     B, H, D = q.shape
     psize, KH = k_pages.shape[1], k_pages.shape[2]
     maxp = block_tables.shape[1]
     G = H // KH
+    quantized = _check_quant(k_pages, k_scale, v_scale)
+    pps = max(1, min(pages_per_step, maxp))
+    grid_p = -(-maxp // pps)
     qg = q.reshape(B, KH, G, D)
 
     kernel = functools.partial(
         _kernel, scale=scale, window=window, softcap=softcap,
-        psize=psize, n_pages=maxp)
+        psize=psize, grid_p=grid_p, pps=pps, quantized=quantized)
+    kv_specs, sc_specs = _kv_page_specs(
+        pps=pps, psize=psize, maxp=maxp, D=D,
+        length_of=lambda b, refs: refs[1][b], quantized=quantized)
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=2,
-        grid=(B, KH, maxp),
-        in_specs=[
-            pl.BlockSpec((1, 1, G, D), lambda b, h, p, bt, ln: (b, h, 0, 0)),
-            pl.BlockSpec((1, psize, 1, D),
-                         lambda b, h, p, bt, ln: (bt[b, p], 0, h, 0)),
-            pl.BlockSpec((1, psize, 1, D),
-                         lambda b, h, p, bt, ln: (bt[b, p], 0, h, 0)),
-        ],
+        grid=(B, KH, grid_p),
+        in_specs=[pl.BlockSpec((1, 1, G, D),
+                               lambda b, h, p, *refs: (b, h, 0, 0))]
+        + kv_specs + kv_specs + sc_specs + sc_specs,
         out_specs=pl.BlockSpec((1, 1, G, D),
-                               lambda b, h, p, bt, ln: (b, h, 0, 0)),
+                               lambda b, h, p, *refs: (b, h, 0, 0)),
         scratch_shapes=[pltpu.VMEM((G, D), f32),
                         pltpu.VMEM((G, 1), f32),
                         pltpu.VMEM((G, 1), f32)],
     )
+    args = [block_tables.astype(jnp.int32), lengths.astype(jnp.int32), qg] \
+        + [k_pages] * pps + [v_pages] * pps
+    if quantized:
+        args += [k_scale] * pps + [v_scale] * pps
     out = pl.pallas_call(
         kernel,
         grid_spec=grid_spec,
         out_shape=jax.ShapeDtypeStruct((B, KH, G, D), q.dtype),
+        compiler_params=pltpu.TPUCompilerParams(
+            dimension_semantics=DIM_SEMANTICS),
         interpret=interpret,
-    )(block_tables.astype(jnp.int32), lengths.astype(jnp.int32),
-      qg, k_pages, v_pages)
+    )(*args)
     return out.reshape(B, H, D)

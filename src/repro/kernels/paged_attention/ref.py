@@ -24,9 +24,18 @@ f32 = jnp.float32
 NEG_INF = -1e30
 
 
+def dequantize_pages(pages, scale):
+    """int8 pool [P, psize, KH, D] + per-(page, kv-head) scale [P, KH] ->
+    f32 pool (the pure-jnp mirror of the kernel's in-register dequant)."""
+    if scale is None:
+        return pages
+    return pages.astype(f32) * scale[:, None, :, None]
+
+
 def paged_attention_ref(q, k_pages, v_pages, block_tables, lengths, *,
                         scale: float, window: Optional[int] = None,
-                        softcap: Optional[float] = None):
+                        softcap: Optional[float] = None,
+                        k_scale=None, v_scale=None):
     """Single-token decode attention over a block-paged KV pool.
 
     q:            [B, H, D]   one query token per sequence
@@ -34,8 +43,12 @@ def paged_attention_ref(q, k_pages, v_pages, block_tables, lengths, *,
     block_tables: [B, maxp] int32    page ids per sequence, 0-padded
     lengths:      [B] int32          valid KV tokens per sequence (incl. the
                                      token just written at position len-1)
+    k/v_scale:    [P, KH] f32, optional — int8-pool mode (pages are int8,
+                                     dequantized before the gather)
     Returns [B, H, D].
     """
+    k_pages = dequantize_pages(k_pages, k_scale)
+    v_pages = dequantize_pages(v_pages, v_scale)
     B, H, D = q.shape
     psize, KH = k_pages.shape[1], k_pages.shape[2]
     maxp = block_tables.shape[1]
@@ -67,7 +80,8 @@ def paged_attention_ref(q, k_pages, v_pages, block_tables, lengths, *,
 def paged_chunk_attention_ref(q, k_pages, v_pages, block_tables, starts,
                               chunk_lens, *, scale: float,
                               window: Optional[int] = None,
-                              softcap: Optional[float] = None):
+                              softcap: Optional[float] = None,
+                              k_scale=None, v_scale=None, logit_index=None):
     """Chunk-append attention over a block-paged KV pool.
 
     q:            [B, C, H, D]  a chunk of C tokens per sequence, right-padded
@@ -78,11 +92,17 @@ def paged_chunk_attention_ref(q, k_pages, v_pages, block_tables, starts,
     block_tables: [B, maxp] int32    page ids per sequence, 0-padded
     starts:       [B] int32          KV tokens in pages *before* this chunk
     chunk_lens:   [B] int32          valid tokens in this chunk (0 = idle slot)
+    k/v_scale:    [P, KH] f32, optional — int8-pool mode
+    logit_index:  [B, S] int32, optional — additionally return the S
+                  selected chunk rows per slot (the kernel's fused verify
+                  window): (out [B, C, H, D], out_win [B, S, H, D])
     Returns [B, C, H, D]; padding rows (and fully-idle slots) emit zeros.
 
     With C == 1 and chunk_lens == 1 this is exactly ``paged_attention_ref``
     at ``lengths = starts + 1`` — the decode special case.
     """
+    k_pages = dequantize_pages(k_pages, k_scale)
+    v_pages = dequantize_pages(v_pages, v_scale)
     B, C, H, D = q.shape
     psize, KH = k_pages.shape[1], k_pages.shape[2]
     maxp = block_tables.shape[1]
@@ -111,4 +131,9 @@ def paged_chunk_attention_ref(q, k_pages, v_pages, block_tables, starts,
     # output; zero them like the kernel, which masks them at emit time
     valid = jnp.arange(C)[None, :] < chunk_lens[:, None]    # [B, C]
     out = jnp.where(valid[:, :, None, None, None], out, 0.0)
-    return out.reshape(B, C, H, D).astype(q.dtype)
+    out = out.reshape(B, C, H, D).astype(q.dtype)
+    if logit_index is not None:
+        win = jnp.take_along_axis(
+            out, logit_index[:, :, None, None].astype(jnp.int32), axis=1)
+        return out, win
+    return out

@@ -45,11 +45,12 @@ def forward_hidden(params, batch: Dict[str, Any], cfg: ModelConfig,
                    ctx: ShardingCtx, *, horn=None, mode: str = "train",
                    remat: bool = True, cache=None, cache_index=None,
                    encoder_out=None, block_tables=None, chunk_lens=None,
-                   serve_masks=None):
+                   serve_masks=None, logit_index=None):
     """Returns (hidden, new_cache, aux, encoder_out).
 
     ``serve_masks`` carries fixed per-slot sub-model masks (multi-submodel
-    serving, see ``transformer.lm_forward``) — decoder-LM-only.
+    serving, see ``transformer.lm_forward``) — decoder-LM-only, like
+    ``logit_index`` (the fused verify window, see ``lm_forward``).
     """
     if cfg.is_encoder_decoder:
         if block_tables is not None:
@@ -66,7 +67,7 @@ def forward_hidden(params, batch: Dict[str, Any], cfg: ModelConfig,
         patch_embeds=batch.get("patch_embeds"), cache=cache,
         cache_index=cache_index, mode=mode, remat=remat,
         block_tables=block_tables, chunk_lens=chunk_lens,
-        serve_masks=serve_masks)
+        serve_masks=serve_masks, logit_index=logit_index)
     return hidden, new_cache, aux, None
 
 
@@ -133,20 +134,30 @@ def paged_step(params, cache, tokens, starts, chunk_lens, block_tables,
     (logits [B, n, vocab], new_cache).  Still never materializes [B, C, V]:
     the head runs on exactly the gathered positions (n == chunk width only
     when every position is verified).
+
+    The window is *fused into the forward* (``lm_forward(logit_index=...)``)
+    rather than gathered from full-width hidden here: the residual stream
+    is windowed right after the final block and the final norm runs on the
+    window rows only — bitwise identical to the post-norm gather (row-wise
+    norm), one less full-width pass.  The non-verify path uses the same
+    fusion with the [B, 1] last-valid-position window.
     """
+    dec_params = _decoder_params(params, cfg)
+    if logit_index is not None:
+        hidden, new_cache, _, _ = forward_hidden(
+            params, {"tokens": tokens}, cfg, ctx, mode="decode", remat=False,
+            cache=cache, cache_index=starts, block_tables=block_tables,
+            chunk_lens=chunk_lens, serve_masks=serve_masks,
+            logit_index=logit_index)
+        return T.lm_logits(dec_params, hidden, cfg, ctx), new_cache
+    # the lm head runs on one position per slot, not the whole chunk — at
+    # vocab 150k+ the [B, C, V] logits would dwarf the forward itself
     hidden, new_cache, _, _ = forward_hidden(
         params, {"tokens": tokens}, cfg, ctx, mode="decode", remat=False,
         cache=cache, cache_index=starts, block_tables=block_tables,
-        chunk_lens=chunk_lens, serve_masks=serve_masks)
-    dec_params = _decoder_params(params, cfg)
-    if logit_index is not None:
-        win = jnp.take_along_axis(hidden, logit_index[..., None], axis=1)
-        return T.lm_logits(dec_params, win, cfg, ctx), new_cache
-    # the lm head runs on one position per slot, not the whole chunk — at
-    # vocab 150k+ the [B, C, V] logits would dwarf the forward itself
-    last = jnp.take_along_axis(
-        hidden, jnp.maximum(chunk_lens - 1, 0)[:, None, None], axis=1)
-    logits = T.lm_logits(dec_params, last, cfg, ctx)
+        chunk_lens=chunk_lens, serve_masks=serve_masks,
+        logit_index=jnp.maximum(chunk_lens - 1, 0)[:, None])
+    logits = T.lm_logits(dec_params, hidden, cfg, ctx)
     return logits[:, 0], new_cache
 
 

@@ -282,23 +282,39 @@ def attn_apply(params, x, cfg: ModelConfig, ctx: ShardingCtx, *,
                 q_positions=positions, k_positions=kv_positions)
         new_kv = (k, v)
     elif block_tables is not None:
-        # unified paged step: per-sequence chunk append + paged attention
-        from repro.kernels.paged_attention.ops import (paged_chunk_attention,
-                                                       paged_pool_append)
-        k_pages, v_pages = cache
+        # unified paged step: per-sequence chunk append + paged attention.
+        # ``cache`` is (k_pages, v_pages) — or, in int8-pool mode,
+        # (k_pages, v_pages, k_scale, v_scale) with per-(page, kv-head)
+        # scales riding beside the pools: the append path quantizes
+        # in-device and the kernel dequantizes in-register after the gather
+        from repro.kernels.paged_attention.ops import (
+            paged_chunk_attention, paged_pool_append, paged_pool_append_quant)
+        quantized = len(cache) == 4
+        if quantized:
+            k_pages, v_pages, k_scale, v_scale = cache
+        else:
+            (k_pages, v_pages), k_scale, v_scale = cache, None, None
         if chunk_lens is None:                          # plain decode tick
             chunk_lens = jnp.ones((B,), jnp.int32)
         q, k_new, v_new = _project_qkv(
             params, x, kv_src, cfg, positions, positions,
             use_rope=use_rope, rope_theta=theta)
-        k_pages = paged_pool_append(k_pages, k_new, block_tables,
-                                    cache_index, chunk_lens)
-        v_pages = paged_pool_append(v_pages, v_new, block_tables,
-                                    cache_index, chunk_lens)
+        if quantized:
+            k_pages, k_scale = paged_pool_append_quant(
+                k_pages, k_scale, k_new, block_tables, cache_index, chunk_lens)
+            v_pages, v_scale = paged_pool_append_quant(
+                v_pages, v_scale, v_new, block_tables, cache_index, chunk_lens)
+        else:
+            k_pages = paged_pool_append(k_pages, k_new, block_tables,
+                                        cache_index, chunk_lens)
+            v_pages = paged_pool_append(v_pages, v_new, block_tables,
+                                        cache_index, chunk_lens)
         out = paged_chunk_attention(
             q, k_pages, v_pages, block_tables, cache_index, chunk_lens,
-            scale=scale, window=window, softcap=cfg.attn_logit_softcap)
-        new_kv = (k_pages, v_pages)
+            scale=scale, window=window, softcap=cfg.attn_logit_softcap,
+            k_scale=k_scale, v_scale=v_scale)
+        new_kv = (k_pages, v_pages, k_scale, v_scale) if quantized \
+            else (k_pages, v_pages)
     else:
         # single-token decode against a preallocated cache
         k_buf, v_buf = cache

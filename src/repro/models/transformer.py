@@ -202,16 +202,27 @@ def init_paged_cache(cfg: ModelConfig, num_pages: int, page_size: int,
     shared per-sequence block table (page ids are layer-agnostic: page j of
     layer 0 and page j of layer 7 belong to the same sequence).  Page 0 is
     reserved as the null page for empty decode slots.  Structured to match
-    the superblock scan, like ``init_cache``."""
+    the superblock scan, like ``init_cache``.
+
+    ``dtype=jnp.int8`` selects the quantized-pool mode: each layer carries
+    (k_pages int8, v_pages int8, k_scale f32 [P, KH], v_scale f32 [P, KH])
+    — one symmetric scale per (page, kv-head) stored beside the pool, so a
+    page costs ~1/2 the HBM of bf16 (~1/4 of f32) and the sidecar follows
+    the page through every COW copy (same page ids index both arrays)."""
     kv, hd = cfg.num_kv_heads, cfg.head_dim
+    quantized = jnp.dtype(dtype) == jnp.int8
 
     def mix_cache(kind):
         if kind not in (ATTN, LOCAL):
             raise ValueError(
                 f"paged KV cache supports attention mixers only, got {kind!r} "
                 "(SSM states are slot-resident, not paged — see ROADMAP)")
-        return (jnp.zeros((num_pages, page_size, kv, hd), dtype),
-                jnp.zeros((num_pages, page_size, kv, hd), dtype))
+        pools = (jnp.zeros((num_pages, page_size, kv, hd), dtype),
+                 jnp.zeros((num_pages, page_size, kv, hd), dtype))
+        if quantized:
+            pools += (jnp.zeros((num_pages, kv), jnp.float32),
+                      jnp.zeros((num_pages, kv), jnp.float32))
+        return pools
 
     R = cfg.pattern_repeats
     cache: Dict[str, Any] = {}
@@ -256,8 +267,15 @@ def lm_forward(params, tokens, cfg: ModelConfig, ctx: ShardingCtx, *,
                horn=None, patch_embeds=None, cache=None, cache_index=None,
                mode: str = "train", remat: bool = True, encoder_out=None,
                causal: bool = True, block_tables=None, chunk_lens=None,
-               serve_masks=None):
+               serve_masks=None, logit_index=None):
     """Returns (hidden [B,S,d], new_cache or None, aux dict).
+
+    ``logit_index`` ([B, n] int32, paged decode only) fuses the verify /
+    last-position window into the forward: the n selected chunk rows are
+    gathered from the residual stream right after the final block, and the
+    final norm runs on those n rows only — the returned hidden is [B, n, d]
+    and no full-width post-norm tensor is ever materialized.  Bitwise
+    identical to gathering after the norm (the norm is row-wise).
 
     mode: "train" (no cache out, remat on) | "prefill" (cache out = full-seq
     KV / final SSM states) | "decode" (cache required; S is 1 for dense-cache
@@ -360,6 +378,9 @@ def lm_forward(params, tokens, cfg: ModelConfig, ctx: ShardingCtx, *,
         if mode != "train":
             new_cache["rem"] = rem_cache
 
+    if logit_index is not None:
+        x = jnp.take_along_axis(
+            x, logit_index[..., None].astype(jnp.int32), axis=1)
     x = L.norm_apply(params["final_norm"], x, cfg)
     aux_mean = jax.tree.map(lambda v: v / max(1, cfg.num_layers), aux0)
     return x, (new_cache if mode != "train" else None), aux_mean

@@ -13,16 +13,31 @@ import jax.numpy as jnp
 f32 = jnp.float32
 
 
-def quantize_int8(x) -> Tuple[jnp.ndarray, jnp.ndarray]:
-    """Per-tensor symmetric int8.  Returns (q int8, scale f32 scalar)."""
+def quantize_int8(x, axis=None) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Symmetric int8 quantization.
+
+    ``axis=None`` (gradient compression): one scale for the whole tensor —
+    returns (q int8, scale f32 scalar).
+
+    ``axis`` given (a tuple of axes to reduce over): a scale per remaining
+    slice, kept with ``keepdims=True`` so ``q * scale`` broadcasts back.
+    The paged-KV pool uses this as the per-page-per-head variant: pools are
+    [P, psize, KH, D] and ``axis=(1, 3)`` yields a [P, 1, KH, 1] scale
+    (one f32 per (page, kv-head), stored beside the int8 pages).
+    """
     xf = x.astype(f32)
-    scale = jnp.max(jnp.abs(xf)) / 127.0
-    scale = jnp.maximum(scale, 1e-12)
+    if axis is None:
+        scale = jnp.max(jnp.abs(xf))
+    else:
+        scale = jnp.max(jnp.abs(xf), axis=axis, keepdims=True)
+    scale = jnp.maximum(scale / 127.0, 1e-12)
     q = jnp.clip(jnp.round(xf / scale), -127, 127).astype(jnp.int8)
     return q, scale
 
 
 def dequantize_int8(q, scale):
+    """Inverse of ``quantize_int8``: scale must broadcast against q (scalar
+    for the per-tensor variant, keepdims-shaped for the per-axis variant)."""
     return q.astype(f32) * scale
 
 

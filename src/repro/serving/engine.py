@@ -112,8 +112,15 @@ class EngineConfig:
     seed: int = 0
     policy: str = "reserve"          # "reserve" | "on_demand" (see scheduler)
     eos_id: Optional[int] = None
-    kv_dtype: str = "bfloat16"       # page-pool dtype (float32 for parity tests)
+    kv_dtype: str = "bfloat16"       # page-pool dtype: float32 (parity
+                                     # tests) | bfloat16 | int8 (quantized
+                                     # pools + per-(page, head) f32 scale
+                                     # sidecars — ~2x pages at equal HBM,
+                                     # bounded-error decode)
     compute_dtype: str = "bfloat16"  # model compute dtype
+    pages_per_step: int = 1          # KV pages per paged-kernel grid step
+                                     # (>1 double-buffers page DMAs; output
+                                     # is bit-identical across values)
     prefix_cache: bool = True        # content-addressed page reuse + COW
                                      # (off: PR-3-style per-request prefill)
     speculate_k: int = 0             # draft tokens verified per decode tick
@@ -205,10 +212,15 @@ class Engine:
                                           ecfg.max_model_len, ecfg.num_slots),
                         horn=HornConfig(enabled=False),
                         compute_dtype=ecfg.compute_dtype)
+        # static kernel tuning knob, read at trace time — set before the
+        # first jitted step is traced (see kernels/paged_attention/ops.py)
+        from repro.kernels.paged_attention import ops as _pops
+        _pops.set_pages_per_step(ecfg.pages_per_step)
         self._step, _ = S.make_unified_paged_step(
             run, mesh, num_pages=ecfg.num_pages, page_size=ecfg.page_size,
             temperature=ecfg.temperature,
-            bank_masks=bank.device_masks() if bank is not None else None)
+            bank_masks=bank.device_masks() if bank is not None else None,
+            kv_dtype=jnp.dtype(ecfg.kv_dtype))
         self._page_copy = S.make_page_copy_step()
         self.cache = T.init_paged_cache(cfg, ecfg.num_pages, ecfg.page_size,
                                         dtype=jnp.dtype(ecfg.kv_dtype))

@@ -54,6 +54,21 @@ class PagePoolOOM(RuntimeError):
     (plus whatever the prefix cache can evict)."""
 
 
+def kv_page_bytes(page_size: int, kv_heads: int, head_dim: int,
+                  dtype: str = "bfloat16") -> int:
+    """HBM bytes one K+V page pair costs per layer, including the int8
+    scale sidecar (two f32 scalars per (page, kv-head): one for K, one
+    for V).  The int8/bf16 ratio is the engine's effective capacity gain
+    at equal HBM — ~2x for realistic page_size * head_dim (the 8-byte
+    scale overhead per head is amortized over page_size * head_dim
+    elements)."""
+    elems = page_size * kv_heads * head_dim
+    itemsize = {"int8": 1, "bfloat16": 2, "float16": 2, "float32": 4}
+    per_pool = elems * itemsize[str(dtype)]
+    sidecar = kv_heads * 4 if str(dtype) == "int8" else 0
+    return 2 * (per_pool + sidecar)
+
+
 def chain_hashes(namespace: bytes, tokens, page_size: int) -> List[bytes]:
     """Content ids for every FULL page of ``tokens``: hash i covers token
     block [i * page_size, (i+1) * page_size) *chained on the previous

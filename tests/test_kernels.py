@@ -177,3 +177,54 @@ def test_attention_kernel_path_matches_ref_model():
         KB.set_backend(old)
     np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
                                atol=2e-4, rtol=1e-3)
+
+
+# ---------------------------------------------------------------------------
+# dimension_semantics: megacore partitioning must not change numerics
+# ---------------------------------------------------------------------------
+def _strip_compiler_params(module, jitted):
+    """Re-trace ``jitted`` with TPUCompilerParams neutralized, restoring the
+    module and jit cache afterwards — the with/without outputs must match
+    bitwise (dimension_semantics only licenses megacore partitioning; it
+    never reorders the per-step op sequence)."""
+    import contextlib
+
+    @contextlib.contextmanager
+    def ctx():
+        orig = module.pltpu.TPUCompilerParams
+        module.pltpu.TPUCompilerParams = lambda **kw: None
+        jitted.clear_cache()
+        try:
+            yield
+        finally:
+            module.pltpu.TPUCompilerParams = orig
+            jitted.clear_cache()
+
+    return ctx()
+
+
+def test_flash_attention_dimension_semantics_no_numeric_change():
+    import repro.kernels.flash_attention.kernel as FK
+
+    rng = np.random.default_rng(13)
+    q = jnp.asarray(rng.normal(size=(2, 4, 128, 64)), jnp.float32)
+    k = jnp.asarray(rng.normal(size=(2, 2, 128, 64)), jnp.float32)
+    v = jnp.asarray(rng.normal(size=(2, 2, 128, 64)), jnp.float32)
+    kw = dict(scale=0.125, window=48, block_q=64, block_k=64, interpret=True)
+    with_sem = FK.flash_attention(q, k, v, **kw)
+    with _strip_compiler_params(FK, FK.flash_attention):
+        without = FK.flash_attention(q, k, v, **kw)
+    assert np.array_equal(np.asarray(with_sem), np.asarray(without))
+
+
+def test_dropout_matmul_dimension_semantics_no_numeric_change():
+    import repro.kernels.dropout_matmul.kernel as DK
+
+    rng = np.random.default_rng(17)
+    x = jnp.asarray(rng.normal(size=(2, 128, 256)), jnp.float32)
+    w = jnp.asarray(rng.normal(size=(256, 256)), jnp.float32)
+    mask = jnp.asarray(rng.choice([0.0, 2.0], size=(2, 2)), jnp.float32)
+    with_sem = DK.dropout_matmul(x, w, mask, block_n=128, interpret=True)
+    with _strip_compiler_params(DK, DK.dropout_matmul):
+        without = DK.dropout_matmul(x, w, mask, block_n=128, interpret=True)
+    assert np.array_equal(np.asarray(with_sem), np.asarray(without))

@@ -168,3 +168,104 @@ def test_fork_then_partial_rollback_releases_only_the_tail(data):
         pool.check_invariants()
 
 
+
+# ---------------------------------------------------------------------------
+# int8 paged-KV properties: quantization roundtrip bound, and scale rows
+# traveling with their pages through COW / fork / truncate page copies
+# ---------------------------------------------------------------------------
+@settings(max_examples=40, deadline=None)
+@given(st.data())
+def test_int8_roundtrip_error_within_quantization_step(data):
+    """quantize_int8(axis=(1, 3)) -> dequantize: every element of a
+    [P, psize, KH, D] pool must come back within its (page, head)'s
+    quantization step, amax / 127 (symmetric rounding: half a step plus
+    float slop; one full step is a safe outer bound)."""
+    from repro.optim.compression import dequantize_int8, quantize_int8
+
+    P_, psize, KH, D = (data.draw(st.integers(1, 4), label="P"),
+                        data.draw(st.sampled_from([2, 4]), label="psize"),
+                        data.draw(st.integers(1, 3), label="KH"),
+                        data.draw(st.sampled_from([4, 8]), label="D"))
+    scale_mag = data.draw(st.sampled_from([1e-3, 1.0, 100.0]), label="mag")
+    rng = np.random.default_rng(data.draw(st.integers(0, 2**31), label="s"))
+    x = np.asarray(rng.normal(size=(P_, psize, KH, D)) * scale_mag,
+                   np.float32)
+    q, sc = quantize_int8(x, axis=(1, 3))
+    back = np.asarray(dequantize_int8(q, sc))
+    step = np.abs(x).max(axis=(1, 3), keepdims=True) / 127.0
+    assert (np.abs(back - x) <= step + 1e-9).all()
+    assert np.asarray(q).dtype == np.int8
+    assert sc.shape == (P_, 1, KH, 1)
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.data())
+def test_page_copy_moves_scales_with_pages(data):
+    """The device-side COW page copy on an int8 cache: after copying
+    src[i] -> dst[i], the *dequantized* dst page equals the dequantized
+    src page — i.e. the scale sidecar rows traveled with their pages
+    (fork / prefix-cache publish / preemption restore never split a page
+    from its scale).  Checked for both the plain [P, ...] leaf layout and
+    the scanned [R, P, ...] superblock layout."""
+    import jax.numpy as jnp
+    from repro.core.steps import make_page_copy_step
+    from repro.optim.compression import quantize_int8
+
+    psize, KH, D, NP = 4, 2, 4, 8
+    rng = np.random.default_rng(data.draw(st.integers(0, 2**31), label="s"))
+    scanned = data.draw(st.booleans(), label="scanned")
+    shape = (2, NP, psize, KH, D) if scanned else (NP, psize, KH, D)
+    x = np.asarray(rng.normal(size=shape), np.float32)
+    ax = (2, 4) if scanned else (1, 3)
+    q, sc = quantize_int8(jnp.asarray(x), axis=ax)
+    sc = sc[:, :, 0, :, 0] if scanned else sc[:, 0, :, 0]
+    n = data.draw(st.integers(1, 4), label="copies")
+    src = data.draw(st.lists(st.integers(1, NP - 1), min_size=n, max_size=n),
+                    label="src")
+    # distinct dst pages (a page is only ever COW-copied onto a free page)
+    dst = data.draw(st.permutations(list(range(1, NP))), label="dst")[:n]
+
+    def deq(pool, scale):
+        pool, scale = np.asarray(pool, np.float32), np.asarray(scale)
+        if scanned:
+            return pool * scale[:, :, None, :, None]
+        return pool * scale[:, None, :, None]
+
+    before = deq(q, sc)              # snapshot first: the copy donates its
+    copy = make_page_copy_step()     # cache argument (in-place on device)
+    (q2, sc2), = copy([(q, sc)], jnp.asarray(src, jnp.int32),
+                      jnp.asarray(dst, jnp.int32))
+    after = deq(q2, sc2)
+    want = before.copy()
+    for s_, d_ in zip(src, dst):            # later copies win, like x.at[]
+        if scanned:
+            want[:, d_] = before[:, s_]
+        else:
+            want[d_] = before[s_]
+    untouched = [p for p in range(NP) if p not in dst]
+    sel = (slice(None),) if scanned else ()
+    for p in untouched:
+        assert np.array_equal(after[sel + (p,)], want[sel + (p,)])
+    for s_, d_ in zip(src, dst):
+        assert np.array_equal(after[sel + (d_,)], want[sel + (d_,)]), \
+            "scale row did not travel with its page"
+
+
+def test_pool_fork_and_truncate_preserve_scale_correspondence():
+    """Host-side lifecycle: PagePool fork shares page *ids* (scales are
+    indexed by page id, so correspondence is automatic), COW prepare_write
+    gives the writer fresh ids — and the engine copies pool+scale rows to
+    the new ids together (test above) — and truncate_seq only drops tail
+    ids, never remapping survivors."""
+    pool = PagePool(num_pages=16, page_size=P, prefix_cache=True)
+    pool.alloc(0, 3 * P)
+    t0 = pool.table(0)
+    pool.fork(0, 1)
+    assert pool.table(1) == t0              # shared ids -> shared scales
+    pool.prepare_write(1, P, 3 * P)         # COW the tail
+    t1 = pool.table(1)
+    assert t1[0] == t0[0]                   # untouched head still shared
+    assert t1[1] != t0[1] and t1[2] != t0[2]
+    pool.truncate_seq(1, 2 * P)
+    assert pool.table(1) == t1[:2]          # survivors keep their ids
+    pool.check_invariants()
