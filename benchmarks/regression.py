@@ -1,0 +1,447 @@
+"""Perf-regression gate: replay pinned traffic traces, compare against
+the committed ``BENCH_serving.json`` trajectory, fail on regressions.
+
+    PYTHONPATH=src python benchmarks/regression.py            # gate
+    PYTHONPATH=src python benchmarks/regression.py --regen    # rebuild traces
+    PYTHONPATH=src python benchmarks/regression.py --update   # rebase baselines
+    PYTHONPATH=src python benchmarks/regression.py --inject recompile  # must FAIL
+
+Three pinned traces under ``benchmarks/traces/`` (versioned JSONL, see
+``serving/observability/replay.py``), each stressing a different engine
+subsystem:
+
+  decode_heavy       short prompts, long generations, speculative
+                     decoding (K=4, prefix cache off) — the accept-rate
+                     and decode-throughput gate
+  shared_prefix      3/4 of every prompt pinned to one system prefix,
+                     prefix cache on — the cache-hit and TTFT gate
+  bursty_multiclass  two request bursts across interactive/batch SLO
+                     classes — the TTFT-p99 tail and SLO gate
+
+Per trace the harness: builds the engine the trace's header meta
+specifies, replays until a warmup replay mints no new jit compile cells
+(the deterministic analogue of serving_bench's width sweep — the prefix
+cache reaches steady state at the same time), then measures replay A
+and replay B.  Gates:
+
+  * A and B byte-identical: same token-stream SHA-256 and identical
+    trace-derived (virtual-clock) TTFT/latency — the determinism check.
+  * decode tok/s (pooled-p10 tick estimator, NOT wall clock) at least
+    ``--min-tok-s-ratio`` of the committed baseline.  The loose default
+    absorbs CI-machine variance while still catching order-of-magnitude
+    stalls like a forced per-tick recompile.
+  * virtual-clock TTFT p99 within ``--max-ttft-ratio`` of baseline
+    (deterministic, so this is tight).
+  * accept rate within ``--max-accept-drop`` of baseline (speculative
+    traces only).
+  * zero post-warmup jit compiles (a late compile after a converged
+    warmup is always a regression under a deterministic replay).
+
+A committed-digest mismatch is reported but does not fail the gate:
+legitimate numeric changes (kernel rewrites) move the streams; the
+*within-run* A==B identity is the invariant.  ``--report`` and
+``--alert-log`` write the replay report and the structured anomaly
+alerts (the CI artifacts); per-trace Chrome traces (with alert instants
+and the engine-config metadata block) go to ``--trace-export-dir``.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+
+import numpy as np
+
+TRACES_DIR = os.path.join(os.path.dirname(os.path.abspath(__file__)),
+                          "traces")
+DEFAULT_BENCH = os.path.join(os.path.dirname(TRACES_DIR),
+                             "..", "BENCH_serving.json")
+DEFAULT_ARCH = "qwen3-1.7b"
+TICK_DT = 0.01
+
+# Engine knobs per trace live in the trace header meta so a pinned file
+# is self-describing; these specs are only consulted by --regen.
+TRACE_SPECS = {
+    "decode_heavy": {
+        "engine": dict(arch=DEFAULT_ARCH, slots=4, pages=192, page_size=8,
+                       max_prompt=16, gen=14, budget=64,
+                       policy="on_demand", prefix_cache=False,
+                       speculate_k=4, draft_keep=0.875,
+                       kv_dtype="float32", compute_dtype="float32",
+                       seed=0),
+        "workload": dict(kind="decode_heavy", n=20, rate=40.0, seed=101),
+    },
+    "shared_prefix": {
+        "engine": dict(arch=DEFAULT_ARCH, slots=4, pages=192, page_size=8,
+                       max_prompt=32, gen=10, budget=64,
+                       policy="on_demand", prefix_cache=True,
+                       speculate_k=0, kv_dtype="float32",
+                       compute_dtype="float32", seed=0),
+        "workload": dict(kind="shared_prefix", n=24, rate=32.0,
+                         shared=24, seed=202),
+    },
+    "bursty_multiclass": {
+        "engine": dict(arch=DEFAULT_ARCH, slots=4, pages=192, page_size=8,
+                       max_prompt=24, gen=8, budget=64,
+                       policy="on_demand", prefix_cache=True,
+                       speculate_k=0, kv_dtype="float32",
+                       compute_dtype="float32", seed=0,
+                       slo_classes=["interactive:0.05:0.6", "batch:-:3.0"]),
+        "workload": dict(kind="bursty_multiclass", n=20, seed=303),
+    },
+}
+
+GATES = dict(min_tok_s_ratio=0.25, max_ttft_ratio=1.10,
+             max_accept_drop=0.05, max_post_warm_compiles=0)
+
+
+# -- trace generation (--regen) ----------------------------------------------
+def _gen_records(spec: dict, vocab_size: int):
+    from repro.serving.observability import TraceRecord
+    w = spec["workload"]
+    rng = np.random.default_rng(w["seed"])
+    recs = []
+    if w["kind"] == "decode_heavy":
+        t = 0.0
+        for _ in range(w["n"]):
+            t += rng.exponential(1.0 / w["rate"])
+            plen = int(rng.integers(4, 11))
+            recs.append(TraceRecord(
+                arrival_s=t,
+                prompt=list(rng.integers(1, vocab_size, plen)),
+                max_new_tokens=int(rng.integers(10, 15))))
+    elif w["kind"] == "shared_prefix":
+        system = list(rng.integers(1, vocab_size, w["shared"]))
+        t = 0.0
+        for _ in range(w["n"]):
+            t += rng.exponential(1.0 / w["rate"])
+            tail = list(rng.integers(1, vocab_size,
+                                     int(rng.integers(4, 9))))
+            recs.append(TraceRecord(
+                arrival_s=t, prompt=system + tail,
+                max_new_tokens=int(rng.integers(6, 11))))
+    elif w["kind"] == "bursty_multiclass":
+        # two bursts; interactive requests are short, batch ones long —
+        # the tail the burn-rate/SLO gates watch
+        for burst_t in (0.0, 0.5):
+            for i in range(w["n"] // 2):
+                interactive = i % 2 == 0
+                plen = int(rng.integers(4, 9)) if interactive \
+                    else int(rng.integers(12, 25))
+                recs.append(TraceRecord(
+                    arrival_s=burst_t + 0.001 * i,
+                    prompt=list(rng.integers(1, vocab_size, plen)),
+                    max_new_tokens=int(rng.integers(3, 6)) if interactive
+                    else int(rng.integers(6, 9)),
+                    slo_class="interactive" if interactive else "batch"))
+    else:
+        raise ValueError(f"unknown workload kind {w['kind']!r}")
+    return recs
+
+
+def regen_traces(names) -> None:
+    from repro.configs.base import get_model_config, reduced
+    from repro.serving.observability import save_trace
+    os.makedirs(TRACES_DIR, exist_ok=True)
+    for name in names:
+        spec = TRACE_SPECS[name]
+        cfg = reduced(get_model_config(spec["engine"]["arch"]))
+        recs = _gen_records(spec, cfg.vocab_size)
+        meta = {"name": name, "tick_dt": TICK_DT, **spec["engine"]}
+        path = os.path.join(TRACES_DIR, f"{name}.jsonl")
+        n = save_trace(path, recs, meta)
+        print(f"regen: {n} requests -> {path}")
+
+
+# -- engine construction from trace meta -------------------------------------
+def build_engine(meta: dict, _params_cache={}):
+    import jax
+    from repro.configs.base import get_model_config, reduced
+    from repro.launch.serve import build_draft
+    from repro.models import api
+    from repro.serving import Engine, EngineConfig, Telemetry
+    from repro.serving.observability import parse_slo_class
+
+    arch, seed = meta["arch"], int(meta.get("seed", 0))
+    cfg = reduced(get_model_config(arch))
+    key = (arch, seed)
+    if key not in _params_cache:
+        _params_cache.clear()
+        _params_cache[key] = api.model_init(jax.random.key(seed), cfg)
+    params = _params_cache[key]
+    ecfg = EngineConfig(
+        num_slots=int(meta["slots"]), num_pages=int(meta["pages"]),
+        page_size=int(meta["page_size"]),
+        max_prompt_len=-(-int(meta["max_prompt"]) // int(meta["page_size"]))
+        * int(meta["page_size"]),
+        max_new_tokens=int(meta["gen"]),
+        token_budget=max(int(meta["budget"]), int(meta["slots"])),
+        seed=seed, policy=meta.get("policy", "on_demand"),
+        prefix_cache=bool(meta.get("prefix_cache", True)),
+        speculate_k=int(meta.get("speculate_k", 0)),
+        kv_dtype=meta.get("kv_dtype", "float32"),
+        compute_dtype=meta.get("compute_dtype", "float32"))
+    telemetry = Telemetry(
+        timeline=True, trace_maxlen=None,
+        slo_classes=[parse_slo_class(s)
+                     for s in meta.get("slo_classes", [])])
+    draft = build_draft(cfg, params, None, speculate=ecfg.speculate_k,
+                        draft_circuit=0,
+                        draft_keep=float(meta.get("draft_keep", 0.875)),
+                        mask_block=16, seed=seed)
+    return Engine(cfg, params, ecfg, draft=draft, telemetry=telemetry)
+
+
+# -- fault injection (--inject) ----------------------------------------------
+def apply_injection(engine, inject: str) -> None:
+    """Wrap the engine's device step with a deliberate slowdown so the
+    gate can prove it fails when it should.  ``recompile`` flushes the
+    jit caches before every call (the classic silent regression);
+    ``sleep:MS`` stalls the host path per tick (a spike-detector and
+    throughput regression)."""
+    import time as _time
+
+    import jax
+    inner = engine._step
+    if inject == "recompile":
+        def hurt(*a, **kw):
+            jax.clear_caches()
+            return inner(*a, **kw)
+    elif inject.startswith("sleep:"):
+        delay = float(inject.split(":", 1)[1]) / 1e3
+
+        def hurt(*a, **kw):
+            _time.sleep(delay)
+            return inner(*a, **kw)
+    else:
+        raise ValueError(f"unknown injection {inject!r} "
+                         f"(want 'recompile' or 'sleep:MS')")
+    engine._step = hurt
+
+
+# -- one trace: warmup + 2 measured replays ----------------------------------
+def replay_trace(name: str, path: str, *, inject=None,
+                 trace_export_dir=None, max_warmups: int = 4) -> dict:
+    from repro.serving.observability import (load_trace, replay,
+                                             validate_chrome_trace)
+    records, meta = load_trace(path)
+    tick_dt = float(meta.get("tick_dt", TICK_DT))
+    engine = build_engine(meta)
+    prof = engine.obs.profiler
+    # deterministic warmup: replay until a pass mints no new compile
+    # cell (the prefix cache reaches steady state at the same point)
+    warmups = 0
+    for _ in range(max_warmups):
+        replay(engine, records, tick_dt=tick_dt)
+        warmups += 1
+        if prof is None or prof.compiles_total == 0:
+            break
+    # the fault lands AFTER warmup, the way a real silent regression
+    # would: the warmed path degrades, so every injected compile is
+    # post-warm and the tok/s collapse is measured against warm ticks
+    if inject:
+        apply_injection(engine, inject)
+    a = replay(engine, records, tick_dt=tick_dt)
+    post_warm = prof.compiles_post_warm if prof is not None else 0
+    cost = prof.cost_report() if prof is not None else {}
+    # the B replay exists only for the determinism gate; under an
+    # injected fault (a single replay can cost minutes) skip it — the
+    # timeline then still holds A's alert instants for the export
+    b = a if inject else replay(engine, records, tick_dt=tick_dt)
+    out = {
+        "trace": name,
+        "warmup_replays": warmups,
+        "summary": a.summary(),
+        "determinism": {
+            "digest_a": a.token_digest,
+            "digest_b": b.token_digest,
+            "byte_identical": a.token_digest == b.token_digest,
+            "ttft_identical": a.ttft_s == b.ttft_s,
+            "latency_identical": a.latency_s == b.latency_s,
+        },
+        "post_warm_compiles": post_warm,
+        "cost": cost,
+        "alerts": a.alerts + (b.alerts if b is not a else []),
+    }
+    if trace_export_dir:
+        os.makedirs(trace_export_dir, exist_ok=True)
+        dest = os.path.join(trace_export_dir, f"{name}.trace.json")
+        engine.obs.timeline.export(dest)
+        with open(dest) as f:
+            validate_chrome_trace(json.load(f))
+        out["trace_export"] = dest
+    return out
+
+
+# -- gating -------------------------------------------------------------------
+def evaluate_gates(result: dict, baseline: dict, gates: dict) -> list:
+    """Returns a list of failure strings (empty = pass)."""
+    fails = []
+    det = result["determinism"]
+    if not det["byte_identical"]:
+        fails.append("replay A and B token streams differ "
+                     f"({det['digest_a'][:12]} != {det['digest_b'][:12]})")
+    if not det["ttft_identical"] or not det["latency_identical"]:
+        fails.append("trace-derived TTFT/latency differ between replays")
+    if result["post_warm_compiles"] > gates["max_post_warm_compiles"]:
+        fails.append(f"{result['post_warm_compiles']} post-warmup jit "
+                     f"compile(s) (limit "
+                     f"{gates['max_post_warm_compiles']})")
+    s = result["summary"]
+    if baseline:
+        base_tok = baseline.get("decode_tok_s_p10")
+        if base_tok and s.get("decode_tok_s_p10"):
+            ratio = s["decode_tok_s_p10"] / base_tok
+            if ratio < gates["min_tok_s_ratio"]:
+                fails.append(
+                    f"decode tok/s {s['decode_tok_s_p10']:.1f} is "
+                    f"{ratio:.2f}x baseline {base_tok:.1f} (floor "
+                    f"{gates['min_tok_s_ratio']}x)")
+        base_ttft = baseline.get("ttft_p99_s")
+        if base_ttft and s.get("ttft_p99_s"):
+            if s["ttft_p99_s"] > base_ttft * gates["max_ttft_ratio"]:
+                fails.append(
+                    f"TTFT p99 {s['ttft_p99_s']:.3f}s > "
+                    f"{gates['max_ttft_ratio']}x baseline "
+                    f"{base_ttft:.3f}s")
+        base_acc = baseline.get("accept_rate", 0.0)
+        if base_acc > 0:
+            if s.get("accept_rate", 0.0) < base_acc \
+                    - gates["max_accept_drop"]:
+                fails.append(
+                    f"accept rate {s.get('accept_rate', 0.0):.3f} fell "
+                    f"more than {gates['max_accept_drop']} below "
+                    f"baseline {base_acc:.3f}")
+        if baseline.get("token_digest") and \
+                baseline["token_digest"] != s["token_digest"]:
+            # informational: numeric changes legitimately move streams;
+            # --update rebaselines
+            result.setdefault("warnings", []).append(
+                "token digest differs from committed baseline "
+                "(rebase with --update if intended)")
+    return fails
+
+
+def baseline_entry(result: dict) -> dict:
+    """What gets committed to BENCH_serving.json per trace."""
+    s = result["summary"]
+    return {k: s[k] for k in ("token_digest", "decode_tok_s_p10",
+                              "ttft_p99_s", "latency_p99_s",
+                              "accept_rate", "ticks",
+                              "generated_tokens")}
+
+
+def replay_phase(names=None, *, inject=None, trace_export_dir=None) -> dict:
+    """All pinned traces replayed — the ``replay`` phase serving_bench
+    embeds in a regenerated BENCH_serving.json, and the body of the
+    regression gate."""
+    names = list(names or sorted(TRACE_SPECS))
+    out = {}
+    for name in names:
+        path = os.path.join(TRACES_DIR, f"{name}.jsonl")
+        if not os.path.exists(path):
+            raise FileNotFoundError(
+                f"{path} missing — run regression.py --regen")
+        out[name] = replay_trace(name, path, inject=inject,
+                                 trace_export_dir=trace_export_dir)
+    return out
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--trace", action="append", default=[],
+                    choices=sorted(TRACE_SPECS),
+                    help="subset of traces (default: all)")
+    ap.add_argument("--bench", default=os.path.normpath(DEFAULT_BENCH),
+                    help="committed BENCH_serving.json with the 'replay' "
+                         "baseline block")
+    ap.add_argument("--regen", action="store_true",
+                    help="regenerate the pinned trace files and exit")
+    ap.add_argument("--update", action="store_true",
+                    help="write this run's numbers into --bench as the "
+                         "new baselines")
+    ap.add_argument("--inject", default=None, metavar="FAULT",
+                    help="deliberate slowdown: 'recompile' or 'sleep:MS' "
+                         "(the gate must fail)")
+    ap.add_argument("--report", default=None, metavar="PATH",
+                    help="write the full replay report JSON")
+    ap.add_argument("--alert-log", default=None, metavar="PATH",
+                    help="write the structured anomaly alerts JSON")
+    ap.add_argument("--trace-export-dir", default=None, metavar="DIR",
+                    help="export per-trace Chrome traces (schema-"
+                         "validated, with alert instants)")
+    ap.add_argument("--min-tok-s-ratio", type=float,
+                    default=GATES["min_tok_s_ratio"])
+    ap.add_argument("--max-ttft-ratio", type=float,
+                    default=GATES["max_ttft_ratio"])
+    ap.add_argument("--max-accept-drop", type=float,
+                    default=GATES["max_accept_drop"])
+    ap.add_argument("--max-post-warm-compiles", type=int,
+                    default=GATES["max_post_warm_compiles"])
+    args = ap.parse_args()
+    names = args.trace or sorted(TRACE_SPECS)
+
+    if args.regen:
+        regen_traces(names)
+        return
+
+    gates = dict(min_tok_s_ratio=args.min_tok_s_ratio,
+                 max_ttft_ratio=args.max_ttft_ratio,
+                 max_accept_drop=args.max_accept_drop,
+                 max_post_warm_compiles=args.max_post_warm_compiles)
+    bench = {}
+    if os.path.exists(args.bench):
+        with open(args.bench) as f:
+            bench = json.load(f)
+    baselines = bench.get("replay", {})
+
+    results = replay_phase(names, inject=args.inject,
+                           trace_export_dir=args.trace_export_dir)
+    failures = {}
+    for name, res in results.items():
+        fails = evaluate_gates(res, baselines.get(name, {}), gates)
+        res["gate_failures"] = fails
+        if fails:
+            failures[name] = fails
+        s = res["summary"]
+        verdict = "FAIL" if fails else "ok"
+        print(f"[{verdict}] {name}: {s['generated_tokens']} tok in "
+              f"{s['ticks']} ticks, {s['decode_tok_s_p10'] or 0:.1f} "
+              f"tok/s (p10), ttft p99 {s['ttft_p99_s']}s, accept "
+              f"{s['accept_rate']:.2f}, digest {s['token_digest'][:12]}, "
+              f"{res['post_warm_compiles']} post-warm compiles, "
+              f"{len(res['alerts'])} alert(s)")
+        for w in res.get("warnings", []):
+            print(f"    warn: {w}")
+        for msg in fails:
+            print(f"    FAIL: {msg}")
+
+    if args.report:
+        with open(args.report, "w") as f:
+            json.dump({"gates": gates, "results": results,
+                       "failures": failures}, f, indent=1, sort_keys=True)
+        print(f"report -> {args.report}")
+    if args.alert_log:
+        with open(args.alert_log, "w") as f:
+            json.dump({name: res["alerts"]
+                       for name, res in results.items()}, f, indent=1)
+        print(f"alert log -> {args.alert_log}")
+
+    if args.update:
+        bench["replay"] = {name: baseline_entry(res)
+                           for name, res in results.items()}
+        with open(args.bench, "w") as f:
+            json.dump(bench, f, indent=1, sort_keys=True)
+            f.write("\n")
+        print(f"baselines updated -> {args.bench}")
+        return
+
+    if failures:
+        print(f"\nregression gate FAILED for {len(failures)} trace(s)")
+        sys.exit(1)
+    print("\nregression gate passed")
+
+
+if __name__ == "__main__":
+    main()

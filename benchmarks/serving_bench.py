@@ -83,6 +83,8 @@ from __future__ import annotations
 
 import argparse
 import json
+import os
+import sys
 import time
 
 import numpy as np
@@ -488,6 +490,18 @@ def int8_phase(args, squeeze_f32: dict) -> dict:
     }
 
 
+def replay_phase() -> dict:
+    """Replay every pinned trace under ``benchmarks/traces/`` and emit
+    the baseline block ``benchmarks/regression.py`` gates against:
+    per-trace token digest, virtual-clock TTFT/latency p99, pooled-p10
+    decode tok/s, accept rate.  Regenerating BENCH_serving.json with
+    this script therefore also rebaselines the regression gate."""
+    sys.path.insert(0, os.path.dirname(os.path.abspath(__file__)))
+    import regression
+    return {name: regression.baseline_entry(res)
+            for name, res in regression.replay_phase().items()}
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="qwen3-1.7b")
@@ -567,6 +581,10 @@ def main() -> None:
         # roofline-style kernel micro-bench: pages_per_step x {f32, int8}
         # variants of the paged chunk-attention kernel, tok/s + KV bytes/s
         "kernel_bench": kernel_bench_phase(args),
+        # pinned-trace replay baselines (token digests, virtual-clock
+        # TTFT/latency, pooled-p10 decode tok/s, accept rate) — the block
+        # benchmarks/regression.py gates every CI run against
+        "replay": replay_phase(),
     }
     # quantized-pool phase needs the squeeze result for its preemption
     # comparison at equal HBM budget

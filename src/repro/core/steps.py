@@ -439,6 +439,10 @@ def make_unified_paged_step(run: RunConfig, mesh, *, num_pages: int,
     def step(*args, ensembles: bool = False):
         return variants[ensembles](*args)
 
+    # the observability profiler watches each variant's compile cache
+    # and AOT-lowers them for cost_analysis attribution
+    step.variants = variants
+
     return step, {"params": p_shard, "cache_struct": cache_struct}
 
 

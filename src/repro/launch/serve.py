@@ -54,6 +54,17 @@ device-step / commit phases plus one track per slot and writes Chrome
 Trace Event JSON (open in https://ui.perfetto.dev); ``--slo-class
 name:ttft:latency`` configures per-class SLO targets and reports
 attainment at exit.
+
+Continuous perf harness: ``--record-trace trace.jsonl`` writes the
+exact request stream this run served (arrival offsets, prompt token
+ids, budgets, ensemble decisions) as a versioned JSONL trace;
+``--replay trace.jsonl`` re-serves a recorded stream on the
+deterministic virtual clock (arrivals at their recorded offsets, each
+tick advancing ``--tick-dt`` seconds) — greedy token streams are
+byte-identical run-to-run, which is what ``benchmarks/regression.py``
+gates on.  Live anomaly alerts (tick-duration spikes, SLO burn rate,
+pool leaks, accept-rate collapse, post-warmup recompiles) print in the
+exit report and land in the ``--trace-out`` export.
 """
 from __future__ import annotations
 
@@ -67,8 +78,10 @@ from repro.configs.base import HornConfig, get_model_config, list_archs, \
     reduced
 from repro.models import api
 from repro.serving import Engine, EngineConfig, EngineOOM, ModelBank, Router
-from repro.serving.observability import (Telemetry, parse_slo_class,
-                                         percentile)
+from repro.serving.observability import (Telemetry, TraceRecorder,
+                                         load_trace, parse_slo_class,
+                                         percentile, replay)
+from repro.serving.observability.replay import DEFAULT_TICK_DT
 
 
 def build_draft(cfg, params, bank, *, speculate: int, draft_circuit: int,
@@ -127,7 +140,10 @@ def make_requests(n: int, vocab_size: int, rng: np.random.Generator, *,
 
 def main() -> None:
     ap = argparse.ArgumentParser()
-    ap.add_argument("--arch", required=True, choices=list_archs())
+    ap.add_argument("--arch", default=None, choices=list_archs(),
+                    help="model architecture; required unless --replay "
+                         "(the trace header records the arch it was "
+                         "recorded on)")
     ap.add_argument("--stream", choices=["poisson", "batch"], default="poisson")
     ap.add_argument("--requests", type=int, default=32)
     ap.add_argument("--rate", type=float, default=16.0,
@@ -190,6 +206,17 @@ def main() -> None:
                          "need <= d_ff/4 for distinct circuits)")
     ap.add_argument("--full-config", action="store_true")
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--record-trace", metavar="PATH", default=None,
+                    help="write the served request stream (arrivals, "
+                         "prompt ids, budgets, ensemble decisions) as a "
+                         "versioned JSONL traffic trace")
+    ap.add_argument("--replay", metavar="PATH", default=None,
+                    help="serve a recorded trace on the deterministic "
+                         "virtual clock instead of a synthetic stream "
+                         "(--requests/--stream/--rate are ignored)")
+    ap.add_argument("--tick-dt", type=float, default=DEFAULT_TICK_DT,
+                    help="virtual seconds per tick during --replay "
+                         f"(default {DEFAULT_TICK_DT})")
     ap.add_argument("--trace-out", metavar="PATH", default=None,
                     help="record the per-tick timeline (plan / host-prep / "
                          "device-step / commit phases + one track per slot) "
@@ -206,6 +233,14 @@ def main() -> None:
                          "Engine.submit(slo_class=...) routes other "
                          "classes.  Attainment is reported at exit.")
     args = ap.parse_args()
+
+    if args.arch is None:
+        if not args.replay:
+            ap.error("--arch is required (unless --replay)")
+        args.arch = load_trace(args.replay)[1].get("arch")
+        if args.arch is None:
+            ap.error(f"--arch: {args.replay} records no arch in its "
+                     f"header meta; pass --arch explicitly")
 
     cfg = get_model_config(args.arch)
     if not args.full_config:
@@ -243,7 +278,42 @@ def main() -> None:
     except ValueError as e:
         raise SystemExit(f"{args.arch}: {e}")
 
+    if args.replay:
+        records, meta = load_trace(args.replay)
+        if meta.get("arch") not in (None, args.arch):
+            print(f"WARNING: trace was recorded on arch "
+                  f"{meta['arch']!r}, replaying on {args.arch!r}",
+                  file=sys.stderr)
+        print(f"replaying {len(records)} requests from {args.replay} "
+              f"(virtual clock, {args.tick_dt * 1e3:g}ms/tick)")
+        try:
+            result = replay(engine, records, tick_dt=args.tick_dt)
+        except EngineOOM as e:
+            print(f"FATAL: unservable request — {e}", file=sys.stderr)
+            sys.exit(2)
+        s = result.summary()
+        wall = sum(result.tick_wall_s)
+        print(f"\n{result.requests} requests in {result.virtual_s:.2f} "
+              f"virtual s ({wall:.2f}s host compute, "
+              f"{result.ticks} ticks)")
+        print(f"throughput: {s['decode_tok_s_p10'] or 0:.1f} tok/s "
+              f"(pooled-p10 tick estimate)  "
+              f"{result.generated_tokens} tokens  "
+              f"digest {result.token_digest[:16]}")
+        print(f"TTFT    p50 {s['ttft_p50_s']:.3f}s  "
+              f"p99 {s['ttft_p99_s']:.3f}s  (virtual clock)")
+        print(f"latency p50 {s['latency_p50_s']:.3f}s  "
+              f"p99 {s['latency_p99_s']:.3f}s")
+        _tail_report(engine, args, bank, wall)
+        return
+
     rng = np.random.default_rng(args.seed)
+    recorder = TraceRecorder(meta={
+        "arch": args.arch, "seed": args.seed, "stream": args.stream,
+        "rate": args.rate, "max_prompt": args.max_prompt,
+        "gen": args.gen, "long_frac": args.long_frac,
+        **engine.obs.engine_config,
+    }) if args.record_trace else None
     pending = make_requests(args.requests, cfg.vocab_size, rng,
                             stream=args.stream, rate=args.rate,
                             max_prompt=args.max_prompt, gen=args.gen,
@@ -281,6 +351,10 @@ def main() -> None:
                 at, prompt, gen = pending.pop(0)
                 ens = args.combine if bank is not None \
                     and rng.uniform() < args.ensemble_frac else None
+                if recorder is not None:
+                    # record the RESOLVED ensemble decision so replay
+                    # does not depend on this loop's RNG state
+                    recorder.add(at, prompt, gen, ensemble=ens)
                 try:
                     engine.submit(prompt, gen, arrival_time=at, ensemble=ens)
                 except ValueError as e:
@@ -311,6 +385,9 @@ def main() -> None:
         print(f"FATAL: unservable request — {e}", file=sys.stderr)
         sys.exit(2)
     wall = time.monotonic() - t0
+    if recorder is not None:
+        n = recorder.save(args.record_trace)
+        print(f"recorded {n} requests -> {args.record_trace}")
 
     expected = expected if bank else args.requests
     assert len(engine.sched.finished) == expected, \
@@ -334,6 +411,13 @@ def main() -> None:
           f"p99 {percentile(ttft, 99):.3f}s")
     print(f"latency p50 {percentile(lat, 50):.3f}s  "
           f"p99 {percentile(lat, 99):.3f}s")
+    _tail_report(engine, args, bank, wall)
+
+
+def _tail_report(engine, args, bank, wall: float) -> None:
+    """Exit-report sections shared by the live and replay drive loops:
+    pool / prefix-cache / speculative / bank / SLO state, anomaly
+    alerts, compile attribution, and the trace export."""
     print(f"page-pool peak utilization: {engine.peak_utilization:.0%}  "
           f"preemptions: {engine.preemptions}  "
           f"block-table rows synced/tick: "
@@ -370,6 +454,19 @@ def main() -> None:
                   f"latency {'-' if lt is None else f'{lt:g}s'}; "
                   f"violations ttft {rep['ttft_violations']} "
                   f"latency {rep['latency_violations']})")
+    prof = engine.obs.profiler
+    if prof is not None and prof.compiles_post_warm:
+        print(f"compiles: {prof.compiles_post_warm} post-warmup "
+              f"(of {prof.compiles_total} observed) — late jit compiles "
+              f"are a perf regression signal")
+    mon = engine.obs.anomaly
+    if mon is not None and mon.counts:
+        print("alerts: " + "  ".join(f"{k} x{n}"
+                                     for k, n in sorted(mon.counts.items())))
+        for a in list(mon.alerts)[-5:]:
+            print(f"  [{a.kind}] tick {a.tick} t={a.t:.2f}s: {a.message}")
+    else:
+        print("alerts: none")
     if args.trace_out:
         n = engine.obs.timeline.export(args.trace_out)
         print(f"trace: {n} events over {engine.obs.timeline.ticks} ticks "

@@ -82,7 +82,7 @@ from repro.configs.base import (ATTN, LOCAL, HornConfig, ModelConfig,
 from repro.core import steps as S
 from repro.models import transformer as T
 from repro.serving.block_table import BlockTableMirror, pow2_bucket
-from repro.serving.kv_cache import PagePool, PagePoolOOM
+from repro.serving.kv_cache import PagePool, PagePoolOOM, kv_page_bytes
 from repro.serving.model_bank import DraftModel, ModelBank
 from repro.serving.observability import EngineStats, Telemetry
 from repro.serving.router import Router
@@ -91,6 +91,18 @@ from repro.serving.scheduler import (EnsembleGroup, FCFSScheduler, Request,
 from repro.serving.speculative import DraftRunner
 
 COMBINES = ("mean_logit", "majority_vote")
+
+
+def _unified_step_key(args, kw):
+    """Compile-cell label for the profiler: the unified step
+    specialises on the chunk-width bucket (tokens arg), the verify
+    window extent (draft_probs arg), and the static ensembles flag —
+    everything else is shape-fixed per engine.  Cheap: three attribute
+    reads per tick, no pytree walk."""
+    c = args[2].shape[1]                  # tokens [B, C]
+    sv = args[12].shape[1] + 1            # draft_probs [B, S_v - 1, V]
+    ens = bool(kw.get("ensembles", False))
+    return (c, sv, ens), f"C={c},Sv={sv},ens={ens}"
 
 
 class EngineOOM(RuntimeError):
@@ -212,6 +224,9 @@ class Engine:
                                           ecfg.max_model_len, ecfg.num_slots),
                         horn=HornConfig(enabled=False),
                         compute_dtype=ecfg.compute_dtype)
+        # telemetry before the jitted step: the profiler wraps it and
+        # must see its very first (warmup) compile
+        self.obs = telemetry if telemetry is not None else Telemetry()
         # static kernel tuning knob, read at trace time — set before the
         # first jitted step is traced (see kernels/paged_attention/ops.py)
         from repro.kernels.paged_attention import ops as _pops
@@ -221,6 +236,9 @@ class Engine:
             temperature=ecfg.temperature,
             bank_masks=bank.device_masks() if bank is not None else None,
             kv_dtype=jnp.dtype(ecfg.kv_dtype))
+        if self.obs.profiler is not None:
+            self._step = self.obs.profiler.wrap(
+                "unified_step", self._step, key_fn=_unified_step_key)
         self._page_copy = S.make_page_copy_step()
         self.cache = T.init_paged_cache(cfg, ecfg.num_pages, ecfg.page_size,
                                         dtype=jnp.dtype(ecfg.kv_dtype))
@@ -249,7 +267,24 @@ class Engine:
         # readable/writable as a plain engine attribute
         self.stats = EngineStats()
         self._evictions_base = 0         # pool evictions at last reset
-        self.obs = telemetry if telemetry is not None else Telemetry()
+        # estimated HBM bytes one tick's paged attention reads per live
+        # KV page across all layers (roofline gauges; see kv_page_bytes)
+        self._kv_bytes_per_page = cfg.num_layers * kv_page_bytes(
+            ecfg.page_size, cfg.num_kv_heads, cfg.head_dim, ecfg.kv_dtype)
+        # stamp the tuning knobs into exported traces + metrics snapshots
+        # — two traces from differently-configured engines must be
+        # distinguishable without filenames
+        self.obs.set_engine_config(
+            kv_dtype=ecfg.kv_dtype, compute_dtype=ecfg.compute_dtype,
+            pages_per_step=ecfg.pages_per_step,
+            speculate_k=ecfg.speculate_k,
+            bank_size=bank.num_submodels if bank is not None else 0,
+            num_slots=ecfg.num_slots, num_pages=ecfg.num_pages,
+            page_size=ecfg.page_size, token_budget=ecfg.token_budget,
+            max_prompt_len=ecfg.max_prompt_len,
+            max_new_tokens=ecfg.max_new_tokens, policy=ecfg.policy,
+            prefix_cache=ecfg.prefix_cache,
+            temperature=ecfg.temperature, seed=ecfg.seed)
 
     @property
     def preemptions(self) -> int:
@@ -754,12 +789,21 @@ class Engine:
                         "waiting": len(self.sched.waiting)}
         else:
             slot_events, counters = (), None
+        # estimated KV HBM traffic of this tick's device call (roofline
+        # gauges): every live slot's paged attention walks its whole
+        # table each layer
+        kv_read_bytes = self._kv_bytes_per_page * sum(
+            self.pool.pages_for(e.req.context_len)
+            for e in entries.values())
         self.obs.on_tick(self.steps - 1, (m_start, m_plan, m_host, m_dev,
                                           pc()),
                          slot_events=slot_events, extra_spans=draft_span,
                          counters=counters,
                          tokens=int(sum(e.chunk_len
-                                        for e in entries.values())))
+                                        for e in entries.values())),
+                         t=post, used_pages=self.pool.used_pages,
+                         live_pages=self.pool.live_table_pages,
+                         kv_read_bytes=kv_read_bytes)
         return done + finished
 
     def _commit_spec(self, slot: int, e: _Entry, sampled: int, acc: int,

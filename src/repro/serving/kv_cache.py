@@ -299,6 +299,20 @@ class PagePool:
             "pages_by_owner": dict(self.pages_by_owner()),
         }
 
+    def live_table_pages(self) -> int:
+        """Distinct pages actually referenced by live sequence tables —
+        the ground-truth counterpart of the ``used_pages`` accounting
+        identity (capacity - free - cached).  COW/fork shares count
+        once.  The two disagree only when pages left the free list but
+        no live table can reach them (deferred credits keep their pages
+        ON the free list until redeemed, so promises don't skew this):
+        the pool-leak watchdog's signal.  Walks every table, so callers
+        sample it every N ticks rather than every tick."""
+        seen: set = set()
+        for table in self._tables.values():
+            seen.update(table)
+        return len(seen)
+
     def pages_for(self, num_tokens: int) -> int:
         return -(-num_tokens // self.page_size)       # ceil div
 

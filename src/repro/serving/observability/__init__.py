@@ -1,9 +1,20 @@
 """Serving observability: metrics registry, request lifecycle tracing,
-per-tick Perfetto timelines, and SLO attainment — the single telemetry
-substrate the engine writes and everything else (stats lines,
-benchmarks, CI gates) reads.  See README "Observability"."""
-from .metrics import (Counter, Gauge, Histogram, MetricsRegistry,
-                      percentile, percentile_or_none)
+per-tick Perfetto timelines, SLO attainment, traffic-trace
+record/replay, device-step cost attribution, and live anomaly
+detection — the single telemetry substrate the engine writes and
+everything else (stats lines, benchmarks, CI gates, the regression
+harness) reads.  See README "Observability" and "Continuous perf
+harness"."""
+from .anomaly import (ACCEPT_COLLAPSE, ALERT_KINDS, POOL_LEAK, RECOMPILE,
+                      SLO_BURN, TICK_SPIKE, AcceptCollapseDetector, Alert,
+                      AnomalyMonitor, BurnRateDetector, PoolLeakWatchdog,
+                      TickSpikeDetector)
+from .metrics import (DEFAULT_MAX_LABELS, OVERFLOW_LABEL, Counter, Gauge,
+                      Histogram, MetricsRegistry, percentile,
+                      percentile_or_none)
+from .profiler import CompileEvent, StepProfiler
+from .replay import (ReplayResult, TraceRecord, TraceRecorder, load_trace,
+                     replay, save_trace, stream_digest)
 from .slo import DEFAULT_CLASS, SLOClass, SLOTracker, parse_slo_class
 from .stats import EngineStats
 from .telemetry import Telemetry
@@ -15,10 +26,17 @@ from .trace import (ADMIT, EVENT_KINDS, FINISH, PREEMPT, PREFILL_CHUNK,
 __all__ = [
     "Counter", "Gauge", "Histogram", "MetricsRegistry",
     "percentile", "percentile_or_none",
+    "DEFAULT_MAX_LABELS", "OVERFLOW_LABEL",
     "DEFAULT_CLASS", "SLOClass", "SLOTracker", "parse_slo_class",
     "EngineStats", "Telemetry",
     "SUBMIT", "ADMIT", "PREFIX_ADOPT", "PREFILL_CHUNK", "TOKEN",
     "SPECULATE", "PREEMPT", "FINISH", "EVENT_KINDS", "TICK_PHASES",
     "TraceEvent", "RequestTrace", "RequestTracer", "TickTimeline",
     "validate_chrome_trace",
+    "Alert", "ALERT_KINDS", "TICK_SPIKE", "SLO_BURN", "POOL_LEAK",
+    "ACCEPT_COLLAPSE", "RECOMPILE", "AnomalyMonitor", "TickSpikeDetector",
+    "BurnRateDetector", "PoolLeakWatchdog", "AcceptCollapseDetector",
+    "CompileEvent", "StepProfiler",
+    "TraceRecord", "TraceRecorder", "ReplayResult",
+    "load_trace", "save_trace", "replay", "stream_digest",
 ]

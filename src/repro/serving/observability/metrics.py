@@ -29,6 +29,17 @@ from typing import Dict, Hashable, List, Optional
 
 import numpy as np
 
+# Per-metric label-view bound.  Long replays tag latency histograms and
+# token counters with request-derived labels; without a cap a trace with
+# a million distinct request ids grows a million dict entries per
+# metric.  Labels beyond the cap fold into one explicit ``OVERFLOW``
+# bucket — the labels-sum-to-totals invariant still holds exactly, the
+# view just stops distinguishing the tail — and each fold bumps the
+# registry's ``metrics.label_overflow`` warning counter (labeled by
+# metric name) so the saturation is visible, not silent.
+DEFAULT_MAX_LABELS = 64
+OVERFLOW_LABEL = "overflow"
+
 
 def percentile(xs, p: float, *, empty: float = float("nan")) -> float:
     """Exact percentile of a finite sample (numpy semantics), ``empty``
@@ -47,19 +58,44 @@ def percentile_or_none(xs, p: float, ndigits: int = 4) -> Optional[float]:
     return None if math.isnan(v) else round(v, ndigits)
 
 
-class Counter:
+class _LabelCap:
+    """Shared label-routing for the three metric kinds: an unseen label
+    past ``max_labels`` becomes ``OVERFLOW_LABEL`` (reserving one view
+    slot for it), and the fold is reported to the registry's warning
+    counter when one is attached."""
+
+    __slots__ = ()
+
+    def _route(self, label: Hashable) -> Hashable:
+        if label is None or label in self._by_label:
+            return label
+        if len(self._by_label) >= max(self.max_labels - 1, 1) \
+                and label != OVERFLOW_LABEL:
+            self.label_overflows += 1
+            if self._overflow_sink is not None:
+                self._overflow_sink.inc(1.0, label=self.name)
+            return OVERFLOW_LABEL
+        return label
+
+
+class Counter(_LabelCap):
     """Monotonic counter with an optional per-label breakdown."""
 
-    __slots__ = ("name", "value", "_by_label")
+    __slots__ = ("name", "value", "_by_label", "max_labels",
+                 "label_overflows", "_overflow_sink")
 
-    def __init__(self, name: str):
+    def __init__(self, name: str, max_labels: int = DEFAULT_MAX_LABELS):
         self.name = name
         self.value = 0.0
         self._by_label: Dict[Hashable, float] = {}
+        self.max_labels = max_labels
+        self.label_overflows = 0
+        self._overflow_sink = None
 
     def inc(self, n: float = 1.0, label: Hashable = None) -> None:
         self.value += n
         if label is not None:
+            label = self._route(label)
             self._by_label[label] = self._by_label.get(label, 0.0) + n
 
     def view(self) -> Dict[Hashable, float]:
@@ -68,36 +104,45 @@ class Counter:
     def reset(self) -> None:
         self.value = 0.0
         self._by_label.clear()
+        self.label_overflows = 0
 
     def summary(self) -> dict:
         out = {"type": "counter", "value": self.value}
         if self._by_label:
             out["by_label"] = self.view()
+        if self.label_overflows:
+            out["label_overflows"] = self.label_overflows
         return out
 
 
-class Gauge:
+class Gauge(_LabelCap):
     """Point-in-time value (plus per-label values).  ``set_max`` keeps a
     running peak — the page-pool high-water marks."""
 
-    __slots__ = ("name", "value", "_by_label")
+    __slots__ = ("name", "value", "_by_label", "max_labels",
+                 "label_overflows", "_overflow_sink")
 
-    def __init__(self, name: str):
+    def __init__(self, name: str, max_labels: int = DEFAULT_MAX_LABELS):
         self.name = name
         self.value = 0.0
         self._by_label: Dict[Hashable, float] = {}
+        self.max_labels = max_labels
+        self.label_overflows = 0
+        self._overflow_sink = None
 
     def set(self, v: float, label: Hashable = None) -> None:
         if label is None:
             self.value = float(v)
         else:
-            self._by_label[label] = float(v)
+            self._by_label[self._route(label)] = float(v)
 
     def set_max(self, v: float, label: Hashable = None) -> None:
         if label is None:
             self.value = max(self.value, float(v))
-        elif v > self._by_label.get(label, float("-inf")):
-            self._by_label[label] = float(v)
+        else:
+            label = self._route(label)
+            if v > self._by_label.get(label, float("-inf")):
+                self._by_label[label] = float(v)
 
     def view(self) -> Dict[Hashable, float]:
         return dict(self._by_label)
@@ -105,15 +150,18 @@ class Gauge:
     def reset(self) -> None:
         self.value = 0.0
         self._by_label.clear()
+        self.label_overflows = 0
 
     def summary(self) -> dict:
         out = {"type": "gauge", "value": self.value}
         if self._by_label:
             out["by_label"] = self.view()
+        if self.label_overflows:
+            out["label_overflows"] = self.label_overflows
         return out
 
 
-class Histogram:
+class Histogram(_LabelCap):
     """Streaming histogram over geometric buckets: observations land in
     ``O(log)`` (a bisect over fixed edges), quantiles interpolate
     inside the covering bucket, and no sample is ever stored.  The
@@ -126,10 +174,12 @@ class Histogram:
     path."""
 
     __slots__ = ("name", "_edges", "_counts", "count", "sum",
-                 "min", "max", "_lo", "_hi", "_growth", "_by_label")
+                 "min", "max", "_lo", "_hi", "_growth", "_by_label",
+                 "max_labels", "label_overflows", "_overflow_sink")
 
     def __init__(self, name: str, lo: float = 1e-6, hi: float = 1e4,
-                 growth: float = 1.07):
+                 growth: float = 1.07,
+                 max_labels: int = DEFAULT_MAX_LABELS):
         if not (0 < lo < hi) or growth <= 1.0:
             raise ValueError(f"bad histogram range ({lo}, {hi}, x{growth})")
         n = int(math.ceil(math.log(hi / lo) / math.log(growth)))
@@ -143,6 +193,9 @@ class Histogram:
         self.min = math.inf
         self.max = -math.inf
         self._by_label: Dict[Hashable, "Histogram"] = {}
+        self.max_labels = max_labels
+        self.label_overflows = 0
+        self._overflow_sink = None
 
     def observe(self, x: float, label: Hashable = None) -> None:
         x = float(x)
@@ -154,6 +207,7 @@ class Histogram:
         if x > self.max:
             self.max = x
         if label is not None:
+            label = self._route(label)
             child = self._by_label.get(label)
             if child is None:
                 child = self._by_label[label] = Histogram(
@@ -190,6 +244,7 @@ class Histogram:
         self.min = math.inf
         self.max = -math.inf
         self._by_label.clear()
+        self.label_overflows = 0
 
     def summary(self) -> dict:
         out = {
@@ -204,6 +259,8 @@ class Histogram:
         if self._by_label:
             out["by_label"] = {k: v.summary() for k, v in
                                self._by_label.items()}
+        if self.label_overflows:
+            out["label_overflows"] = self.label_overflows
         return out
 
 
@@ -212,13 +269,20 @@ class MetricsRegistry:
     per engine is the single read surface the stats line, the benchmark
     phases, and the SLO report all draw from."""
 
-    def __init__(self):
+    # Name of the warning counter that records every label fold, labeled
+    # by the saturated metric's name.
+    OVERFLOW_COUNTER = "metrics.label_overflow"
+
+    def __init__(self, max_labels: int = DEFAULT_MAX_LABELS):
         self._metrics: Dict[str, object] = {}
+        self.max_labels = max_labels
 
     def _get(self, name: str, kind, *args, **kw):
         m = self._metrics.get(name)
         if m is None:
             m = self._metrics[name] = kind(name, *args, **kw)
+            if name != self.OVERFLOW_COUNTER:
+                m._overflow_sink = self.counter(self.OVERFLOW_COUNTER)
         elif not isinstance(m, kind):
             raise TypeError(
                 f"metric {name!r} already registered as "
@@ -226,14 +290,19 @@ class MetricsRegistry:
         return m
 
     def counter(self, name: str) -> Counter:
-        return self._get(name, Counter)
+        # the overflow counter itself is never capped: it carries one
+        # label per *metric name*, which the registry already bounds
+        if name == self.OVERFLOW_COUNTER:
+            return self._get(name, Counter, 2 ** 30)
+        return self._get(name, Counter, self.max_labels)
 
     def gauge(self, name: str) -> Gauge:
-        return self._get(name, Gauge)
+        return self._get(name, Gauge, self.max_labels)
 
     def histogram(self, name: str, lo: float = 1e-6, hi: float = 1e4,
                   growth: float = 1.07) -> Histogram:
-        return self._get(name, Histogram, lo, hi, growth)
+        return self._get(name, Histogram, lo, hi, growth,
+                         self.max_labels)
 
     def get(self, name: str):
         return self._metrics.get(name)

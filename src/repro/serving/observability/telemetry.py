@@ -19,7 +19,9 @@ from __future__ import annotations
 from typing import List, Optional
 
 from . import trace as TR
+from .anomaly import AnomalyMonitor
 from .metrics import MetricsRegistry
+from .profiler import StepProfiler
 from .slo import DEFAULT_CLASS, SLOClass, SLOTracker
 from .trace import RequestTracer, TickTimeline
 
@@ -32,13 +34,23 @@ TRACE_KEEP_DEFAULT = 4096
 class Telemetry:
     def __init__(self, *, tracer: bool = True, timeline: bool = False,
                  slo_classes: Optional[List[SLOClass]] = None,
-                 trace_maxlen: Optional[int] = TRACE_KEEP_DEFAULT):
+                 trace_maxlen: Optional[int] = TRACE_KEEP_DEFAULT,
+                 profiler: bool = True, anomaly: bool = True):
         self.registry = MetricsRegistry()
         self.tracer: Optional[RequestTracer] = \
             RequestTracer(maxlen=trace_maxlen) if tracer else None
         self.timeline: Optional[TickTimeline] = \
             TickTimeline() if timeline else None
         self.slo = SLOTracker(slo_classes)
+        self.profiler: Optional[StepProfiler] = \
+            StepProfiler() if profiler else None
+        self.anomaly: Optional[AnomalyMonitor] = \
+            AnomalyMonitor() if anomaly else None
+        if self.profiler is not None:
+            self.profiler.on_compile = self._on_compile_event
+        if self.anomaly is not None:
+            self.anomaly.on_alert = self._on_alert
+        self.engine_config: dict = {}
         # streaming latency distributions, labeled by SLO class; exact
         # sample percentiles (benchmarks) still come from request
         # timestamps via metrics.percentile — same ground truth, the
@@ -50,6 +62,40 @@ class Telemetry:
         self.tick_s = self.registry.histogram("tick_s")
         self.tokens_per_tick = self.registry.histogram(
             "tokens_per_tick", lo=0.5, hi=65536.0, growth=1.15)
+
+    # -- wiring (engine construction time) -----------------------------------
+    def set_engine_config(self, **cfg) -> None:
+        """Stamp the engine's tuning knobs (kv_dtype, pages_per_step,
+        speculate_k, bank size, ...) into the trace metadata block and
+        the metrics snapshot — two exported traces from differently
+        configured engines must be tellable apart without filenames."""
+        self.engine_config.update(cfg)
+        if self.timeline is not None:
+            self.timeline.set_metadata(**cfg)
+
+    def _on_compile_event(self, ev) -> None:
+        """Profiler observed a jit compile: first-class timeline span,
+        registry counter, and (post-warmup) a recompile alert."""
+        if self.timeline is not None:
+            self.timeline.span("jit_compile", ev.t0, ev.t0 + ev.dur_s,
+                               variant=ev.variant, post_warm=ev.post_warm)
+        self.registry.counter("compiles").inc(
+            label="post_warm" if ev.post_warm else "warmup")
+        if self.anomaly is not None:
+            self.anomaly.on_compile(ev.name, ev.variant, ev.dur_s,
+                                    ev.post_warm)
+
+    def _on_alert(self, alert) -> None:
+        """Anomaly fired: structured instant in the trace export plus a
+        per-kind counter — the alert is visible in Perfetto at the tick
+        it fired, in ``Engine.metrics()``, and in the exit report."""
+        if self.timeline is not None:
+            self.timeline.instant(
+                f"alert:{alert.kind}", tick=alert.tick,
+                severity=alert.severity, message=alert.message,
+                **{k: v for k, v in alert.data.items()
+                   if isinstance(v, (int, float, str, bool))})
+        self.registry.counter("alerts").inc(label=alert.kind)
 
     # -- request lifecycle hooks (engine clock) ------------------------------
     def on_submit(self, req, t: float) -> None:
@@ -82,6 +128,8 @@ class Telemetry:
         if self.tracer is not None:
             self.tracer.record(req.id, TR.SPECULATE, t, drafted=drafted,
                                accepted=accepted, n=committed)
+        if self.anomaly is not None:
+            self.anomaly.on_speculate(drafted, accepted, t)
 
     def on_preempt(self, req, t: float) -> None:
         if self.tracer is not None:
@@ -115,18 +163,47 @@ class Telemetry:
             tr = self.tracer.get(req.id)
             if tr is not None and tr.num_preemptions:
                 self.preempt_wait_s.observe(tr.preempt_wait_s, label=cls)
-        self.slo.observe(cls, ttft, lat)
+        ok = self.slo.observe(cls, ttft, lat)
+        if self.anomaly is not None:
+            self.anomaly.on_finish(cls, ok, t)
 
     # -- per-tick hook (perf_counter clock) ----------------------------------
     def on_tick(self, tick: int, marks, slot_events=(), extra_spans=(),
-                counters: Optional[dict] = None, tokens: int = 0) -> None:
-        self.tick_s.observe(marks[-1] - marks[0])
+                counters: Optional[dict] = None, tokens: int = 0,
+                t: float = 0.0, used_pages: Optional[int] = None,
+                live_pages=None, kv_read_bytes: int = 0) -> None:
+        """``t`` is the engine-clock tick time (alerts are stamped with
+        it); ``used_pages``/``live_pages`` feed the pool-leak watchdog
+        (``live_pages`` a zero-arg callable, evaluated only when due);
+        ``kv_read_bytes`` is the tick's estimated KV traffic for the
+        roofline gauges."""
+        dur = marks[-1] - marks[0]
+        self.tick_s.observe(dur)
         if tokens:
             self.tokens_per_tick.observe(tokens)
         if self.timeline is not None:
             self.timeline.add_tick(tick, marks, slot_events=slot_events,
                                    extra_spans=extra_spans,
                                    counters=counters)
+        if self.anomaly is not None:
+            self.anomaly.on_tick(tick, t, dur, used_pages=used_pages,
+                                 live_pages=live_pages)
+        # per-tick roofline gauges: what the device achieved this tick
+        # vs. the kernel_bench reference rates (when set via the
+        # profiler); device_step phase time is marks[3] - marks[2]
+        if tokens and self.profiler is not None:
+            dev = max(marks[3] - marks[2], 1e-9)
+            r = self.registry
+            r.gauge("achieved_tok_s").set(tokens / dev)
+            if kv_read_bytes:
+                r.gauge("achieved_kv_gb_s").set(kv_read_bytes / dev / 1e9)
+            peaks = self.profiler.peaks
+            if peaks.get("tok_s"):
+                r.gauge("roofline_tok_frac").set(
+                    tokens / dev / peaks["tok_s"])
+            if peaks.get("kv_gb_s") and kv_read_bytes:
+                r.gauge("roofline_kv_frac").set(
+                    kv_read_bytes / dev / 1e9 / peaks["kv_gb_s"])
 
     # -- read side -----------------------------------------------------------
     def collect(self, engine) -> MetricsRegistry:
@@ -171,6 +248,15 @@ class Telemetry:
                 r.gauge(f"spec_{name}").set(v)
         r.gauge("preemptions").set(engine.preemptions)
         r.gauge("cache_evictions").set(engine.cache_evictions)
+        if self.profiler is not None:
+            r.gauge("compiles_total").set(self.profiler.compiles_total)
+            r.gauge("compiles_post_warm").set(
+                self.profiler.compiles_post_warm)
+        if self.anomaly is not None:
+            g = r.gauge("anomaly_alerts")
+            g.set(sum(self.anomaly.counts.values()))
+            for kind, n in self.anomaly.counts.items():
+                g.set(n, label=kind)
         return r
 
     def snapshot(self, engine) -> dict:
@@ -212,6 +298,19 @@ class Telemetry:
             out["trace_events"] = self.tracer.num_events
         if self.timeline is not None:
             out["timeline_events"] = self.timeline.num_events
+        if self.engine_config:
+            out["config"] = dict(self.engine_config)
+        if self.profiler is not None:
+            # compute=False: never pay an AOT compile on the stats-line
+            # path — costs appear once something (exit report, regression
+            # harness) has called profiler.cost_report()
+            out["profiler"] = {
+                "compiles_total": self.profiler.compiles_total,
+                "compiles_post_warm": self.profiler.compiles_post_warm,
+                "cost": self.profiler.cost_report(compute=False),
+            }
+        if self.anomaly is not None:
+            out["alerts"] = self.anomaly.report()
         return out
 
     def reset(self) -> None:
@@ -224,3 +323,10 @@ class Telemetry:
         if self.timeline is not None:
             self.timeline.clear()
         self.slo.reset()
+        if self.anomaly is not None:
+            self.anomaly.reset()
+        if self.profiler is not None:
+            # a reset IS the warmup boundary: compiles before it were
+            # expected, compiles after it alert as regressions
+            self.profiler.reset()
+            self.profiler.mark_warm()

@@ -207,7 +207,16 @@ class TickTimeline:
         self._spans: List[Tuple[str, int, float, float, dict]] = []
         self._instants: List[Tuple[str, float, dict]] = []
         self._counters: List[Tuple[str, float, dict]] = []
+        self._metadata: dict = {}
         self.ticks = 0
+
+    def set_metadata(self, **kv) -> None:
+        """Stamp run-level configuration (kv_dtype, pages_per_step,
+        speculate_k, ...) into the export: it lands both in
+        ``otherData`` and as an ``engine_config`` metadata event, so two
+        traces from differently-tuned engines are distinguishable inside
+        Perfetto, not just by filename."""
+        self._metadata.update(kv)
 
     # -- recording -----------------------------------------------------------
     def add_tick(self, tick: int, marks: Sequence[float],
@@ -232,6 +241,12 @@ class TickTimeline:
         if counters:
             self._counters.append(("engine", marks[0], dict(counters)))
         self.ticks += 1
+
+    def span(self, name: str, t0: float, t1: float,
+             tid: int = _ENGINE_TID, **args) -> None:
+        """One standalone wall span on the given track — compile events
+        and other out-of-tick work the phase marks don't cover."""
+        self._spans.append((name, tid, t0, t1, args))
 
     def instant(self, name: str, t: Optional[float] = None,
                 **args) -> None:
@@ -261,6 +276,10 @@ class TickTimeline:
             "ph": "M", "pid": _PID, "tid": _ENGINE_TID,
             "name": "process_name", "args": {"name": "horn-serving-engine"},
         }]
+        if self._metadata:
+            ev.append({"ph": "M", "pid": _PID, "tid": _ENGINE_TID,
+                       "name": "engine_config",
+                       "args": dict(self._metadata)})
         for tid in sorted(set(tids) | {_ENGINE_TID}):
             ev.append({"ph": "M", "pid": _PID, "tid": tid,
                        "name": "thread_name",
@@ -278,9 +297,12 @@ class TickTimeline:
         for name, t, values in self._counters:
             ev.append({"ph": "C", "pid": _PID, "tid": _ENGINE_TID,
                        "name": name, "ts": us(t), "args": values})
+        other = {"source": "repro.serving.observability"}
+        if self._metadata:
+            other["engine_config"] = dict(self._metadata)
         return {"traceEvents": ev,
                 "displayTimeUnit": "ms",
-                "otherData": {"source": "repro.serving.observability"}}
+                "otherData": other}
 
     def export(self, path: str) -> int:
         """Write the Chrome trace to ``path``; returns the event count."""

@@ -108,7 +108,9 @@ def test_registry_get_or_create_and_kind_mismatch():
     r.gauge("g").set_max(2.0)
     r.gauge("g").set_max(1.0)                    # peak keeps the max
     assert r.get("g").value == 2.0
-    assert r.names() == ["g", "n"]
+    # the label-overflow warning counter is auto-registered as the sink
+    # every capped metric reports folds into
+    assert r.names() == ["g", MetricsRegistry.OVERFLOW_COUNTER, "n"]
     snap = r.snapshot()
     assert snap["n"]["type"] == "counter"
     r.reset()

@@ -1,0 +1,292 @@
+"""Traffic-trace record/replay, step profiler, and regression-gate
+tests.
+
+The acceptance-critical properties pinned here:
+  * a trace file round-trips exactly (records + meta) and malformed
+    headers are rejected loudly;
+  * replaying the same trace twice on one engine is byte-identical:
+    same token-stream SHA-256 AND identical virtual-clock TTFT/latency
+    lists — and a fresh engine over the same weights reproduces the
+    digest;
+  * the step profiler attributes compiles to shape-bucket variants,
+    reports ``cost_analysis`` FLOPs/bytes per variant, and flags a
+    post-warmup recompile (the injected fault) as a ``recompile``
+    anomaly alert that lands in the schema-validated Chrome trace
+    export;
+  * the engine config stamp (kv_dtype, pages_per_step, speculate_k,
+    bank size, ...) reaches ``Engine.metrics()`` and the trace
+    metadata;
+  * the regression gate logic fails on a throughput collapse, a
+    determinism break, and a post-warm compile — and passes a healthy
+    run.
+"""
+import json
+import os
+import sys
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs.base import get_model_config, reduced
+from repro.models import api
+from repro.serving import Engine, EngineConfig
+from repro.serving.observability import (RECOMPILE, Telemetry, TraceRecord,
+                                         TraceRecorder, load_trace, replay,
+                                         save_trace, stream_digest,
+                                         validate_chrome_trace)
+
+sys.path.insert(0, os.path.join(os.path.dirname(os.path.dirname(
+    os.path.abspath(__file__))), "benchmarks"))
+import regression  # noqa: E402  (benchmarks/ is not a package)
+
+
+@pytest.fixture(scope="module")
+def tiny():
+    cfg = reduced(get_model_config("qwen3-1.7b"), dtype="float32")
+    return cfg, api.model_init(jax.random.key(0), cfg)
+
+
+def make_engine(cfg, params, **over):
+    kw = dict(num_slots=3, num_pages=64, page_size=8, max_prompt_len=32,
+              max_new_tokens=6, token_budget=32, policy="on_demand",
+              kv_dtype="float32", compute_dtype="float32")
+    kw.update(over)
+    return Engine(cfg, params, EngineConfig(**kw),
+                  telemetry=Telemetry(timeline=True))
+
+
+def small_trace(vocab, n=6, seed=9):
+    rng = np.random.default_rng(seed)
+    return [TraceRecord(arrival_s=0.004 * i,
+                        prompt=list(rng.integers(1, vocab,
+                                                 int(rng.integers(4, 12)))),
+                        max_new_tokens=int(rng.integers(3, 7)))
+            for i in range(n)]
+
+
+# ---------------------------------------------------------------------------
+# trace files
+# ---------------------------------------------------------------------------
+def test_trace_file_round_trip(tmp_path):
+    rec = TraceRecorder(meta={"arch": "qwen3-1.7b", "note": "unit"})
+    rec.add(0.25, [3, 1, 4], 5, slo_class="interactive", ensemble="mean",
+            session="s0")
+    rec.add(0.125, [2, 7], 3)
+    path = tmp_path / "t.jsonl"
+    assert rec.save(str(path)) == 2
+    records, meta = load_trace(str(path))
+    assert meta == {"arch": "qwen3-1.7b", "note": "unit"}
+    # sorted by arrival on save
+    assert [r.arrival_s for r in records] == [0.125, 0.25]
+    assert records[1].prompt == [3, 1, 4]
+    assert records[1].slo_class == "interactive"
+    assert records[1].ensemble == "mean" and records[1].session == "s0"
+    assert records[0].slo_class == "default" and records[0].ensemble is None
+
+
+def test_trace_file_rejects_malformed(tmp_path):
+    p = tmp_path / "bad.jsonl"
+    p.write_text("")
+    with pytest.raises(ValueError, match="empty"):
+        load_trace(str(p))
+    p.write_text('{"schema": "something-else", "version": 1}\n')
+    with pytest.raises(ValueError, match="schema"):
+        load_trace(str(p))
+    p.write_text('{"schema": "horn-serving-trace", "version": 99}\n')
+    with pytest.raises(ValueError, match="newer"):
+        load_trace(str(p))
+    p.write_text('{"schema": "horn-serving-trace", "version": 1}\n')
+    with pytest.raises(ValueError, match="no records"):
+        load_trace(str(p))
+
+
+def test_stream_digest_is_order_canonical():
+    a = stream_digest([(0, [1, 2]), (1, [3])])
+    assert a == stream_digest([(0, [1, 2]), (1, [3])])
+    assert a != stream_digest([(0, [1, 2]), (1, [4])])
+    assert a != stream_digest([(1, [1, 2]), (0, [3])])
+
+
+# ---------------------------------------------------------------------------
+# record -> replay determinism
+# ---------------------------------------------------------------------------
+def test_replay_byte_identical_across_runs_and_engines(tiny):
+    cfg, params = tiny
+    records = small_trace(cfg.vocab_size)
+    engine = make_engine(cfg, params)
+    a = replay(engine, records)
+    b = replay(engine, records)
+    assert a.requests == b.requests == len(records)
+    assert a.generated_tokens == b.generated_tokens > 0
+    assert len(a.streams) == len(records)
+    assert all(toks for _, toks in a.streams)
+    # THE acceptance criterion: byte-identical greedy streams and
+    # exactly reproducible virtual-clock TTFT/latency
+    assert a.token_digest == b.token_digest
+    assert a.ttft_s == b.ttft_s and a.latency_s == b.latency_s
+    assert a.ticks == b.ticks and a.virtual_s == b.virtual_s
+    # a FRESH engine over the same weights reproduces the digest too
+    c = replay(make_engine(cfg, params), records)
+    assert c.token_digest == a.token_digest
+
+
+def test_replay_summary_uses_pooled_p10_not_wall(tiny):
+    cfg, params = tiny
+    engine = make_engine(cfg, params)
+    records = small_trace(cfg.vocab_size)
+    res = replay(engine, records)
+    s = res.summary()
+    assert s["tick_p10_wall_s"] == round(sorted(res.tick_wall_s)[
+        int(0.10 * (len(res.tick_wall_s) - 1))], 6)
+    assert s["decode_tok_s_p10"] == pytest.approx(
+        res.generated_tokens / (s["tick_p10_wall_s"] * res.ticks), rel=1e-3)
+    assert s["ttft_p99_s"] is not None and s["token_digest"]
+
+
+# ---------------------------------------------------------------------------
+# profiler: compile attribution, cost analysis, induced-fault alert
+# ---------------------------------------------------------------------------
+def test_profiler_attributes_compiles_and_costs(tiny):
+    cfg, params = tiny
+    engine = make_engine(cfg, params)
+    records = small_trace(cfg.vocab_size)
+    replay(engine, records)
+    prof = engine.obs.profiler
+    assert prof.compiles_total > 0                 # cold replay compiles
+    assert prof.compiles_post_warm == 0            # ...but none post-warm
+    cost = prof.cost_report()
+    assert cost                                    # one entry per variant
+    for label, entry in cost.items():
+        assert label.startswith("unified_step[C=")
+        assert entry["calls"] > 0
+        assert entry["flops"] > 0 and entry["bytes_accessed"] > 0
+
+
+def test_induced_recompile_alert_lands_in_trace_export(tiny, tmp_path):
+    cfg, params = tiny
+    engine = make_engine(cfg, params)
+    records = small_trace(cfg.vocab_size)
+    # warm until a replay mints no new compile cell
+    for _ in range(4):
+        replay(engine, records)
+        if engine.obs.profiler.compiles_total == 0:
+            break
+    assert engine.obs.profiler.compiles_total == 0
+    # the induced fault: flush the jit caches mid-stream
+    jax.clear_caches()
+    res = replay(engine, records, reset=False)
+    prof = engine.obs.profiler
+    assert prof.compiles_post_warm > 0
+    kinds = {a["kind"] for a in res.alerts}
+    assert RECOMPILE in kinds
+    # the alert is in the schema-validated Chrome export, alongside the
+    # engine-config metadata stamp
+    path = tmp_path / "fault.trace.json"
+    engine.obs.timeline.export(str(path))
+    doc = json.loads(path.read_text())
+    validate_chrome_trace(doc)
+    alert_events = [e for e in doc["traceEvents"]
+                    if e.get("name") == f"alert:{RECOMPILE}"]
+    assert alert_events and alert_events[0]["ph"] == "i"
+    assert "post-warmup recompile" in alert_events[0]["args"]["message"]
+    compile_spans = [e for e in doc["traceEvents"]
+                     if e.get("name") == "jit_compile"]
+    assert compile_spans
+    assert doc["otherData"]["engine_config"]["kv_dtype"] == "float32"
+
+
+def test_engine_config_stamp_reaches_metrics_and_trace(tiny):
+    cfg, params = tiny
+    engine = make_engine(cfg, params, speculate_k=0)
+    stamp = engine.obs.engine_config
+    for key in ("kv_dtype", "compute_dtype", "pages_per_step",
+                "speculate_k", "bank_size", "num_slots", "num_pages",
+                "page_size", "token_budget", "policy"):
+        assert key in stamp, key
+    assert stamp["kv_dtype"] == "float32" and stamp["speculate_k"] == 0
+    m = engine.metrics()
+    assert m["config"] == stamp
+    assert m["profiler"]["compiles_total"] == 0
+    doc = engine.obs.timeline.to_chrome()
+    meta_events = [e for e in doc["traceEvents"]
+                   if e.get("ph") == "M"
+                   and e.get("name") == "engine_config"]
+    assert meta_events and meta_events[0]["args"]["kv_dtype"] == "float32"
+
+
+# ---------------------------------------------------------------------------
+# regression-gate logic (the full harness runs in CI, not tier-1)
+# ---------------------------------------------------------------------------
+def _healthy_result():
+    return {
+        "summary": {"token_digest": "abc", "decode_tok_s_p10": 1000.0,
+                    "ttft_p99_s": 0.020, "latency_p99_s": 0.080,
+                    "accept_rate": 0.6, "ticks": 50,
+                    "generated_tokens": 200},
+        "determinism": {"digest_a": "abc", "digest_b": "abc",
+                        "byte_identical": True, "ttft_identical": True,
+                        "latency_identical": True},
+        "post_warm_compiles": 0,
+    }
+
+
+BASE = {"token_digest": "abc", "decode_tok_s_p10": 1000.0,
+        "ttft_p99_s": 0.020, "accept_rate": 0.6}
+
+
+def test_gate_passes_healthy_run():
+    assert regression.evaluate_gates(_healthy_result(), BASE,
+                                     regression.GATES) == []
+
+
+def test_gate_fails_throughput_collapse_and_post_warm_compile():
+    res = _healthy_result()
+    res["summary"]["decode_tok_s_p10"] = 10.0      # the injected slowdown
+    res["post_warm_compiles"] = 54
+    fails = regression.evaluate_gates(res, BASE, regression.GATES)
+    assert any("tok/s" in f for f in fails)
+    assert any("post-warmup" in f for f in fails)
+
+
+def test_gate_fails_determinism_break_and_ttft_regression():
+    res = _healthy_result()
+    res["determinism"]["digest_b"] = "zzz"
+    res["determinism"]["byte_identical"] = False
+    res["summary"]["ttft_p99_s"] = 0.025           # > 1.10x baseline
+    fails = regression.evaluate_gates(res, BASE, regression.GATES)
+    assert any("differ" in f for f in fails)
+    assert any("TTFT" in f for f in fails)
+
+
+def test_gate_accept_drop_fails_and_digest_drift_only_warns():
+    res = _healthy_result()
+    res["summary"]["accept_rate"] = 0.4
+    res["summary"]["token_digest"] = "drifted"
+    fails = regression.evaluate_gates(res, BASE, regression.GATES)
+    assert any("accept rate" in f for f in fails)
+    assert not any("digest" in f for f in fails)   # drift warns, not fails
+    assert any("digest" in w for w in res["warnings"])
+
+
+def test_baseline_entry_is_the_committed_shape():
+    entry = regression.baseline_entry(_healthy_result())
+    assert entry == {"token_digest": "abc", "decode_tok_s_p10": 1000.0,
+                     "ttft_p99_s": 0.020, "latency_p99_s": 0.080,
+                     "accept_rate": 0.6, "ticks": 50,
+                     "generated_tokens": 200}
+
+
+def test_pinned_traces_are_loadable_and_self_describing():
+    for name in regression.TRACE_SPECS:
+        path = os.path.join(regression.TRACES_DIR, f"{name}.jsonl")
+        records, meta = load_trace(path)
+        assert records, name
+        assert meta["name"] == name
+        # the meta must carry everything build_engine needs
+        for key in ("arch", "slots", "pages", "page_size", "max_prompt",
+                    "gen", "budget", "prefix_cache", "speculate_k",
+                    "kv_dtype"):
+            assert key in meta, (name, key)
+        assert all(r.max_new_tokens <= meta["gen"] for r in records)
+        assert all(len(r.prompt) <= meta["max_prompt"] for r in records)
