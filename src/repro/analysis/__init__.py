@@ -1,0 +1,20 @@
+"""hornlint: static-analysis passes + runtime sanitizers for the serving
+stack's unwritten contracts.
+
+Four AST pass families (see the sibling modules):
+
+* ``retrace``          — jit recompile/retrace hazards (HL1xx)
+* ``host_sync``        — host-device sync leaks in hot paths (HL2xx)
+* ``pallas_contracts`` — Pallas grid/BlockSpec/index_map contracts (HL3xx)
+* ``pool_lifetime``    — PagePool alloc/release pairing on all paths (HL4xx)
+
+CLI: ``python -m repro.analysis.hornlint [paths...]``.  Findings are
+diffed against a committed baseline (``analysis/baseline.json``) so CI
+fails only on *new* violations.  Runtime counterpart: ``sanitize.py``
+(wired behind ``serve.py --sanitize``).
+"""
+from repro.analysis.core import (Finding, lint_paths, lint_source,
+                                 load_baseline, write_baseline)
+
+__all__ = ["Finding", "lint_paths", "lint_source", "load_baseline",
+           "write_baseline"]

@@ -1,0 +1,250 @@
+"""HL2xx — host-device sync leaks in hot paths.
+
+A device value (result of the engine's jitted step calls or any
+``jnp.``/``jax.`` array op) pulled to the host blocks the tick loop on a
+transfer.  The engine has exactly two *deliberate* tick-forcing syncs
+(commit path) plus the draft proposer's pull — those carry
+``# hornlint: sync-ok``; everything else is a leak.
+
+Analysis: per-function forward taint.  Sources taint names bound from
+
+* calls through known device-step attributes (``self._step``,
+  ``self._page_copy``) and curried steps (``self._step_for(k)(...)``),
+* ``jnp.*`` / ``jax.*`` calls (minus host-transfer and metadata helpers),
+
+propagated through assignments, tuple unpacking, arithmetic, subscripts
+and unresolved calls that receive a tainted argument.  Taint dies on
+rebinding from an untainted expression and on shape/dtype/len access
+(static under trace).  Sinks:
+
+* HL201 ``sync-host-pull``: ``np.asarray``/``np.array``/``jax.device_get``
+  /``float``/``int``/``bool`` over a tainted value, ``.item()``,
+  ``.tolist()``, ``.block_until_ready()``, or storing a tainted value
+  into a subscript of an untainted (host) array.
+* HL202 ``sync-in-loop``: the same sink lexically inside a for/while —
+  a per-iteration transfer, the expensive variant.
+
+Scope: only functions in the built-in hot-scope list below or marked
+``# hornlint: hot-path`` on the ``def`` line are analyzed; setup and
+reporting code is free to pull results.
+"""
+from __future__ import annotations
+
+import ast
+from typing import Dict, List, Set
+
+from repro.analysis.core import Finding, PassContext, dotted_name
+
+RULES = {
+    "HL201": "host pull of a device value in a hot path "
+             "(annotate deliberate syncs with '# hornlint: sync-ok')",
+    "HL202": "host pull of a device value inside a loop in a hot path",
+}
+
+# (path suffix, qualname prefixes) — functions on the engine tick path.
+HOT_SCOPES = (
+    ("serving/engine.py",
+     ("Engine.step", "Engine._commit_spec", "Engine._flush_copies",
+      "Engine._plan_tick", "Engine._try_plan", "Engine._prepare_entry_write",
+      "Engine._sync_block_tables", "Engine._release", "Engine._sample_peak")),
+    ("serving/speculative.py",
+     ("DraftRunner.propose", "DraftRunner.commit", "DraftRunner.drop")),
+    ("serving/block_table.py", ("BlockTableMirror.sync",)),
+)
+
+DEVICE_CALL_ATTRS = {"_step", "_page_copy", "_draft_step"}
+CURRIED_STEP_ATTRS = {"_step_for"}
+# jnp/jax helpers whose results are *not* device arrays (or are the sink).
+_JAX_NON_DEVICE = {"jnp.dtype", "jnp.shape", "jnp.ndim", "jnp.result_type",
+                   "jax.device_get", "jax.eval_shape", "jax.ShapeDtypeStruct",
+                   "jax.jit", "jax.named_scope", "jax.tree_util",
+                   "jax.random.PRNGKey"}
+_SINK_CALLS = {"np.asarray", "np.array", "numpy.asarray", "numpy.array",
+               "jax.device_get", "float", "int", "bool"}
+_SINK_METHODS = {"item", "tolist", "block_until_ready", "__array__"}
+_TAINT_KILL_ATTRS = {"shape", "ndim", "dtype", "size"}
+
+
+def _is_hot(path: str, qualname: str) -> bool:
+    for suffix, prefixes in HOT_SCOPES:
+        if path.endswith(suffix):
+            return any(qualname == p or qualname.startswith(p + ".")
+                       for p in prefixes)
+    return False
+
+
+class _Taint(ast.NodeVisitor):
+    """Single forward pass over one function body, statement order."""
+
+    def __init__(self, fn: ast.AST, path: str, qualname: str):
+        self.fn = fn
+        self.path = path
+        self.qualname = qualname
+        self.tainted: Set[str] = set()
+        self.findings: List[Finding] = []
+        self.loop_depth = 0
+
+    # ---------------- expression taint ----------------
+    def is_tainted(self, node: ast.AST) -> bool:
+        if isinstance(node, ast.Name):
+            return node.id in self.tainted
+        if isinstance(node, ast.Attribute):
+            if node.attr in _TAINT_KILL_ATTRS:
+                return False
+            return self.is_tainted(node.value)
+        if isinstance(node, ast.Subscript):
+            return self.is_tainted(node.value)
+        if isinstance(node, (ast.BinOp,)):
+            return self.is_tainted(node.left) or self.is_tainted(node.right)
+        if isinstance(node, ast.UnaryOp):
+            return self.is_tainted(node.operand)
+        if isinstance(node, (ast.Tuple, ast.List)):
+            return any(self.is_tainted(e) for e in node.elts)
+        if isinstance(node, ast.IfExp):
+            return self.is_tainted(node.body) or self.is_tainted(node.orelse)
+        if isinstance(node, ast.Starred):
+            return self.is_tainted(node.value)
+        if isinstance(node, ast.Call):
+            return self._call_taints(node)
+        if isinstance(node, ast.Compare):
+            return False        # bool result; comparison itself may sync but
+        return False            # flagging `==` would drown real findings
+
+    def _call_taints(self, call: ast.Call) -> bool:
+        name = dotted_name(call.func)
+        # a sink's result lives on the host: the pull is flagged where it
+        # happens, downstream use of the result is free
+        if name in _SINK_CALLS:
+            return False
+        # device-step calls: self._step(...), self._page_copy(...)
+        if isinstance(call.func, ast.Attribute) \
+                and call.func.attr in DEVICE_CALL_ATTRS:
+            return True
+        # curried: self._step_for(k)(...)
+        if isinstance(call.func, ast.Call) \
+                and isinstance(call.func.func, ast.Attribute) \
+                and call.func.func.attr in CURRIED_STEP_ATTRS:
+            return True
+        if name.startswith(("jnp.", "jax.")):
+            return name not in _JAX_NON_DEVICE
+        if name in ("len", "isinstance", "type", "range", "enumerate",
+                    "zip", "min", "max", "sorted", "str"):
+            return False
+        # method call on a device value (x.sum(), x.astype(...)) stays
+        # on device (the *blocking* methods are sinks, handled above)
+        if isinstance(call.func, ast.Attribute) \
+                and call.func.attr not in _SINK_METHODS \
+                and self.is_tainted(call.func.value):
+            return True
+        # unresolved call: conservatively tainted if any argument is
+        args = list(call.args) + [k.value for k in call.keywords]
+        return any(self.is_tainted(a) for a in args)
+
+    # ---------------- sinks ----------------
+    def _emit(self, node: ast.AST, what: str) -> None:
+        rule = "HL202" if self.loop_depth else "HL201"
+        msg = (f"{what} forces a device->host sync"
+               + (" every loop iteration" if self.loop_depth else ""))
+        self.findings.append(Finding(rule, self.path, node.lineno,
+                                     node.col_offset, msg, self.qualname))
+
+    def _check_sink(self, call: ast.Call) -> bool:
+        """True if this call is a sync sink over tainted input."""
+        name = dotted_name(call.func)
+        if name in _SINK_CALLS and call.args \
+                and self.is_tainted(call.args[0]):
+            self._emit(call, f"{name}() on a device value")
+            return True
+        if isinstance(call.func, ast.Attribute) \
+                and call.func.attr in _SINK_METHODS \
+                and self.is_tainted(call.func.value):
+            self._emit(call, f".{call.func.attr}() on a device value")
+            return True
+        return False
+
+    def visit_Call(self, node: ast.Call) -> None:
+        self._check_sink(node)
+        self.generic_visit(node)
+
+    # ---------------- statements / binding ----------------
+    def _bind(self, target: ast.AST, tainted: bool) -> None:
+        if isinstance(target, ast.Name):
+            (self.tainted.add if tainted
+             else self.tainted.discard)(target.id)
+        elif isinstance(target, (ast.Tuple, ast.List)):
+            for e in target.elts:
+                self._bind(e, tainted)
+        elif isinstance(target, ast.Starred):
+            self._bind(target.value, tainted)
+        elif isinstance(target, ast.Subscript):
+            # storing a tainted value into a subscript of an untainted
+            # object writes device data into a host array: a sync sink
+            if tainted and not self.is_tainted(target.value):
+                self._emit(target, "store of a device value into a host "
+                                   "array slice")
+
+    def visit_Assign(self, node: ast.Assign) -> None:
+        self.visit(node.value)
+        t = self.is_tainted(node.value)
+        for tgt in node.targets:
+            if isinstance(tgt, (ast.Tuple, ast.List)) \
+                    and isinstance(node.value, (ast.Tuple, ast.List)) \
+                    and len(tgt.elts) == len(node.value.elts):
+                for e, v in zip(tgt.elts, node.value.elts):
+                    self._bind(e, self.is_tainted(v))
+            else:
+                self._bind(tgt, t)
+
+    def visit_AugAssign(self, node: ast.AugAssign) -> None:
+        self.visit(node.value)
+        if self.is_tainted(node.value):
+            self._bind(node.target, True)
+
+    def visit_AnnAssign(self, node: ast.AnnAssign) -> None:
+        if node.value is not None:
+            self.visit(node.value)
+            self._bind(node.target, self.is_tainted(node.value))
+
+    def visit_For(self, node: ast.For) -> None:
+        self.visit(node.iter)
+        self._bind(node.target, self.is_tainted(node.iter))
+        self.loop_depth += 1
+        for stmt in node.body:
+            self.visit(stmt)
+        self.loop_depth -= 1
+        for stmt in node.orelse:
+            self.visit(stmt)
+
+    def visit_While(self, node: ast.While) -> None:
+        self.visit(node.test)
+        self.loop_depth += 1
+        for stmt in node.body:
+            self.visit(stmt)
+        self.loop_depth -= 1
+        for stmt in node.orelse:
+            self.visit(stmt)
+
+    # nested defs/lambdas get their own scope decision — skip here
+    def visit_FunctionDef(self, node): pass
+    def visit_AsyncFunctionDef(self, node): pass
+    def visit_Lambda(self, node): pass
+
+
+def run(tree: ast.AST, src: str, path: str, ctx: PassContext) -> List[Finding]:
+    if not (ctx.enabled("HL201") or ctx.enabled("HL202")):
+        return []
+    from repro.analysis.core import qualname_map
+    findings: List[Finding] = []
+    for node, qual in qualname_map(tree).items():
+        if not isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            continue
+        marked = any(ln in ctx.suppressions.hot_path
+                     for ln in range(node.lineno,
+                                     node.body[0].lineno + 1))
+        if not (marked or _is_hot(path, qual)):
+            continue
+        t = _Taint(node, path, qual)
+        for stmt in node.body:
+            t.visit(stmt)
+        findings.extend(f for f in t.findings if ctx.enabled(f.rule))
+    return findings

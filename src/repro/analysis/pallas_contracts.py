@@ -1,0 +1,354 @@
+"""HL3xx — Pallas kernel contracts for every ``pl.pallas_call``.
+
+* HL301 ``dim-semantics-rank``: ``dimension_semantics`` tuple length must
+  equal the grid rank — a silent mismatch misassigns megacore partitioning.
+* HL302 ``accumulator-parallel``: a grid dim that carries accumulator
+  state across steps (detected from the ``pl.when(program_id(k) == 0)``
+  scratch-init idiom) must be declared ``"arbitrary"`` — ``"parallel"``
+  lets the compiler split the carry across cores; a kernel with carried
+  scratch and *no* ``dimension_semantics`` at all gets the same finding.
+* HL303 ``index-map-arity``: every ``BlockSpec``/grid-spec ``index_map``
+  must take exactly grid-rank required positional args (scalar-prefetch
+  ``*refs`` tails are fine; defaulted extras are closure captures).
+* HL304 ``null-page-clamp``: block-table gathers inside index maps must
+  clamp the page index into the table and select the null page for dead
+  steps (``jnp.where(live, bt[...], 0)``) — unclamped gathers read out
+  of bounds on the last partial page window (the PR 7 rule).
+
+The pass resolves ``grid=``/``grid_spec=`` through local and module-level
+constant assignments (``DIM_SEMANTICS = (...)`` style) before checking.
+"""
+from __future__ import annotations
+
+import ast
+from typing import Dict, List, Optional
+
+from repro.analysis.core import (Finding, PassContext, dotted_name,
+                                 enclosing_function_ranges, qualname_at)
+
+RULES = {
+    "HL301": "dimension_semantics length must match pallas grid rank",
+    "HL302": "accumulator-carry grid dim must not be 'parallel' (declare "
+             "dimension_semantics with 'arbitrary' for the carry dim)",
+    "HL303": "index_map arity must match pallas grid rank",
+    "HL304": "block-table gather in an index_map must clamp to the null "
+             "page for dead grid steps",
+}
+
+_BT_NAMES = {"bt", "block_table", "block_tables", "btab"}
+
+
+def _kw(call: ast.Call, name: str) -> Optional[ast.AST]:
+    for k in call.keywords:
+        if k.arg == name:
+            return k.value
+    return None
+
+
+class _ModuleConstants:
+    """name -> value AST for simple module- and function-local assigns."""
+
+    def __init__(self, tree: ast.AST):
+        self.module: Dict[str, ast.AST] = {}
+        for stmt in tree.body:
+            if isinstance(stmt, ast.Assign) and len(stmt.targets) == 1 \
+                    and isinstance(stmt.targets[0], ast.Name):
+                self.module[stmt.targets[0].id] = stmt.value
+
+    @staticmethod
+    def locals_of(fn: ast.AST) -> Dict[str, ast.AST]:
+        out: Dict[str, ast.AST] = {}
+        for node in ast.walk(fn):
+            if isinstance(node, ast.Assign) and len(node.targets) == 1 \
+                    and isinstance(node.targets[0], ast.Name):
+                out[node.targets[0].id] = node.value
+        return out
+
+    def resolve(self, node: ast.AST, local: Dict[str, ast.AST],
+                depth: int = 0) -> Optional[ast.AST]:
+        while isinstance(node, ast.Name) and depth < 4:
+            nxt = local.get(node.id, self.module.get(node.id))
+            if nxt is None:
+                break               # unresolvable: keep the Name itself
+            node = nxt
+            depth += 1
+        return node
+
+
+def _tuple_len(node: ast.AST) -> Optional[int]:
+    if isinstance(node, ast.Tuple):
+        if any(isinstance(e, ast.Starred) for e in node.elts):
+            return None
+        return len(node.elts)
+    return None
+
+
+def _required_positional(fn_args: ast.arguments) -> int:
+    return len(fn_args.args) - len(fn_args.defaults)
+
+
+def _program_id_dims(fn: ast.FunctionDef) -> Dict[str, int]:
+    """Names bound to pl.program_id(k) anywhere in the kernel body."""
+    dims: Dict[str, int] = {}
+    for node in ast.walk(fn):
+        if not isinstance(node, ast.Assign):
+            continue
+        tgts, vals = node.targets[0], node.value
+        pairs = []
+        if isinstance(tgts, ast.Name):
+            pairs = [(tgts, vals)]
+        elif isinstance(tgts, ast.Tuple) and isinstance(vals, ast.Tuple) \
+                and len(tgts.elts) == len(vals.elts):
+            pairs = list(zip(tgts.elts, vals.elts))
+        for t, v in pairs:
+            if isinstance(t, ast.Name) and isinstance(v, ast.Call) \
+                    and dotted_name(v.func).endswith("program_id") \
+                    and v.args and isinstance(v.args[0], ast.Constant):
+                dims[t.id] = v.args[0].value
+    return dims
+
+
+def _carry_dims(fn: ast.FunctionDef) -> List[int]:
+    """Grid dims guarding a `== 0` init (`pl.when(p == 0)` idiom): the
+    accumulator is initialized on the first step of that dim and carried
+    across its steps."""
+    dims = _program_id_dims(fn)
+    out: List[int] = []
+    for node in ast.walk(fn):
+        if not isinstance(node, ast.Call):
+            continue
+        callee = node.func
+        if not dotted_name(callee).endswith("when"):
+            continue
+        for cond in node.args:
+            for cmp in ast.walk(cond):
+                if isinstance(cmp, ast.Compare) and len(cmp.ops) == 1 \
+                        and isinstance(cmp.ops[0], ast.Eq):
+                    sides = [cmp.left, cmp.comparators[0]]
+                    const = [s for s in sides
+                             if isinstance(s, ast.Constant)
+                             and s.value == 0]
+                    if not const:
+                        continue
+                    other = sides[1 - sides.index(const[0])]
+                    dim = None
+                    if isinstance(other, ast.Name):
+                        dim = dims.get(other.id)
+                    elif isinstance(other, ast.Call) \
+                            and dotted_name(other.func).endswith(
+                                "program_id") \
+                            and other.args \
+                            and isinstance(other.args[0], ast.Constant):
+                        dim = other.args[0].value
+                    if dim is not None and dim not in out:
+                        out.append(dim)
+    return out
+
+
+def _resolve_kernel_fn(call: ast.Call, consts: _ModuleConstants,
+                       local: Dict[str, ast.AST],
+                       defs: Dict[str, ast.FunctionDef]
+                       ) -> Optional[ast.FunctionDef]:
+    if not call.args:
+        return None
+    fn = consts.resolve(call.args[0], local)
+    if isinstance(fn, ast.Call):        # functools.partial(_kernel, ...)
+        fn = fn.args[0] if fn.args else None
+        fn = consts.resolve(fn, local) if fn is not None else None
+    name = dotted_name(fn) if fn is not None else ""
+    return defs.get(name.split(".")[-1]) if name else None
+
+
+def _index_map_fns(call: ast.Call, grid_spec: Optional[ast.Call],
+                   consts: _ModuleConstants, local: Dict[str, ast.AST],
+                   defs: Dict[str, ast.FunctionDef]) -> List[ast.AST]:
+    """Collect index_map callables from in_specs/out_specs/out_shape
+    BlockSpecs of this pallas_call (through one level of Name/helper
+    resolution)."""
+    out: List[ast.AST] = []
+    roots: List[ast.AST] = []
+    for holder in (call, grid_spec):
+        if holder is None:
+            continue
+        for kw_name in ("in_specs", "out_specs", "out_spec"):
+            v = _kw(holder, kw_name)
+            if v is not None:
+                roots.append(consts.resolve(v, local) or v)
+    for root in roots:
+        for node in ast.walk(root):
+            if isinstance(node, ast.Call) \
+                    and dotted_name(node.func).endswith("BlockSpec"):
+                im = None
+                if _kw(node, "index_map") is not None:
+                    im = _kw(node, "index_map")
+                elif len(node.args) >= 2:
+                    im = node.args[1]
+                elif node.args:
+                    # positional style BlockSpec(index_map, block_shape)
+                    # vs BlockSpec(block_shape): only treat callables
+                    cand = node.args[0]
+                    if isinstance(cand, (ast.Lambda, ast.Name)):
+                        im = cand
+                if im is None:
+                    continue
+                im = consts.resolve(im, local)
+                if isinstance(im, ast.Lambda):
+                    out.append(im)
+                else:
+                    name = dotted_name(im) if im is not None else ""
+                    if name and name.split(".")[-1] in defs:
+                        out.append(defs[name.split(".")[-1]])
+    return out
+
+
+def _grid_info(call: ast.Call, consts: _ModuleConstants,
+               local: Dict[str, ast.AST]):
+    """-> (rank or None, dim_semantics tuple-node or None,
+           has_semantics_kw, grid_spec call or None)."""
+    grid = consts.resolve(_kw(call, "grid"), local) \
+        if _kw(call, "grid") is not None else None
+    grid_spec = consts.resolve(_kw(call, "grid_spec"), local) \
+        if _kw(call, "grid_spec") is not None else None
+    if grid is None and isinstance(grid_spec, ast.Call):
+        g = _kw(grid_spec, "grid")
+        grid = consts.resolve(g, local) if g is not None else None
+    rank = _tuple_len(grid) if grid is not None else None
+
+    sem_node, has_sem = None, False
+    cp = _kw(call, "compiler_params")
+    cp = consts.resolve(cp, local) if cp is not None else None
+    if isinstance(cp, ast.Call):
+        ds = _kw(cp, "dimension_semantics")
+        if ds is not None:
+            has_sem = True
+            sem_node = consts.resolve(ds, local)
+    elif isinstance(cp, ast.Dict):
+        for k, v in zip(cp.keys, cp.values):
+            if isinstance(k, ast.Constant) \
+                    and k.value == "dimension_semantics":
+                has_sem = True
+                sem_node = consts.resolve(v, local)
+    grid_spec_call = grid_spec if isinstance(grid_spec, ast.Call) else None
+    return rank, sem_node, has_sem, grid_spec_call
+
+
+def _check_null_clamp(im_fns: List[ast.AST], path: str, spans,
+                      findings: List[Finding]) -> None:
+    for im in im_fns:
+        body_nodes = [im.body] if isinstance(im, ast.Lambda) else im.body
+        clamped_lines = set()
+        for root in body_nodes if isinstance(body_nodes, list) \
+                else [body_nodes]:
+            for node in ast.walk(root):
+                if isinstance(node, ast.Call) and dotted_name(
+                        node.func) in ("jnp.where", "jnp.minimum",
+                                       "jnp.clip", "lax.select",
+                                       "jax.lax.select"):
+                    for sub in ast.walk(node):
+                        clamped_lines.add(id(sub))
+        for root in body_nodes if isinstance(body_nodes, list) \
+                else [body_nodes]:
+            for node in ast.walk(root):
+                if isinstance(node, ast.Subscript) \
+                        and id(node) not in clamped_lines:
+                    base = node.value
+                    is_bt = (isinstance(base, ast.Name)
+                             and base.id in _BT_NAMES) \
+                        or (isinstance(base, ast.Subscript)
+                            and isinstance(base.value, ast.Name)
+                            and base.value.id in ("refs", "scalar_refs"))
+                    if is_bt and not isinstance(node.slice, ast.Constant):
+                        findings.append(Finding(
+                            "HL304", path, node.lineno, node.col_offset,
+                            "block-table gather without a null-page "
+                            "clamp — wrap in jnp.where(live, bt[...], 0) "
+                            "so dead grid steps read page 0",
+                            qualname_at(spans, node.lineno)))
+
+
+def run(tree: ast.AST, src: str, path: str, ctx: PassContext) -> List[Finding]:
+    if "pallas_call" not in src:
+        return []
+    findings: List[Finding] = []
+    consts = _ModuleConstants(tree)
+    defs = {n.name: n for n in ast.walk(tree)
+            if isinstance(n, ast.FunctionDef)}
+    spans = enclosing_function_ranges(tree)
+
+    # map each pallas_call to its lexically-enclosing function's locals
+    fn_of: Dict[int, ast.AST] = {}
+    for fn in defs.values():
+        for node in ast.walk(fn):
+            fn_of[id(node)] = fn
+
+    for node in ast.walk(tree):
+        if not (isinstance(node, ast.Call)
+                and dotted_name(node.func).endswith("pallas_call")):
+            continue
+        qual = qualname_at(spans, node.lineno)
+        owner = fn_of.get(id(node))
+        local = _ModuleConstants.locals_of(owner) if owner is not None \
+            else {}
+        rank, sem_node, has_sem, grid_spec = _grid_info(node, consts, local)
+        sem_len = _tuple_len(sem_node) if sem_node is not None else None
+        sems = [e.value for e in sem_node.elts
+                if isinstance(e, ast.Constant)] \
+            if isinstance(sem_node, ast.Tuple) else None
+
+        if ctx.enabled("HL301") and rank is not None \
+                and sem_len is not None and sem_len != rank:
+            findings.append(Finding(
+                "HL301", path, node.lineno, node.col_offset,
+                f"dimension_semantics has {sem_len} entries but the grid "
+                f"has rank {rank}", qual))
+
+        kernel = _resolve_kernel_fn(node, consts, local, defs)
+        carries = _carry_dims(kernel) if kernel is not None else []
+        has_scratch = _kw(node, "scratch_shapes") is not None \
+            or (grid_spec is not None
+                and _kw(grid_spec, "scratch_shapes") is not None)
+        if ctx.enabled("HL302") and carries and has_scratch:
+            if not has_sem:
+                findings.append(Finding(
+                    "HL302", path, node.lineno, node.col_offset,
+                    f"kernel carries accumulator state across grid "
+                    f"dim(s) {carries} but declares no "
+                    f"dimension_semantics — the carry dim must be "
+                    f"'arbitrary'", qual))
+            elif sems is not None and sem_len == rank:
+                for d in carries:
+                    if d < len(sems) and sems[d] == "parallel":
+                        findings.append(Finding(
+                            "HL302", path, node.lineno, node.col_offset,
+                            f"grid dim {d} carries accumulator state "
+                            f"but is declared 'parallel'", qual))
+
+        im_fns = _index_map_fns(node, grid_spec, consts, local, defs)
+        if ctx.enabled("HL303") and rank is not None:
+            n_prefetch = 0
+            if grid_spec is not None:
+                np_kw = _kw(grid_spec, "num_scalar_prefetch")
+                if isinstance(np_kw, ast.Constant):
+                    n_prefetch = np_kw.value or 0
+            for im in im_fns:
+                args = im.args
+                req = _required_positional(args)
+                has_var = args.vararg is not None
+                ok = req == rank or (has_var and req <= rank) \
+                    or (n_prefetch and req == rank + n_prefetch)
+                if not ok:
+                    findings.append(Finding(
+                        "HL303", path, im.lineno, im.col_offset,
+                        f"index_map takes {req} required positional "
+                        f"args but the grid has rank {rank}",
+                        qualname_at(spans, im.lineno)))
+        if ctx.enabled("HL304"):
+            _check_null_clamp(im_fns, path, spans, findings)
+    # one helper can serve several pallas_calls — dedupe repeated checks
+    seen, out = set(), []
+    for f in findings:
+        k = (f.rule, f.path, f.line, f.col, f.message)
+        if k not in seen:
+            seen.add(k)
+            out.append(f)
+    return out

@@ -1,0 +1,519 @@
+"""HL1xx — jit recompile/retrace hazards.
+
+* HL101 ``import-time-jnp``: ``jnp.*`` work at module import — traces and
+  may allocate on device before the program configures backends/meshes.
+* HL102 ``traced-branch``: Python ``if``/``while`` on a value derived
+  from a jit root's *traced* arguments.  Under trace this either raises
+  (ConcretizationTypeError) or silently bakes one branch per retrace.
+* HL103 ``unbucketed-shape``: an array built with a ``len(...)``-derived
+  shape in a function that drives a jitted step — every distinct length
+  is a fresh compile; bucket it (``pow2_bucket``) first.
+* HL104 ``unstable-static-arg``: a list/dict/set literal passed as a
+  keyword to a known-jitted call — unhashable (TypeError) or, via
+  workarounds, a new compile cell per call site.
+* HL105 ``jit-in-loop``: ``jax.jit`` invoked inside a for/while body —
+  a fresh compile cell every iteration defeats the jit cache.
+
+HL102 starts from every function handed to ``jax.jit`` in the module
+(e.g. the unified step built by ``steps.make_unified_paged_step``), taints
+its parameters, and follows calls into locally-resolvable and
+project-importable callees.  Exemptions keep the rule quiet on the
+idioms this repo deliberately uses:
+
+* keyword-only params (the ``ensembles`` static-flag idiom) and params
+  named like config (``cfg``/``ctx``/``run``/...) are static;
+* ``.shape``/``.ndim``/``.dtype``/``len()``/``isinstance()`` results are
+  static under trace and kill taint;
+* ``is None`` / ``in`` tests are structure checks, not value branches.
+"""
+from __future__ import annotations
+
+import ast
+from pathlib import Path
+from typing import Dict, List, Optional, Set, Tuple
+
+from repro.analysis.core import Finding, PassContext, dotted_name
+
+RULES = {
+    "HL101": "jnp work at import time (move into a function or use np)",
+    "HL102": "Python branch on a traced value inside a jitted callable",
+    "HL103": "len()-derived array shape fed to a jitted step (bucket it)",
+    "HL104": "unhashable container literal passed as a static arg to a "
+             "jitted call",
+    "HL105": "jax.jit called inside a loop body (new compile cell per "
+             "iteration)",
+}
+
+STATIC_PARAM_NAMES = {"self", "cls", "cfg", "config", "ctx", "run", "ecfg",
+                      "mesh", "spec", "interpret"}
+_STATIC_BUILTINS = {"len", "isinstance", "type", "range", "enumerate", "zip",
+                    "min", "max", "sorted", "tuple", "list", "dict", "int",
+                    "float", "bool", "str", "getattr", "hasattr", "divmod",
+                    "abs", "sum", "round"}
+_TAINT_KILL_ATTRS = {"shape", "ndim", "dtype", "size", "sharding"}
+_MAX_DEPTH = 8
+
+# module-path AST cache for cross-module reachability (CLI lifetime)
+_MODULE_CACHE: Dict[Path, Tuple[ast.AST, str]] = {}
+
+
+# --------------------------------------------------------------------------
+# module model: defs, imports, jit roots
+# --------------------------------------------------------------------------
+class _Module:
+    def __init__(self, tree: ast.AST, path: str, file_dir: Optional[Path]):
+        self.tree = tree
+        self.path = path
+        self.file_dir = file_dir
+        self.defs: Dict[str, ast.FunctionDef] = {}
+        self.imports: Dict[str, str] = {}   # local name -> dotted module
+        for node in ast.walk(tree):
+            if isinstance(node, ast.FunctionDef):
+                self.defs.setdefault(node.name, node)
+            elif isinstance(node, ast.Import):
+                for a in node.names:
+                    self.imports[a.asname or a.name.split(".")[0]] = a.name
+            elif isinstance(node, ast.ImportFrom) and node.module:
+                for a in node.names:
+                    self.imports[a.asname or a.name] = \
+                        f"{node.module}.{a.name}"
+
+    def jit_roots(self) -> List[ast.FunctionDef]:
+        roots: Set[str] = set()
+        for node in ast.walk(self.tree):
+            if isinstance(node, ast.Call) \
+                    and dotted_name(node.func) == "jax.jit" and node.args:
+                fn = node.args[0]
+                # jax.jit(f) or jax.jit(partial(f, ...))
+                if isinstance(fn, ast.Call) and fn.args:
+                    fn = fn.args[0]
+                name = dotted_name(fn)
+                if name:
+                    roots.add(name.split(".")[-1])
+            elif isinstance(node, ast.FunctionDef):
+                for dec in node.decorator_list:
+                    d = dec.func if isinstance(dec, ast.Call) else dec
+                    if dotted_name(d) in ("jax.jit", "jit"):
+                        roots.add(node.name)
+        return [self.defs[n] for n in sorted(roots) if n in self.defs]
+
+    def resolve_module(self, dotted: str) -> Optional["_Module"]:
+        """Best-effort load of a project module for call-graph descent."""
+        if self.file_dir is None:
+            return None
+        parts = dotted.split(".")
+        for base in (self.file_dir, *list(self.file_dir.parents)[:6]):
+            cand = base.joinpath(*parts).with_suffix(".py")
+            if cand.is_file():
+                if cand not in _MODULE_CACHE:
+                    try:
+                        _MODULE_CACHE[cand] = (ast.parse(cand.read_text()),
+                                               str(cand))
+                    except (OSError, SyntaxError):
+                        return None
+                tree, p = _MODULE_CACHE[cand]
+                return _Module(tree, p, cand.parent)
+        return None
+
+
+# --------------------------------------------------------------------------
+# HL102 taint walker
+# --------------------------------------------------------------------------
+class _BranchTaint:
+    def __init__(self, module: _Module, findings: List[Finding]):
+        self.module = module
+        self.findings = findings
+        self.visited: Set[Tuple[str, str, frozenset]] = set()
+
+    # -- expression taint, given the live tainted-name set ------------
+    def tainted_expr(self, node: ast.AST, env: Set[str]) -> bool:
+        if isinstance(node, ast.Name):
+            return node.id in env
+        if isinstance(node, ast.Attribute):
+            if node.attr in _TAINT_KILL_ATTRS:
+                return False
+            return self.tainted_expr(node.value, env)
+        if isinstance(node, ast.Subscript):
+            return self.tainted_expr(node.value, env)
+        if isinstance(node, ast.BinOp):
+            return (self.tainted_expr(node.left, env)
+                    or self.tainted_expr(node.right, env))
+        if isinstance(node, ast.UnaryOp):
+            return self.tainted_expr(node.operand, env)
+        if isinstance(node, ast.BoolOp):
+            return any(self.tainted_expr(v, env) for v in node.values)
+        if isinstance(node, ast.Compare):
+            if all(isinstance(op, (ast.Is, ast.IsNot, ast.In, ast.NotIn))
+                   for op in node.ops):
+                return False                    # structure test, static
+            return (self.tainted_expr(node.left, env)
+                    or any(self.tainted_expr(c, env)
+                           for c in node.comparators))
+        if isinstance(node, (ast.Tuple, ast.List)):
+            return any(self.tainted_expr(e, env) for e in node.elts)
+        if isinstance(node, ast.IfExp):
+            return (self.tainted_expr(node.body, env)
+                    or self.tainted_expr(node.orelse, env))
+        if isinstance(node, ast.Starred):
+            return self.tainted_expr(node.value, env)
+        if isinstance(node, ast.Call):
+            return self.call_result_tainted(node, env)
+        return False
+
+    def call_result_tainted(self, call: ast.Call, env: Set[str]) -> bool:
+        name = dotted_name(call.func)
+        if name in _STATIC_BUILTINS:
+            return False
+        args_tainted = any(
+            self.tainted_expr(a, env)
+            for a in list(call.args) + [k.value for k in call.keywords])
+        # method call on a traced value (x.sum(), x.astype(...)): traced
+        if isinstance(call.func, ast.Attribute) \
+                and self.tainted_expr(call.func.value, env):
+            return True
+        if name.startswith(("jnp.", "jax.")):
+            return args_tainted or name.startswith("jax.random.")
+        target = self._resolve_callee(name)
+        if target is not None:
+            mod, fn = target
+            binding = self._bind_args(fn, call, env)
+            return self._summarize(mod, fn, binding, depth=0,
+                                   collect=False)
+        return False    # unresolved: assume host helper, keep precision
+
+    # -- callee resolution --------------------------------------------
+    def _resolve_callee(self, name: str):
+        if not name:
+            return None
+        head, *rest = name.split(".")
+        if not rest and head in self.module.defs:
+            return (self.module, self.module.defs[head])
+        if head in self.module.imports:
+            dotted = self.module.imports[head]
+            if rest:                        # api.paged_step
+                mod = self.module.resolve_module(dotted)
+                if mod and rest[0] in mod.defs:
+                    return (mod, mod.defs[rest[0]])
+            else:                           # from mod import paged_step
+                owner, _, fn = dotted.rpartition(".")
+                mod = self.module.resolve_module(owner) if owner else None
+                if mod and fn in mod.defs:
+                    return (mod, mod.defs[fn])
+        return None
+
+    def _bind_args(self, fn: ast.FunctionDef, call: ast.Call,
+                   env: Set[str]) -> Set[str]:
+        params = [a.arg for a in fn.args.args]
+        tainted: Set[str] = set()
+        for i, a in enumerate(call.args):
+            if isinstance(a, ast.Starred):
+                break
+            if i < len(params) and self.tainted_expr(a, env):
+                tainted.add(params[i])
+        kw_ok = set(params) | {a.arg for a in fn.args.kwonlyargs}
+        for k in call.keywords:
+            if k.arg and k.arg in kw_ok and self.tainted_expr(k.value, env):
+                tainted.add(k.arg)
+        return {p for p in tainted if p not in STATIC_PARAM_NAMES}
+
+    # -- function analysis --------------------------------------------
+    def _summarize(self, mod: _Module, fn: ast.FunctionDef,
+                   tainted_params: Set[str], depth: int,
+                   collect: bool) -> bool:
+        """Walk fn with the given taint; optionally emit findings.
+        Returns whether any return value is tainted."""
+        key = (mod.path, fn.name, frozenset(tainted_params))
+        if depth > _MAX_DEPTH or key in self.visited:
+            return False
+        self.visited.add(key)
+        env = set(tainted_params)
+        returns_tainted = [False]
+        self._walk_body(mod, fn, fn.body, env, depth, collect,
+                        returns_tainted)
+        return returns_tainted[0]
+
+    def analyze_root(self, fn: ast.FunctionDef) -> None:
+        env = {a.arg for a in fn.args.args
+               if a.arg not in STATIC_PARAM_NAMES}
+        self._summarize(self.module, fn, env, depth=0, collect=True)
+
+    def _walk_body(self, mod, fn, body, env, depth, collect,
+                   returns_tainted) -> None:
+        for stmt in body:
+            self._walk_stmt(mod, fn, stmt, env, depth, collect,
+                            returns_tainted)
+
+    def _flag(self, mod: _Module, node: ast.AST, fn_name: str,
+              kind: str) -> None:
+        self.findings.append(Finding(
+            "HL102", mod.path, node.lineno, node.col_offset,
+            f"{kind} depends on a traced value — retraces (or raises) "
+            f"under jit", fn_name))
+
+    def _walk_stmt(self, mod, fn, stmt, env, depth, collect,
+                   returns_tainted) -> None:
+        if isinstance(stmt, (ast.FunctionDef, ast.AsyncFunctionDef,
+                             ast.ClassDef)):
+            return
+        if isinstance(stmt, ast.Return):
+            if stmt.value is not None \
+                    and self.tainted_expr(stmt.value, env):
+                returns_tainted[0] = True
+            self._descend_calls(mod, stmt, env, depth, collect)
+            return
+        if isinstance(stmt, ast.Assign):
+            self._descend_calls(mod, stmt.value, env, depth, collect)
+            t = self.tainted_expr(stmt.value, env)
+            for tgt in stmt.targets:
+                self._bind_target(tgt, t, env, stmt.value)
+            return
+        if isinstance(stmt, ast.AugAssign):
+            if self.tainted_expr(stmt.value, env) \
+                    and isinstance(stmt.target, ast.Name):
+                env.add(stmt.target.id)
+            return
+        if isinstance(stmt, ast.If):
+            if collect and self.tainted_expr(stmt.test, env):
+                self._flag(mod, stmt.test, fn.name, "if-condition")
+            self._descend_calls(mod, stmt.test, env, depth, collect)
+            # union of branch effects (may-taint)
+            env_else = set(env)
+            self._walk_body(mod, fn, stmt.body, env, depth, collect,
+                            returns_tainted)
+            self._walk_body(mod, fn, stmt.orelse, env_else, depth,
+                            collect, returns_tainted)
+            env |= env_else
+            return
+        if isinstance(stmt, (ast.For, ast.While)):
+            if isinstance(stmt, ast.While):
+                if collect and self.tainted_expr(stmt.test, env):
+                    self._flag(mod, stmt.test, fn.name, "while-condition")
+            else:
+                if collect and self.tainted_expr(stmt.iter, env):
+                    self._flag(mod, stmt.iter, fn.name, "loop iterable")
+                self._bind_target(stmt.target,
+                                  self.tainted_expr(stmt.iter, env), env,
+                                  None)
+            for _ in range(2):      # fixpoint-ish for loop-carried taint
+                self._walk_body(mod, fn, stmt.body, env, depth, collect,
+                                returns_tainted)
+            self._walk_body(mod, fn, stmt.orelse, env, depth, collect,
+                            returns_tainted)
+            return
+        if isinstance(stmt, (ast.With,)):
+            self._walk_body(mod, fn, stmt.body, env, depth, collect,
+                            returns_tainted)
+            return
+        if isinstance(stmt, ast.Try):
+            self._walk_body(mod, fn, stmt.body, env, depth, collect,
+                            returns_tainted)
+            for h in stmt.handlers:
+                self._walk_body(mod, fn, h.body, env, depth, collect,
+                                returns_tainted)
+            self._walk_body(mod, fn, stmt.finalbody, env, depth, collect,
+                            returns_tainted)
+            return
+        if isinstance(stmt, ast.Expr):
+            self._descend_calls(mod, stmt.value, env, depth, collect)
+            return
+        # Assert/Raise/Pass/etc: no binding effects we model
+
+    def _bind_target(self, tgt, tainted, env, value) -> None:
+        if isinstance(tgt, ast.Name):
+            (env.add if tainted else env.discard)(tgt.id)
+        elif isinstance(tgt, (ast.Tuple, ast.List)):
+            if isinstance(value, (ast.Tuple, ast.List)) \
+                    and len(value.elts) == len(tgt.elts):
+                for e, v in zip(tgt.elts, value.elts):
+                    self._bind_target(e, self.tainted_expr(v, env), env, v)
+            else:
+                for e in tgt.elts:
+                    self._bind_target(e, tainted, env, None)
+        elif isinstance(tgt, ast.Starred):
+            self._bind_target(tgt.value, tainted, env, None)
+
+    def _descend_calls(self, mod, node, env, depth, collect) -> None:
+        """Follow calls with tainted args into resolvable callees and
+        lint their bodies too (findings attributed to the callee)."""
+        for call in ast.walk(node):
+            if not isinstance(call, ast.Call):
+                continue
+            name = dotted_name(call.func)
+            target = self._resolve_callee(name)
+            if target is None:
+                continue
+            callee_mod, callee = target
+            binding = self._bind_args(callee, call, env)
+            if binding:
+                # temporarily retarget resolution to the callee's module
+                saved = self.module
+                self.module = callee_mod
+                try:
+                    self._summarize(callee_mod, callee, binding,
+                                    depth + 1, collect)
+                finally:
+                    self.module = saved
+
+
+# --------------------------------------------------------------------------
+# simpler rules
+# --------------------------------------------------------------------------
+_IMPORT_TIME_ALLOW = {"jnp.dtype", "jnp.finfo", "jnp.iinfo"}
+
+
+def _import_time_jnp(tree, path, findings) -> None:
+    def walk_top(stmts):
+        for stmt in stmts:
+            if isinstance(stmt, (ast.FunctionDef, ast.AsyncFunctionDef,
+                                 ast.ClassDef)):
+                continue
+            if isinstance(stmt, ast.If):
+                walk_top(stmt.body), walk_top(stmt.orelse)
+                continue
+            if isinstance(stmt, ast.Try):
+                walk_top(stmt.body)
+                for h in stmt.handlers:
+                    walk_top(h.body)
+                walk_top(stmt.finalbody)
+                continue
+            for node in ast.walk(stmt):
+                if isinstance(node, ast.Call):
+                    name = dotted_name(node.func)
+                    if name.startswith(("jnp.", "jax.numpy.")) \
+                            and name not in _IMPORT_TIME_ALLOW:
+                        findings.append(Finding(
+                            "HL101", path, node.lineno, node.col_offset,
+                            f"{name}() at import time traces/allocates "
+                            f"before backends are configured"))
+    walk_top(tree.body)
+
+
+_CONSTRUCTORS = {"np.zeros", "np.ones", "np.empty", "np.full",
+                 "jnp.zeros", "jnp.ones", "jnp.empty", "jnp.full"}
+
+
+def _has_device_step_call(fn: ast.AST) -> bool:
+    from repro.analysis.host_sync import (CURRIED_STEP_ATTRS,
+                                          DEVICE_CALL_ATTRS)
+    for node in ast.walk(fn):
+        if isinstance(node, ast.Call):
+            if isinstance(node.func, ast.Attribute) \
+                    and node.func.attr in DEVICE_CALL_ATTRS:
+                return True
+            if isinstance(node.func, ast.Call) \
+                    and isinstance(node.func.func, ast.Attribute) \
+                    and node.func.func.attr in CURRIED_STEP_ATTRS:
+                return True
+    return False
+
+
+def _unbucketed_shapes(tree, path, findings, quals) -> None:
+    for fn, qual in quals.items():
+        if not isinstance(fn, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            continue
+        if not _has_device_step_call(fn):
+            continue
+        for node in ast.walk(fn):
+            if isinstance(node, ast.Call) \
+                    and dotted_name(node.func) in _CONSTRUCTORS \
+                    and node.args:
+                shape = node.args[0]
+                for sub in ast.walk(shape):
+                    if isinstance(sub, ast.Call) \
+                            and dotted_name(sub.func) == "len":
+                        findings.append(Finding(
+                            "HL103", path, node.lineno, node.col_offset,
+                            "len()-derived shape feeds a jitted step: "
+                            "every distinct length recompiles — bucket "
+                            "it (pow2_bucket) first", qual))
+                        break
+
+
+def _unstable_static_args(tree, path, findings, quals, spans) -> None:
+    from repro.analysis.core import qualname_at
+    from repro.analysis.host_sync import (CURRIED_STEP_ATTRS,
+                                          DEVICE_CALL_ATTRS)
+    for node in ast.walk(tree):
+        if not isinstance(node, ast.Call):
+            continue
+        jitted = (isinstance(node.func, ast.Attribute)
+                  and node.func.attr in DEVICE_CALL_ATTRS) \
+            or (isinstance(node.func, ast.Call)
+                and isinstance(node.func.func, ast.Attribute)
+                and node.func.func.attr in CURRIED_STEP_ATTRS)
+        if not jitted:
+            continue
+        for kw in node.keywords:
+            if isinstance(kw.value, (ast.List, ast.Dict, ast.Set,
+                                     ast.ListComp, ast.SetComp,
+                                     ast.DictComp)):
+                findings.append(Finding(
+                    "HL104", path, kw.value.lineno, kw.value.col_offset,
+                    f"container literal for static kwarg "
+                    f"'{kw.arg}' — unhashable under jit; pass a tuple "
+                    f"or a hashable flag", qualname_at(spans, node.lineno)))
+
+
+def _jit_in_loop(tree, path, findings, spans) -> None:
+    from repro.analysis.core import qualname_at
+
+    def scan(body, in_loop):
+        for stmt in body:
+            if isinstance(stmt, (ast.FunctionDef, ast.AsyncFunctionDef,
+                                 ast.ClassDef)):
+                scan(stmt.body, False)
+                continue
+            is_loop = isinstance(stmt, (ast.For, ast.While))
+            for node in ast.walk(stmt):
+                if isinstance(node, (ast.FunctionDef,
+                                     ast.AsyncFunctionDef)):
+                    break
+                if (in_loop or is_loop) and isinstance(node, ast.Call) \
+                        and dotted_name(node.func) == "jax.jit":
+                    findings.append(Finding(
+                        "HL105", path, node.lineno, node.col_offset,
+                        "jax.jit inside a loop creates a fresh compile "
+                        "cell per iteration — hoist and cache it",
+                        qualname_at(spans, node.lineno)))
+            for attr in ("body", "orelse", "finalbody"):
+                sub = getattr(stmt, attr, None)
+                if sub:
+                    scan(sub, in_loop or is_loop)
+            for h in getattr(stmt, "handlers", ()):
+                scan(h.body, in_loop or is_loop)
+
+    scan(tree.body, False)
+
+
+def run(tree: ast.AST, src: str, path: str, ctx: PassContext) -> List[Finding]:
+    from repro.analysis.core import enclosing_function_ranges, qualname_map
+    findings: List[Finding] = []
+    quals = qualname_map(tree)
+    spans = enclosing_function_ranges(tree)
+    if ctx.enabled("HL101"):
+        _import_time_jnp(tree, path, findings)
+    if ctx.enabled("HL102"):
+        file_dir = None
+        p = Path(path)
+        if p.is_absolute() and p.is_file():
+            file_dir = p.parent
+        elif (ctx.root / p).is_file():
+            file_dir = (ctx.root / p).parent
+        module = _Module(tree, path, file_dir)
+        bt = _BranchTaint(module, findings)
+        for root_fn in module.jit_roots():
+            bt.analyze_root(root_fn)
+    if ctx.enabled("HL103"):
+        _unbucketed_shapes(tree, path, findings, quals)
+    if ctx.enabled("HL104"):
+        _unstable_static_args(tree, path, findings, quals, spans)
+    if ctx.enabled("HL105"):
+        _jit_in_loop(tree, path, findings, spans)
+    # interprocedural descent can visit the same callee from two roots
+    seen, out = set(), []
+    for f in findings:
+        k = (f.rule, f.path, f.line, f.col, f.message)
+        if k not in seen:
+            seen.add(k)
+            out.append(f)
+    return out

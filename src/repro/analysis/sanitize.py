@@ -1,0 +1,132 @@
+"""Runtime sanitizers: the dynamic counterpart of the hornlint passes.
+
+``serve.py --sanitize`` wires three layers:
+
+* jax guards — ``jax_debug_nans`` (any NaN produced inside the jitted
+  step raises at the op that made it) and strict rank promotion
+  (silent broadcasts across mismatched ranks become errors);
+* per-tick pool invariants — the ``live_table_pages() == used_pages``
+  accounting identity (the static pool-lifetime pass's claim, now
+  checked on the real pool every tick, draft pool included) plus the
+  pool's own ``check_invariants()`` refcount/free-list audit;
+* block-table mirror consistency — every running slot's row version
+  matches the pool's table version (a stale mirror serves garbage
+  pages silently).
+
+Alerts are collected, not raised: a sanitized replay run reports all
+violations at exit (serve.py exits 3 if any fired), so one bad tick
+doesn't hide the next.  Overhead is pure-host bookkeeping and is
+excluded from bench gates — CI runs the sanitizer on a short replay
+smoke, never inside a timed phase.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Callable, List, Optional
+
+
+@dataclass
+class InvariantAlert:
+    tick: int
+    kind: str
+    message: str
+
+    def render(self) -> str:
+        return f"tick {self.tick}: [{self.kind}] {self.message}"
+
+
+@dataclass
+class Sanitizer:
+    """Attachable per-tick invariant checker for a serving Engine."""
+    check_every: int = 1
+    alerts: List[InvariantAlert] = field(default_factory=list)
+    ticks_checked: int = 0
+
+    # ------------------------------------------------------------------
+    @staticmethod
+    def install_jax_guards(rank_promotion: str = "raise") -> None:
+        """Global jax config: NaN tracing + strict rank promotion.
+        Call *before* the engine jits anything."""
+        import jax
+        jax.config.update("jax_debug_nans", True)
+        jax.config.update("jax_numpy_rank_promotion", rank_promotion)
+
+    def attach(self, engine) -> "Sanitizer":
+        """Wrap ``engine.step`` so every tick runs the invariant suite.
+        The wrapper lives on the instance, so both the live loop and
+        trace replay (which drive ``engine.step``) are covered."""
+        inner: Callable = engine.step
+
+        def stepped(*a, **kw):
+            out = inner(*a, **kw)
+            if engine.steps % max(1, self.check_every) == 0:
+                self.check(engine, engine.steps)
+            return out
+
+        engine.step = stepped
+        engine._sanitizer = self
+        return self
+
+    # ------------------------------------------------------------------
+    def _alert(self, tick: int, kind: str, message: str) -> None:
+        self.alerts.append(InvariantAlert(tick, kind, message))
+
+    def check(self, engine, tick: int) -> None:
+        self.ticks_checked += 1
+        self._check_pool(engine.pool, tick, "pool")
+        spec = getattr(engine, "spec", None)
+        if spec is not None:
+            self._check_pool(spec.pool, tick, "draft-pool")
+        self._check_block_tables(engine, tick)
+
+    def _check_pool(self, pool, tick: int, label: str) -> None:
+        live, used = pool.live_table_pages(), pool.used_pages
+        if live != used:
+            self._alert(tick, f"{label}-leak",
+                        f"live_table_pages()={live} != used_pages={used} "
+                        f"(free={pool.free_pages}, "
+                        f"cached={pool.cached_pages}) — pages left the "
+                        f"free list that no live table references")
+        try:
+            pool.check_invariants()
+        except AssertionError as e:
+            self._alert(tick, f"{label}-invariant", str(e))
+
+    def _check_block_tables(self, engine, tick: int) -> None:
+        bt = getattr(engine, "_bt", None)
+        if bt is None or not hasattr(bt, "_state"):
+            return
+        for slot, req in engine.sched.running.items():
+            try:
+                want = engine.pool.table_version(req.id)
+            except KeyError:
+                self._alert(tick, "block-table",
+                            f"slot {slot} runs seq {req.id} with no pool "
+                            f"table")
+                continue
+            have = bt._state[slot] if slot < len(bt._state) else None
+            if have is not None and have[0] == req.id \
+                    and have[-1] != want:
+                self._alert(tick, "block-table",
+                            f"slot {slot} mirror row is stale "
+                            f"(version {have[-1]} != pool version {want})")
+
+    # ------------------------------------------------------------------
+    def report(self) -> dict:
+        return {
+            "ticks_checked": self.ticks_checked,
+            "alerts": len(self.alerts),
+            "by_kind": {k: sum(1 for a in self.alerts if a.kind == k)
+                        for k in sorted({a.kind for a in self.alerts})},
+        }
+
+    def render_report(self) -> str:
+        if not self.alerts:
+            return (f"sanitizer: 0 invariant alerts over "
+                    f"{self.ticks_checked} checked ticks")
+        lines = [f"sanitizer: {len(self.alerts)} invariant alert(s) over "
+                 f"{self.ticks_checked} checked ticks"]
+        lines += [f"  {a.render()}" for a in self.alerts[:20]]
+        if len(self.alerts) > 20:
+            lines.append(f"  ... and {len(self.alerts) - 20} more")
+        return "\n".join(lines)

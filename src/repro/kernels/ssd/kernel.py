@@ -88,5 +88,10 @@ def ssd_chunk_scan(x, dt, A, Bm, Cm, *, chunk: int = 256,
         out_specs=pl.BlockSpec((1, Q, 1, P), lambda b, h, ci: (b, ci, h, 0)),
         out_shape=jax.ShapeDtypeStruct((B, S, H, P), f32),
         scratch_shapes=[pltpu.VMEM((P, N), f32)],
+        # the recurrent state carried in VMEM scratch across chunk steps
+        # makes the chunk axis sequential; (batch, head) split across
+        # megacore like the attention kernels
+        compiler_params=pltpu.TPUCompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary")),
         interpret=interpret,
     )(x, dt, A.astype(f32), Bm, Cm)

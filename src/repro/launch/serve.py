@@ -232,6 +232,12 @@ def main() -> None:
                          "traffic is scored under class 'default'; "
                          "Engine.submit(slo_class=...) routes other "
                          "classes.  Attainment is reported at exit.")
+    ap.add_argument("--sanitize", action="store_true",
+                    help="runtime sanitizers (hornlint's dynamic twin): "
+                         "jax_debug_nans, strict rank promotion, and "
+                         "per-tick pool/block-table invariant checks.  "
+                         "Pure-host overhead, excluded from bench gates; "
+                         "exits 3 if any invariant alert fires.")
     args = ap.parse_args()
 
     if args.arch is None:
@@ -255,6 +261,11 @@ def main() -> None:
         temperature=args.temperature, seed=args.seed, policy=args.policy,
         prefix_cache=args.prefix_cache, speculate_k=args.speculate,
         kv_dtype=args.kv_dtype, pages_per_step=args.pages_per_step)
+    sanitizer = None
+    if args.sanitize:
+        from repro.analysis.sanitize import Sanitizer
+        Sanitizer.install_jax_guards()      # before anything jits
+        sanitizer = Sanitizer()
     import jax
     params = api.model_init(jax.random.key(args.seed), cfg)
     bank = router = None
@@ -277,6 +288,8 @@ def main() -> None:
                         draft=draft, telemetry=telemetry)
     except ValueError as e:
         raise SystemExit(f"{args.arch}: {e}")
+    if sanitizer is not None:
+        sanitizer.attach(engine)
 
     if args.replay:
         records, meta = load_trace(args.replay)
@@ -305,6 +318,7 @@ def main() -> None:
         print(f"latency p50 {s['latency_p50_s']:.3f}s  "
               f"p99 {s['latency_p99_s']:.3f}s")
         _tail_report(engine, args, bank, wall)
+        _exit_sanitize(engine)
         return
 
     rng = np.random.default_rng(args.seed)
@@ -412,6 +426,18 @@ def main() -> None:
     print(f"latency p50 {percentile(lat, 50):.3f}s  "
           f"p99 {percentile(lat, 99):.3f}s")
     _tail_report(engine, args, bank, wall)
+    _exit_sanitize(engine)
+
+
+def _exit_sanitize(engine) -> None:
+    """Sanitizer verdict last, after every report section: a replay that
+    served every token can still have leaked pages on the way."""
+    san = getattr(engine, "_sanitizer", None)
+    if san is None:
+        return
+    print(san.render_report())
+    if san.alerts:
+        sys.exit(3)
 
 
 def _tail_report(engine, args, bank, wall: float) -> None:

@@ -46,18 +46,23 @@ def norm_apply(params, x, cfg: ModelConfig):
     are f32) removes ~4x f32 activation traffic per norm that dominated the
     train-step memory term (EXPERIMENTS.md §Perf hillclimb 3).
     """
+    # norm weights are (D,): broadcast them explicitly so the elementwise
+    # chain is rank-clean under jax_numpy_rank_promotion='raise' (the
+    # --sanitize mode); reshape-then-broadcast is bit-identical
+    def wide(w):
+        return jnp.reshape(w.astype(x.dtype), (1,) * (x.ndim - 1) + (-1,))
+
     if cfg.norm == "rmsnorm":
         var = jnp.mean(jnp.square(x.astype(f32)), axis=-1, keepdims=True)
         mult = jax.lax.rsqrt(var + cfg.norm_eps).astype(x.dtype)
-        y = x * mult * (1.0 + params["scale"]).astype(x.dtype)
+        y = x * mult * wide(1.0 + params["scale"])
     else:
         xf = x.astype(f32)
         mu = jnp.mean(xf, axis=-1, keepdims=True)
         var = jnp.var(xf, axis=-1, keepdims=True)
         mult = jax.lax.rsqrt(var + cfg.norm_eps)
         y = ((x - mu.astype(x.dtype)) * mult.astype(x.dtype)
-             * params["scale"].astype(x.dtype)
-             + params["bias"].astype(x.dtype))
+             * wide(params["scale"]) + wide(params["bias"]))
     return y.astype(x.dtype)
 
 
@@ -72,7 +77,9 @@ def apply_rope(x, positions, theta: float):
     """x: [..., S, H, D]; positions: [..., S] int32."""
     d = x.shape[-1]
     inv = rope_freqs(d, theta)                      # [D/2]
-    ang = positions[..., :, None].astype(f32) * inv  # [..., S, D/2]
+    pos = positions[..., :, None].astype(f32)       # [..., S, 1]
+    # explicit rank match (rank-promotion-clean under --sanitize)
+    ang = pos * jnp.reshape(inv, (1,) * (pos.ndim - 1) + (-1,))
     cos, sin = jnp.cos(ang)[..., None, :], jnp.sin(ang)[..., None, :]
     x1, x2 = jnp.split(x.astype(f32), 2, axis=-1)
     out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)

@@ -24,6 +24,22 @@ def pow2_bucket(n: int) -> int:
     return 1 << max(0, int(n - 1).bit_length())
 
 
+def marshal_i32(*arrays) -> tuple:
+    """Upload host arrays as device operands for a jitted step.
+
+    The single choke point for host->device argument marshalling: integer
+    operands get an explicit int32 (no accidental int64 weak types
+    changing the compile-cell signature between ticks), bool/float
+    operands keep their dtype, and the hornlint host-sync pass checks one
+    helper instead of N inline ``jnp.asarray`` blocks."""
+    out = []
+    for a in arrays:
+        arr = np.asarray(a)
+        dtype = jnp.int32 if arr.dtype.kind in ("i", "u") else None
+        out.append(jnp.asarray(arr, dtype))
+    return tuple(out)
+
+
 class BlockTableMirror:
     """[num_slots, max_pages] int32 device table + host mirror + per-slot
     dirtiness state.  ``rows_synced`` counts lifetime row uploads."""

@@ -81,7 +81,8 @@ from repro.configs.base import (ATTN, LOCAL, HornConfig, ModelConfig,
                                 RunConfig, ShapeConfig)
 from repro.core import steps as S
 from repro.models import transformer as T
-from repro.serving.block_table import BlockTableMirror, pow2_bucket
+from repro.serving.block_table import (BlockTableMirror, marshal_i32,
+                                       pow2_bucket)
 from repro.serving.kv_cache import PagePool, PagePoolOOM, kv_page_bytes
 from repro.serving.model_bank import DraftModel, ModelBank
 from repro.serving.observability import EngineStats, Telemetry
@@ -477,8 +478,7 @@ class Engine:
         dst = np.zeros((n,), np.int32)
         for i, (s, d) in enumerate(pairs):
             src[i], dst[i] = s, d
-        self.cache = self._page_copy(self.cache, jnp.asarray(src),
-                                     jnp.asarray(dst))
+        self.cache = self._page_copy(self.cache, *marshal_i32(src, dst))
         self.cow_page_copies += len(pairs)
 
     def _prepare_entry_write(self, req: Request, start: int,
@@ -727,16 +727,19 @@ class Engine:
         # entirely (static jit arg: one extra compile per bucket at most)
         ensembles = any(e.req.group is not None for e in entries.values())
         m_host = pc()
+        (d_tokens, d_starts, d_chunk_lens, d_req_ids, d_sample_steps,
+         d_submodel_ids, d_seg_ids, d_vote_flags, d_draft_lens) = \
+            marshal_i32(tokens, starts, chunk_lens, req_ids, sample_steps,
+                        submodel_ids, seg_ids, vote_flags, draft_lens)
         sampled, accepted, self.cache = self._step(
-            self.params, self.cache, jnp.asarray(tokens),
-            jnp.asarray(starts), jnp.asarray(chunk_lens),
-            self._bt.dev, jnp.asarray(req_ids),
-            jnp.asarray(sample_steps), jnp.asarray(submodel_ids),
-            jnp.asarray(seg_ids), jnp.asarray(vote_flags),
-            jnp.asarray(draft_lens), draft_probs, self._root_key,
-            ensembles=ensembles)
-        sampled = np.asarray(sampled)             # forces the tick
-        accepted = np.asarray(accepted)
+            self.params, self.cache, d_tokens, d_starts, d_chunk_lens,
+            self._bt.dev, d_req_ids, d_sample_steps, d_submodel_ids,
+            d_seg_ids, d_vote_flags, d_draft_lens, draft_probs,
+            self._root_key, ensembles=ensembles)
+        # one deliberate host pull commits the tick: both outputs in a
+        # single transfer instead of two sequential np.asarray blocks
+        sampled, accepted = \
+            jax.device_get((sampled, accepted))   # hornlint: sync-ok
         m_dev = pc()
         self.steps += 1
         post = tick_now()

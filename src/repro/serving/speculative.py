@@ -36,7 +36,8 @@ import numpy as np
 from repro.configs.base import HornConfig, RunConfig, ShapeConfig
 from repro.core import steps as S
 from repro.models import transformer as T
-from repro.serving.block_table import BlockTableMirror, pow2_bucket
+from repro.serving.block_table import (BlockTableMirror, marshal_i32,
+                                       pow2_bucket)
 from repro.serving.kv_cache import PagePool
 from repro.serving.model_bank import DraftModel
 from repro.serving.scheduler import Request
@@ -134,15 +135,18 @@ class DraftRunner:
         self._bt.sync(self.pool, {s: r for s, (r, _) in planned.items()},
                       lambda r: (r.id, r.admit_seq,
                                  self.pool.table_version(r.id)))
+        (d_tokens, d_starts, d_lens, d_req_ids, d_steps) = marshal_i32(
+            tokens, starts, lens, req_ids, steps)
         drafts, probs, self.cache = self._step_for(k)(
-            self.draft.params, self.cache, jnp.asarray(tokens),
-            jnp.asarray(starts), jnp.asarray(lens), self._bt.dev,
-            jnp.asarray(req_ids), jnp.asarray(steps), root_key)
+            self.draft.params, self.cache, d_tokens, d_starts, d_lens,
+            self._bt.dev, d_req_ids, d_steps, root_key)
         self.draft_calls += 1
         for slot, (req, _) in planned.items():
             self._pending[req.id] = (req.context_len, k)
             self._pos[req.id] = req.context_len + k - 1
-        return np.asarray(drafts), probs
+        # deliberate: the engine edits drafted tokens into the verify
+        # chunks on the host, so the proposal is pulled here
+        return np.asarray(drafts), probs          # hornlint: sync-ok
 
     def commit(self, req: Request, accepted: int) -> None:
         """Verify verdict for ``req``'s last proposal: keep the accepted

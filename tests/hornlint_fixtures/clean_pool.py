@@ -1,0 +1,25 @@
+"""Compliant twin of ``violation_pool.py`` — hornlint MUST stay quiet.
+
+Every allocation is either published before any raise, released on the
+failure path, or returned straight to the caller.
+"""
+
+
+class Scheduler:
+    def admit(self, req):
+        if req.pages > self.budget:           # check before allocating
+            raise ValueError("over budget")
+        table = self.pool.alloc_pages(req.id, req.pages)
+        self.tables[req.id] = table           # published
+
+    def admit_guarded(self, req):
+        table = self.pool.alloc_pages(req.id, req.pages)
+        try:
+            self._install(req, table)
+        except Exception:
+            self.pool.release(req.id)         # failure path releases
+            raise
+        self.tables[req.id] = table
+
+    def prefork(self, req):
+        return self.pool.fork(req.id)         # returned to caller

@@ -1,0 +1,45 @@
+"""Compliant twin of ``violation_retrace.py`` — hornlint MUST stay quiet.
+
+Same shapes of code, each rewritten the way the serving stack does it:
+constants stay numpy at import, branches test static structure only,
+shapes are bucketed, static flags are hashable, jit cells are cached.
+"""
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+TABLE = np.zeros((8, 8))                      # host constant: fine
+
+
+def pow2_bucket(n: int) -> int:
+    return 1 << max(0, int(n - 1).bit_length())
+
+
+def step(params, tokens, n_fresh, *, doubled=False):
+    if doubled:                               # kw-only static flag: fine
+        tokens = tokens * 2
+    if tokens is None:                        # structure test: fine
+        return params
+    n = tokens.shape[0]
+    if n > 4:                                 # shape-derived: fine
+        tokens = tokens[:4]
+    return tokens @ params
+
+
+variants = {flag: jax.jit(functools.partial(step, doubled=flag))
+            for flag in (False, True)}        # comprehension, not a loop
+
+
+class Driver:
+    def tick(self, toks):
+        n = pow2_bucket(len(toks))            # bucketed width
+        buf = np.zeros((n, 4), np.int32)
+        out = self._step(buf, masks=(1, 2, 3))   # tuple kwarg: hashable
+        return out
+
+    def rebuild(self, widths):
+        if 8 not in self._cells:              # cached compile cell
+            self._cells[8] = jax.jit(functools.partial(step, n_fresh=8))
+        return self._cells

@@ -1,0 +1,15 @@
+"""Seeded HL4xx violations — hornlint MUST exit nonzero on this file."""
+
+
+class Scheduler:
+    def admit(self, req):
+        table = self.pool.alloc_pages(req.id, req.pages)
+        if req.pages > self.budget:
+            # HL401: pages leak on this raise path
+            raise ValueError("over budget")
+        self.tables[req.id] = table
+
+    def prefork(self, req):
+        # HL402: allocated, never published and never released
+        child = self.pool.fork(req.id)
+        self.stats["forks"] += 1

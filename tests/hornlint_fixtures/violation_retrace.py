@@ -1,0 +1,37 @@
+"""Seeded HL1xx violations — hornlint MUST exit nonzero on this file.
+
+Never imported or executed: the analyzer works on the AST alone, and the
+filename avoids pytest's ``test_*`` collection pattern.
+"""
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+TABLE = jnp.zeros((8, 8))                     # HL101: jnp at import time
+
+
+def step(params, tokens, n_fresh):
+    if tokens.sum() > 0:                      # HL102: traced branch
+        tokens = tokens * 2
+    total = tokens @ params
+    while total.max() > 1.0:                  # HL102: traced while
+        total = total * 0.5
+    return total
+
+
+unified = jax.jit(step)
+
+
+class Driver:
+    def tick(self, toks):
+        buf = np.zeros((len(toks), 4), np.int32)   # HL103: unbucketed
+        out = self._step(buf, masks=[1, 2, 3])     # HL104: list static kwarg
+        return out
+
+    def rebuild(self, widths):
+        fns = []
+        for w in widths:
+            fns.append(jax.jit(functools.partial(step, n_fresh=w)))  # HL105
+        return fns

@@ -1,0 +1,338 @@
+"""hornlint + sanitizer tests: every rule family fires on its seeded
+violation fixture and stays silent on the compliant twin, suppression
+comments have exactly their documented scope, baselines round-trip, the
+CLI exit codes hold, the repo itself lints clean against the committed
+baseline, and the runtime Sanitizer catches a corrupted pool.
+"""
+import textwrap
+from pathlib import Path
+
+import pytest
+
+from repro.analysis import hornlint, lint_paths, lint_source
+from repro.analysis.core import (Finding, all_rules, diff_baseline,
+                                 load_baseline, write_baseline)
+
+FIXTURES = Path(__file__).parent / "hornlint_fixtures"
+REPO = Path(__file__).resolve().parents[1]
+
+
+def rules_of(findings):
+    return {f.rule for f in findings}
+
+
+def lint_fixture(name):
+    return lint_paths([FIXTURES / name], root=REPO)
+
+
+# ---------------------------------------------------------------------------
+# retrace family (HL1xx)
+# ---------------------------------------------------------------------------
+def test_retrace_fixture_fires_every_rule():
+    got = rules_of(lint_fixture("violation_retrace.py"))
+    assert {"HL101", "HL102", "HL103", "HL104", "HL105"} <= got
+
+
+def test_retrace_traced_branch_counts_both_loops():
+    f = [x for x in lint_fixture("violation_retrace.py") if x.rule == "HL102"]
+    assert len(f) == 2          # the if and the while
+    assert all(x.qualname == "step" for x in f)
+
+
+def test_retrace_clean_twin_is_quiet():
+    assert lint_fixture("clean_retrace.py") == []
+
+
+def test_retrace_shape_derived_branch_exempt():
+    src = textwrap.dedent("""\
+        import jax
+
+        def step(params, tokens):
+            if tokens.shape[0] > 4:
+                tokens = tokens[:4]
+            if tokens is None:
+                return params
+            return tokens @ params
+
+        unified = jax.jit(step)
+    """)
+    assert lint_source(src) == []
+
+
+def test_retrace_tainted_branch_inline():
+    src = textwrap.dedent("""\
+        import jax
+
+        def step(params, tokens):
+            if tokens.sum() > 0:
+                params = params + 1
+            return tokens @ params
+
+        unified = jax.jit(step)
+    """)
+    assert rules_of(lint_source(src)) == {"HL102"}
+
+
+# ---------------------------------------------------------------------------
+# host-sync family (HL2xx)
+# ---------------------------------------------------------------------------
+def test_sync_fixture_fires():
+    got = lint_fixture("violation_sync.py")
+    assert rules_of(got) == {"HL201", "HL202"}
+    assert sum(1 for f in got if f.rule == "HL201") == 2
+
+
+def test_sync_clean_twin_is_quiet():
+    assert lint_fixture("clean_sync.py") == []
+
+
+def test_sync_requires_hot_scope_opt_in():
+    # Same code as the violation fixture minus the hot-path marker: cold
+    # functions pull freely, so nothing fires.
+    src = (FIXTURES / "violation_sync.py").read_text()
+    src = src.replace("# hornlint: hot-path", "")
+    assert lint_source(src) == []
+
+
+def test_sync_sink_result_launders_taint():
+    src = textwrap.dedent("""\
+        import numpy as np
+
+        class Engine:
+            def step(self):  # hornlint: hot-path
+                out = self._step(self.params)
+                host = np.asarray(out)       # the one (unannotated) pull
+                for i in range(4):
+                    tok = int(host[i])       # host data: no extra finding
+                return tok
+    """)
+    got = lint_source(src)
+    assert [f.rule for f in got] == ["HL201"]
+
+
+# ---------------------------------------------------------------------------
+# suppression semantics
+# ---------------------------------------------------------------------------
+def test_sync_ok_suppresses_sync_family_only():
+    # sync-ok silences the HL2xx pull on its line...
+    src = textwrap.dedent("""\
+        import numpy as np
+
+        class Engine:
+            def step(self):  # hornlint: hot-path
+                out = self._step(self.params)
+                return np.asarray(out)   # hornlint: sync-ok
+    """)
+    assert lint_source(src) == []
+    # ...but has no effect on other families on its line.
+    src = textwrap.dedent("""\
+        import jax.numpy as jnp
+        T = jnp.zeros((8, 8))   # hornlint: sync-ok
+    """)
+    assert rules_of(lint_source(src)) == {"HL101"}
+
+
+def test_ignore_comment_scopes():
+    base = "import jax.numpy as jnp\nT = jnp.zeros((4,))"
+    assert rules_of(lint_source(base)) == {"HL101"}
+    assert lint_source(base + "   # hornlint: ignore") == []
+    assert lint_source(base + "   # hornlint: ignore[HL101]") == []
+    # listing a different rule does not suppress
+    assert rules_of(lint_source(base + "   # hornlint: ignore[HL999]")) \
+        == {"HL101"}
+
+
+# ---------------------------------------------------------------------------
+# pallas contracts (HL3xx)
+# ---------------------------------------------------------------------------
+def test_pallas_fixture_fires_every_rule():
+    got = rules_of(lint_fixture("violation_pallas.py"))
+    assert got == {"HL301", "HL302", "HL303", "HL304"}
+
+
+def test_pallas_clean_twin_is_quiet():
+    assert lint_fixture("clean_pallas.py") == []
+
+
+def test_pallas_semantics_rank_checked_through_constants():
+    got = lint_fixture("violation_pallas.py")
+    mismatch = [f for f in got if f.rule == "HL301"]
+    assert mismatch and "rank 3" in mismatch[0].message
+
+
+def test_pallas_real_kernels_are_contract_clean():
+    kernels = REPO / "src" / "repro" / "kernels"
+    assert [f for f in lint_paths([kernels], root=REPO)
+            if f.rule.startswith("HL3")] == []
+
+
+# ---------------------------------------------------------------------------
+# pool lifetime (HL4xx)
+# ---------------------------------------------------------------------------
+def test_pool_fixture_fires():
+    got = rules_of(lint_fixture("violation_pool.py"))
+    assert got == {"HL401", "HL402"}
+
+
+def test_pool_clean_twin_is_quiet():
+    assert lint_fixture("clean_pool.py") == []
+
+
+def test_pool_try_finally_protects_raise():
+    src = textwrap.dedent("""\
+        class S:
+            def admit(self, req):
+                t = self.pool.alloc_pages(req.id, 4)
+                try:
+                    if req.bad:
+                        raise ValueError("no")
+                    self.tables[req.id] = t
+                finally:
+                    if req.id not in self.tables:
+                        self.pool.release(req.id)
+    """)
+    assert lint_source(src) == []
+
+
+def test_pool_unprotected_raise_leaks():
+    src = textwrap.dedent("""\
+        class S:
+            def admit(self, req):
+                t = self.pool.alloc_pages(req.id, 4)
+                if req.bad:
+                    raise ValueError("no")
+                self.tables[req.id] = t
+    """)
+    assert rules_of(lint_source(src)) == {"HL401"}
+
+
+# ---------------------------------------------------------------------------
+# baseline round-trip + CLI exit codes
+# ---------------------------------------------------------------------------
+def test_baseline_round_trip(tmp_path):
+    findings = lint_fixture("violation_retrace.py")
+    assert findings
+    base = tmp_path / "baseline.json"
+    write_baseline(findings, base)
+    loaded = load_baseline(base)
+    assert set(loaded) == {f.fingerprint for f in findings}
+    new, fixed = diff_baseline(findings, loaded)
+    assert new == [] and fixed == []
+    # CLI agrees: baselined findings don't fail the run
+    rc = hornlint.main([str(FIXTURES / "violation_retrace.py"),
+                        "--baseline", str(base), "--root", str(REPO)])
+    assert rc == 0
+
+
+def test_baseline_reports_fixed_entries():
+    stale = Finding("HL999", "gone.py", 1, 0, "was fixed long ago")
+    new, fixed = diff_baseline([], {stale.fingerprint: {
+        "fingerprint": stale.fingerprint, "rule": stale.rule,
+        "path": stale.path, "qualname": "", "message": stale.message}})
+    assert new == [] and len(fixed) == 1
+
+
+def test_fingerprint_survives_line_drift():
+    a = Finding("HL201", "e.py", 10, 4, "msg", "Engine.step")
+    b = Finding("HL201", "e.py", 99, 4, "msg", "Engine.step")
+    assert a.fingerprint == b.fingerprint
+    c = Finding("HL201", "e.py", 10, 4, "other msg", "Engine.step")
+    assert a.fingerprint != c.fingerprint
+
+
+@pytest.mark.parametrize("name", ["violation_retrace.py", "violation_sync.py",
+                                  "violation_pallas.py", "violation_pool.py"])
+def test_cli_nonzero_on_violation_fixture(name):
+    assert hornlint.main([str(FIXTURES / name), "--baseline", "none"]) == 1
+
+
+@pytest.mark.parametrize("name", ["clean_retrace.py", "clean_sync.py",
+                                  "clean_pallas.py", "clean_pool.py"])
+def test_cli_zero_on_clean_fixture(name):
+    assert hornlint.main([str(FIXTURES / name), "--baseline", "none"]) == 0
+
+
+def test_cli_bad_invocation():
+    assert hornlint.main(["--rules", "HL999"]) == 2
+    assert hornlint.main(["no/such/path.py"]) == 2
+
+
+def test_rule_catalogue_is_complete():
+    got = set(all_rules())
+    assert {"HL101", "HL102", "HL103", "HL104", "HL105",
+            "HL201", "HL202",
+            "HL301", "HL302", "HL303", "HL304",
+            "HL401", "HL402"} <= got
+
+
+# ---------------------------------------------------------------------------
+# the repo gates itself
+# ---------------------------------------------------------------------------
+def test_repo_lints_clean_against_committed_baseline():
+    rc = hornlint.main([str(REPO / "src"),
+                        "--baseline", str(hornlint.DEFAULT_BASELINE),
+                        "--root", str(REPO)])
+    assert rc == 0
+
+
+# ---------------------------------------------------------------------------
+# runtime sanitizer
+# ---------------------------------------------------------------------------
+class _StubSched:
+    def __init__(self):
+        self.running = {}
+
+
+class _StubEngine:
+    def __init__(self, pool):
+        self.pool = pool
+        self.spec = None
+        self._bt = None
+        self.sched = _StubSched()
+        self.steps = 0
+
+    def step(self, now):
+        self.steps += 1
+        return []
+
+
+def test_sanitizer_quiet_on_healthy_pool():
+    from repro.analysis.sanitize import Sanitizer
+    from repro.serving.kv_cache import PagePool
+
+    pool = PagePool(num_pages=9, page_size=4)
+    pool.alloc(1, 10)
+    eng = _StubEngine(pool)
+    san = Sanitizer().attach(eng)
+    for t in range(3):
+        eng.step(float(t))
+    assert san.ticks_checked == 3
+    assert san.alerts == []
+    assert "0 invariant alerts" in san.render_report()
+
+
+def test_sanitizer_catches_leaked_pages():
+    from repro.analysis.sanitize import Sanitizer
+    from repro.serving.kv_cache import PagePool
+
+    pool = PagePool(num_pages=9, page_size=4)
+    pool.alloc(1, 10)
+    # Lose the table without returning its pages: a textbook leak —
+    # used_pages still counts them, no live table references them.
+    pool._tables.pop(1)
+    san = Sanitizer()
+    san.check(_StubEngine(pool), tick=7)
+    assert any(a.kind == "pool-leak" for a in san.alerts)
+    assert san.report()["alerts"] >= 1
+    assert "tick 7" in san.render_report()
+
+
+def test_sanitizer_check_every_throttles():
+    from repro.analysis.sanitize import Sanitizer
+    from repro.serving.kv_cache import PagePool
+
+    eng = _StubEngine(PagePool(num_pages=5, page_size=4))
+    san = Sanitizer(check_every=2).attach(eng)
+    for t in range(4):
+        eng.step(float(t))
+    assert san.ticks_checked == 2
