@@ -1,17 +1,28 @@
-"""hornlint: static-analysis passes + runtime sanitizers for the serving
-stack's unwritten contracts.
+"""hornlint + hornshape: static analysis and runtime sanitizers for the
+serving stack's unwritten contracts.
 
-Four AST pass families (see the sibling modules):
+Six AST pass families (see the sibling modules):
 
-* ``retrace``          — jit recompile/retrace hazards (HL1xx)
-* ``host_sync``        — host-device sync leaks in hot paths (HL2xx)
-* ``pallas_contracts`` — Pallas grid/BlockSpec/index_map contracts (HL3xx)
-* ``pool_lifetime``    — PagePool alloc/release pairing on all paths (HL4xx)
+* ``retrace``            — jit recompile/retrace hazards (HL1xx)
+* ``host_sync``          — host-device sync leaks in hot paths (HL2xx)
+* ``pallas_contracts``   — Pallas grid/BlockSpec/index_map contracts (HL3xx)
+* ``pool_lifetime``      — PagePool alloc/release pairing on all paths (HL4xx)
+* ``sharding_contracts`` — shard_map/PartitionSpec/collective contracts
+  for the mesh scale-out (HL5xx)
+* ``donation``           — donate_argnums use-after-donate and pallas
+  input_output_aliases consistency (HL6xx)
 
-CLI: ``python -m repro.analysis.hornlint [paths...]``.  Findings are
-diffed against a committed baseline (``analysis/baseline.json``) so CI
-fails only on *new* violations.  Runtime counterpart: ``sanitize.py``
-(wired behind ``serve.py --sanitize``).
+Beyond linting, ``hornshape`` *proves*: a symbolic abstract interpreter
+(``symbolic``) re-executes each kernel wrapper without importing jax,
+captures every ``pallas_call``, and ``blockspec_verify`` discharges
+in-bounds, exact-coverage, and aliasing obligations over all grid points
+— with counterexample grid points on failure (HS0xx).
+
+CLIs: ``python -m repro.analysis.hornlint [paths...]`` (findings diffed
+against the committed ``analysis/baseline.json`` so CI fails only on
+*new* violations) and ``python -m repro.analysis.hornshape [files...]``.
+Runtime counterpart: ``sanitize.py`` (wired behind ``serve.py
+--sanitize``), which includes the hornshape geometry twin.
 """
 from repro.analysis.core import (Finding, lint_paths, lint_source,
                                  load_baseline, write_baseline)

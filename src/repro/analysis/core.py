@@ -161,9 +161,10 @@ def qualname_at(spans: List[tuple], line: int) -> str:
 # --------------------------------------------------------------------------
 def _passes():
     # Imported lazily so `import repro.analysis.core` never cycles.
-    from repro.analysis import (host_sync, pallas_contracts, pool_lifetime,
-                                retrace)
-    return (retrace, host_sync, pallas_contracts, pool_lifetime)
+    from repro.analysis import (donation, host_sync, pallas_contracts,
+                                pool_lifetime, retrace, sharding_contracts)
+    return (retrace, host_sync, pallas_contracts, pool_lifetime,
+            sharding_contracts, donation)
 
 
 def all_rules() -> Dict[str, str]:

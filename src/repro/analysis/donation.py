@@ -1,0 +1,330 @@
+"""HL6xx — buffer donation and aliasing contracts.
+
+``donate_argnums`` invalidates the caller's array: reading it after the
+jitted call returns garbage (or raises under ``jax_debug_nans``-style
+checks only sometimes).  The serving loop donates KV caches and decode
+state on every tick, so a stale read is silent corruption.  Statically:
+
+* HL601 ``use-after-donate``: a name passed at a donated position of a
+  tracked jitted callable is *poisoned*; any later load of it in the same
+  function flags — unless it is first rebound (the ``state = step(state)``
+  idiom is clean) or only metadata (``.shape``/``.dtype``/``.ndim``/
+  ``.size``) is read.
+* HL602 ``double-donate``: a poisoned name passed again to any tracked
+  donating callable (the second call receives an invalidated buffer).
+* HL603 ``pallas-alias-bounds``: a literal ``input_output_aliases`` dict
+  on a ``pallas_call`` must map in-range input indices to in-range output
+  indices, and aliased operands with literal block shapes must agree
+  (the runtime twin in hornshape checks dtype/shape on the captured
+  geometry; this rule catches the statically-obvious cases without
+  importing jax).
+
+Tracked donating callables, per module: ``name = jax.jit(fn,
+donate_argnums=...)`` bindings and functions decorated with
+``partial(jax.jit, donate_argnums=...)``.  Calls through other paths
+(returned jitted fns, dict lookups) are out of intraprocedural reach and
+ignored.  Branches are merged as a union; loop bodies are scanned twice
+so a donation in iteration one poisons a read in iteration two.
+"""
+from __future__ import annotations
+
+import ast
+from typing import Dict, List, Optional, Set, Tuple
+
+from repro.analysis.core import (Finding, PassContext, dotted_name,
+                                 enclosing_function_ranges, qualname_at)
+
+RULES = {
+    "HL601": "donated buffer must not be read after the donating call",
+    "HL602": "donated buffer must not be re-passed to a donating call",
+    "HL603": "pallas input_output_aliases must reference valid, "
+             "consistent operands",
+}
+
+_META_ATTRS = {"shape", "dtype", "ndim", "size"}
+
+
+def _donated_indices(call: ast.Call) -> Optional[Tuple[int, ...]]:
+    """Literal donate_argnums from a jax.jit(...) call, else None."""
+    for k in call.keywords:
+        if k.arg != "donate_argnums":
+            continue
+        v = k.value
+        if isinstance(v, ast.Constant) and isinstance(v.value, int):
+            return (v.value,)
+        if isinstance(v, (ast.Tuple, ast.List)) and all(
+                isinstance(e, ast.Constant) and isinstance(e.value, int)
+                for e in v.elts):
+            return tuple(e.value for e in v.elts)
+        return None
+    return None
+
+
+def _is_jit(call: ast.Call) -> bool:
+    return dotted_name(call.func).split(".")[-1] == "jit"
+
+
+def _donating_bindings(scope: ast.AST) -> Dict[str, Tuple[int, ...]]:
+    """name -> donated positional indices, for names in ``scope`` bound to
+    a donating ``jax.jit`` result or defined under a donating decorator."""
+    out: Dict[str, Tuple[int, ...]] = {}
+    for node in ast.walk(scope):
+        if isinstance(node, ast.Assign) and len(node.targets) == 1 \
+                and isinstance(node.targets[0], ast.Name) \
+                and isinstance(node.value, ast.Call) \
+                and _is_jit(node.value):
+            idx = _donated_indices(node.value)
+            if idx:
+                out[node.targets[0].id] = idx
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            for dec in node.decorator_list:
+                if isinstance(dec, ast.Call):
+                    inner_jit = _is_jit(dec) or any(
+                        isinstance(a, (ast.Name, ast.Attribute))
+                        and dotted_name(a).split(".")[-1] == "jit"
+                        for a in dec.args)
+                    if inner_jit:
+                        idx = _donated_indices(dec)
+                        if idx:
+                            out[node.name] = idx
+    return out
+
+
+class _FlowChecker:
+    """Statement-order scan of one function body tracking poisoned names."""
+
+    def __init__(self, donors: Dict[str, Tuple[int, ...]], path: str,
+                 spans, ctx: PassContext):
+        self.donors = donors
+        self.path = path
+        self.spans = spans
+        self.ctx = ctx
+        self.findings: List[Finding] = []
+        self.poisoned: Set[str] = set()
+        self._reported: Set[Tuple[str, int, str]] = set()
+
+    def _flag(self, rule: str, node: ast.AST, msg: str):
+        key = (rule, node.lineno, msg)
+        if key in self._reported or not self.ctx.enabled(rule):
+            return
+        self._reported.add(key)
+        self.findings.append(Finding(
+            rule, self.path, node.lineno, node.col_offset, msg,
+            qualname_at(self.spans, node.lineno)))
+
+    # -- expression scan ----------------------------------------------
+    def _scan_expr(self, node: ast.AST):
+        """Flag poisoned loads and apply donations, left to right."""
+        if node is None:
+            return
+        donating_calls: List[ast.Call] = []
+        donor_args: Set[int] = set()          # id() of Name nodes at calls
+        meta_loads: Set[int] = set()
+        for sub in ast.walk(node):
+            if isinstance(sub, ast.Call) and isinstance(sub.func, ast.Name) \
+                    and sub.func.id in self.donors:
+                donating_calls.append(sub)
+                for a in sub.args:
+                    if isinstance(a, ast.Name):
+                        donor_args.add(id(a))
+            if isinstance(sub, ast.Attribute) and sub.attr in _META_ATTRS \
+                    and isinstance(sub.value, ast.Name):
+                meta_loads.add(id(sub.value))
+        # 1. poisoned names re-passed to a donating call → HL602
+        for call in donating_calls:
+            for a in call.args:
+                if isinstance(a, ast.Name) and a.id in self.poisoned:
+                    self._flag("HL602", a,
+                               f"{a.id!r} was already donated and is "
+                               f"passed again to donating "
+                               f"{call.func.id}()")
+        # 2. any other load of a poisoned name → HL601
+        for sub in ast.walk(node):
+            if isinstance(sub, ast.Name) and isinstance(sub.ctx, ast.Load) \
+                    and sub.id in self.poisoned \
+                    and id(sub) not in donor_args \
+                    and id(sub) not in meta_loads:
+                self._flag("HL601", sub,
+                           f"{sub.id!r} is read after being donated "
+                           f"(donate_argnums invalidates the buffer)")
+        # 3. the calls donate their argument names
+        for call in donating_calls:
+            for i in self.donors[call.func.id]:
+                if i < len(call.args) and isinstance(call.args[i], ast.Name):
+                    self.poisoned.add(call.args[i].id)
+
+    # -- statement walk -----------------------------------------------
+    def _bind(self, target: ast.AST):
+        if isinstance(target, ast.Name):
+            self.poisoned.discard(target.id)
+        elif isinstance(target, (ast.Tuple, ast.List)):
+            for e in target.elts:
+                self._bind(e)
+        elif isinstance(target, ast.Starred):
+            self._bind(target.value)
+
+    def run_body(self, body: List[ast.stmt]):
+        for stmt in body:
+            self._stmt(stmt)
+
+    def _stmt(self, stmt: ast.stmt):
+        if isinstance(stmt, ast.Assign):
+            self._scan_expr(stmt.value)
+            for t in stmt.targets:
+                self._bind(t)
+        elif isinstance(stmt, (ast.AnnAssign, ast.AugAssign)):
+            self._scan_expr(stmt.value)
+            if isinstance(stmt, ast.AnnAssign):
+                self._bind(stmt.target)
+        elif isinstance(stmt, ast.Delete):
+            for t in stmt.targets:
+                self._bind(t)
+        elif isinstance(stmt, (ast.Expr, ast.Return)):
+            self._scan_expr(stmt.value)
+        elif isinstance(stmt, ast.If):
+            self._scan_expr(stmt.test)
+            before = set(self.poisoned)
+            self.run_body(stmt.body)
+            after_body = set(self.poisoned)
+            self.poisoned = set(before)
+            self.run_body(stmt.orelse)
+            self.poisoned |= after_body
+        elif isinstance(stmt, (ast.For, ast.AsyncFor)):
+            self._scan_expr(stmt.iter)
+            for _ in range(2):       # second pass: cross-iteration reads
+                self._bind(stmt.target)
+                self.run_body(stmt.body)
+            self.run_body(stmt.orelse)
+        elif isinstance(stmt, ast.While):
+            for _ in range(2):
+                self._scan_expr(stmt.test)
+                self.run_body(stmt.body)
+            self.run_body(stmt.orelse)
+        elif isinstance(stmt, (ast.With, ast.AsyncWith)):
+            for item in stmt.items:
+                self._scan_expr(item.context_expr)
+                if item.optional_vars is not None:
+                    self._bind(item.optional_vars)
+            self.run_body(stmt.body)
+        elif isinstance(stmt, ast.Try):
+            self.run_body(stmt.body)
+            for h in stmt.handlers:
+                self.run_body(h.body)
+            self.run_body(stmt.orelse)
+            self.run_body(stmt.finalbody)
+        elif isinstance(stmt, (ast.FunctionDef, ast.AsyncFunctionDef,
+                               ast.ClassDef)):
+            pass                     # nested scopes are checked separately
+        elif isinstance(stmt, ast.Raise):
+            self._scan_expr(stmt.exc)
+        elif isinstance(stmt, ast.Assert):
+            self._scan_expr(stmt.test)
+
+
+def _tuple_len(node: ast.AST) -> Optional[int]:
+    if isinstance(node, (ast.Tuple, ast.List)):
+        return len(node.elts)
+    return None
+
+
+def _check_pallas_aliases(tree: ast.AST, path: str, spans,
+                          ctx: PassContext) -> List[Finding]:
+    findings: List[Finding] = []
+    for node in ast.walk(tree):
+        if not (isinstance(node, ast.Call)
+                and dotted_name(node.func).split(".")[-1] == "pallas_call"):
+            continue
+        kws = {k.arg: k.value for k in node.keywords}
+        aliases = kws.get("input_output_aliases")
+        if not isinstance(aliases, ast.Dict):
+            continue
+        pairs: List[Tuple[int, int, ast.AST]] = []
+        for k, v in zip(aliases.keys, aliases.values):
+            if isinstance(k, ast.Constant) and isinstance(k.value, int) \
+                    and isinstance(v, ast.Constant) \
+                    and isinstance(v.value, int):
+                pairs.append((k.value, v.value, k))
+        if not pairs:
+            continue
+        n_in = _tuple_len(kws.get("in_specs"))
+        n_out = _tuple_len(kws.get("out_shape"))
+        if n_out is None and "out_shape" in kws:
+            n_out = 1                # single ShapeDtypeStruct
+        qual = qualname_at(spans, node.lineno)
+        for i, o, knode in pairs:
+            if i < 0 or o < 0 or (n_in is not None and i >= n_in) \
+                    or (n_out is not None and o >= n_out):
+                findings.append(Finding(
+                    "HL603", path, knode.lineno, knode.col_offset,
+                    f"input_output_aliases {{{i}: {o}}} is out of range "
+                    f"(inputs={n_in}, outputs={n_out})", qual))
+                continue
+            in_specs = kws.get("in_specs")
+            out_specs = kws.get("out_specs")
+            in_bs = _blockspec_shape(in_specs.elts[i]) \
+                if isinstance(in_specs, (ast.Tuple, ast.List)) else None
+            if isinstance(out_specs, (ast.Tuple, ast.List)) \
+                    and o < len(out_specs.elts):
+                out_bs = _blockspec_shape(out_specs.elts[o])
+            elif out_specs is not None and o == 0:
+                out_bs = _blockspec_shape(out_specs)
+            else:
+                out_bs = None
+            if in_bs is not None and out_bs is not None and in_bs != out_bs:
+                findings.append(Finding(
+                    "HL603", path, knode.lineno, knode.col_offset,
+                    f"input_output_aliases {{{i}: {o}}} aliases operands "
+                    f"with different block shapes {in_bs} vs {out_bs}",
+                    qual))
+    return findings
+
+
+def _blockspec_shape(node: ast.AST) -> Optional[Tuple[int, ...]]:
+    if not (isinstance(node, ast.Call)
+            and dotted_name(node.func).split(".")[-1] == "BlockSpec"
+            and node.args):
+        return None
+    shp = node.args[0]
+    if isinstance(shp, (ast.Tuple, ast.List)) and all(
+            isinstance(e, ast.Constant) and isinstance(e.value, int)
+            for e in shp.elts):
+        return tuple(e.value for e in shp.elts)
+    return None
+
+
+def run(tree: ast.AST, src: str, path: str, ctx: PassContext) -> List[Finding]:
+    if "donate_argnums" not in src and "input_output_aliases" not in src:
+        return []
+    findings: List[Finding] = []
+    spans = enclosing_function_ranges(tree)
+
+    if ctx.enabled("HL601") or ctx.enabled("HL602"):
+        module_donors = _donating_bindings(tree)
+        scopes: List[Tuple[ast.AST, List[ast.stmt]]] = [(tree, tree.body)]
+        for node in ast.walk(tree):
+            if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                scopes.append((node, node.body))
+        for scope, body in scopes:
+            donors = dict(module_donors) if scope is not tree else \
+                module_donors
+            if scope is not tree:
+                donors.update(_donating_bindings(scope))
+            if not donors:
+                continue
+            checker = _FlowChecker(donors, path, spans, ctx)
+            checker.run_body(body)
+            findings.extend(checker.findings)
+
+    if ctx.enabled("HL603") and "input_output_aliases" in src:
+        findings.extend(_check_pallas_aliases(tree, path, spans, ctx))
+
+    # scopes nest, so the same statement can be scanned in both the module
+    # scope and its enclosing function — dedupe on (rule, line, message)
+    seen = set()
+    out = []
+    for f in findings:
+        key = (f.rule, f.line, f.col, f.message)
+        if key not in seen:
+            seen.add(key)
+            out.append(f)
+    return out

@@ -3,10 +3,12 @@
     python -m repro.analysis.hornlint [paths...] [options]
 
 Exit codes: 0 = clean (or only baselined findings), 1 = new findings,
-2 = bad invocation.  Default path is ``src``; default baseline is the
-committed ``src/repro/analysis/baseline.json`` (``--baseline none``
-disables the diff — every finding fails, the mode CI uses on
-seeded-violation fixtures).
+2 = bad invocation.  Default paths are ``src`` and ``benchmarks``;
+default baseline is the committed ``src/repro/analysis/baseline.json``
+(``--baseline none`` disables the diff — every finding fails, the mode
+CI uses on seeded-violation fixtures).  ``--github`` emits one
+``::error file=...`` workflow annotation per new finding so they land
+inline on the PR diff.
 
     # full run against the committed baseline
     python -m repro.analysis.hornlint src
@@ -34,8 +36,9 @@ def build_parser() -> argparse.ArgumentParser:
         prog="hornlint",
         description="static analysis for the serving stack's jit, sync, "
                     "Pallas, and pool-lifetime contracts")
-    ap.add_argument("paths", nargs="*", default=["src"],
-                    help="files or directories to lint (default: src)")
+    ap.add_argument("paths", nargs="*", default=["src", "benchmarks"],
+                    help="files or directories to lint "
+                         "(default: src benchmarks)")
     ap.add_argument("--baseline", default=str(DEFAULT_BASELINE),
                     help="baseline JSON to diff against, or 'none'")
     ap.add_argument("--write-baseline", action="store_true",
@@ -45,6 +48,9 @@ def build_parser() -> argparse.ArgumentParser:
     ap.add_argument("--list-rules", action="store_true")
     ap.add_argument("--json", action="store_true", dest="as_json",
                     help="emit findings as JSON")
+    ap.add_argument("--github", action="store_true",
+                    help="emit GitHub Actions ::error annotations for "
+                         "new findings (combinable with --json)")
     ap.add_argument("--root", default=".",
                     help="path findings are reported relative to")
     return ap
@@ -86,6 +92,15 @@ def main(argv=None) -> int:
             print(f"baseline not found: {base_path}", file=sys.stderr)
             return 2
     new, fixed = core.diff_baseline(findings, baseline)
+
+    if args.github:
+        for f in new:
+            # workflow-command message field: newlines/percents must be
+            # URL-encoded or the annotation is truncated
+            msg = (f.message.replace("%", "%25").replace("\n", "%0A")
+                   .replace("\r", ""))
+            print(f"::error file={f.path},line={f.line},"
+                  f"col={f.col + 1},title=hornlint {f.rule}::{msg}")
 
     if args.as_json:
         print(json.dumps({

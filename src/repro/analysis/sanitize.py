@@ -11,7 +11,12 @@
   pool's own ``check_invariants()`` refcount/free-list audit;
 * block-table mirror consistency — every running slot's row version
   matches the pool's table version (a stale mirror serves garbage
-  pages silently).
+  pages silently);
+* hornshape geometry twin (first checked tick only) — re-verifies the
+  paged-attention BlockSpec/grid obligations at the *engine's actual*
+  serving geometry and cross-checks the symbolic verdicts against
+  brute-force grid enumeration, so a divergence between the static
+  prover and the shipped kernel surfaces in the same alert stream.
 
 Alerts are collected, not raised: a sanitized replay run reports all
 violations at exit (serve.py exits 3 if any fired), so one bad tick
@@ -73,11 +78,39 @@ class Sanitizer:
 
     def check(self, engine, tick: int) -> None:
         self.ticks_checked += 1
+        if self.ticks_checked == 1:
+            self._check_kernel_geometry(engine, tick)
         self._check_pool(engine.pool, tick, "pool")
         spec = getattr(engine, "spec", None)
         if spec is not None:
             self._check_pool(spec.pool, tick, "draft-pool")
         self._check_block_tables(engine, tick)
+
+    def _check_kernel_geometry(self, engine, tick: int) -> None:
+        """hornshape runtime twin: symbolically re-verify paged attention
+        at the geometry this engine actually serves, and cross-check the
+        symbolic verdicts against brute-force grid enumeration.  Geometry
+        is static per engine, so once per attach is enough."""
+        ecfg = getattr(engine, "ecfg", None)
+        cfg = getattr(engine, "cfg", None)
+        bt = getattr(engine, "_bt", None)
+        if ecfg is None or cfg is None or getattr(bt, "host", None) is None:
+            return                    # not a paged engine (stubs, tests)
+        try:
+            from repro.analysis.hornshape import crosscheck_paged_geometry
+            batch, max_pages = bt.host.shape
+            alerts = crosscheck_paged_geometry(
+                batch=int(batch), kv_heads=cfg.num_kv_heads,
+                head_dim=cfg.head_dim, page_size=ecfg.page_size,
+                num_pages=ecfg.num_pages, max_pages=int(max_pages),
+                pages_per_step=ecfg.pages_per_step,
+                quantized=str(ecfg.kv_dtype) == "int8")
+        except Exception as e:        # never let the twin kill a tick
+            self._alert(tick, "hornshape",
+                        f"geometry cross-check failed: {e}")
+            return
+        for a in alerts:
+            self._alert(tick, "hornshape", a)
 
     def _check_pool(self, pool, tick: int, label: str) -> None:
         live, used = pool.live_table_pages(), pool.used_pages

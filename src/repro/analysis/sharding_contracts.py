@@ -1,0 +1,311 @@
+"""HL5xx — shard_map / PartitionSpec / collective contracts.
+
+The mesh scale-out's bug class: a wrong ``in_specs`` arity or a typo'd axis
+name doesn't crash under ``check_vma=False`` — it silently re-replicates or
+mis-partitions and corrupts results.  These rules pin the statically
+checkable parts:
+
+* HL501 ``shard-map-arity``: a literal ``in_specs`` tuple/list passed to
+  ``shard_map`` must match the wrapped function's positional signature
+  (resolved in-file; ``Name`` specs and non-literal spec containers are
+  skipped — dynamic construction is the ``ShardingCtx`` path, which jax
+  checks at trace time).
+* HL502 ``partition-axis-name``: every *string-literal* axis name inside a
+  ``PartitionSpec(...)``/``P(...)`` must exist in the mesh vocabulary —
+  the axis tuples of every ``Mesh``/``jax.make_mesh`` construction in the
+  linted file plus ``launch/mesh.py`` under the lint root (fallback:
+  ``{"pod", "data", "model"}``, the production mesh).
+* HL503 ``spec-rank``: where an argument to a shard_mapped function has a
+  statically known rank (a local ``jnp.zeros((...))``-style literal), a
+  literal ``P(...)`` spec for it must not have more entries than the
+  array has dims.
+* HL504 ``collective-axis-binding``: a collective (``psum``/``pmean``/
+  ``ppermute``/``all_gather``/``axis_index``/...) with a *literal* axis
+  name must appear inside a function wrapped by a ``shard_map`` in the
+  same file, and the axis must be in the mesh vocabulary.  Collectives
+  taking axis names from parameters/variables are skipped (they are bound
+  by their callers — jax raises at trace time if not).
+"""
+from __future__ import annotations
+
+import ast
+from pathlib import Path
+from typing import Dict, List, Optional, Set
+
+from repro.analysis.core import (Finding, PassContext, dotted_name,
+                                 enclosing_function_ranges, qualname_at)
+
+RULES = {
+    "HL501": "shard_map in_specs arity must match the wrapped fn signature",
+    "HL502": "PartitionSpec axis name must exist in the mesh",
+    "HL503": "PartitionSpec rank must not exceed the array rank",
+    "HL504": "collective axis name must be bound by an enclosing shard_map "
+             "and exist in the mesh",
+}
+
+_DEFAULT_AXES = {"pod", "data", "model"}
+_COLLECTIVES = {"psum", "pmean", "pmax", "pmin", "ppermute", "all_gather",
+                "all_to_all", "psum_scatter", "axis_index"}
+_ARRAY_CTORS = {"zeros", "ones", "full", "empty", "arange", "array"}
+
+_mesh_axes_cache: Dict[str, Set[str]] = {}
+
+
+def _literal_axis_strings(node: ast.AST) -> List[str]:
+    """String literals used as axis entries in a P(...)/Mesh(...) arg."""
+    out = []
+    if isinstance(node, ast.Constant) and isinstance(node.value, str):
+        out.append(node.value)
+    elif isinstance(node, (ast.Tuple, ast.List)):
+        for e in node.elts:
+            if isinstance(e, ast.Constant) and isinstance(e.value, str):
+                out.append(e.value)
+    return out
+
+
+def _axes_from_tree(tree: ast.AST) -> Set[str]:
+    """Axis names from every Mesh(...)/make_mesh(...) call in a module —
+    including literal tuples reached through one Name/IfExp indirection."""
+    consts: Dict[str, ast.AST] = {}
+    for node in ast.walk(tree):
+        if isinstance(node, ast.Assign) and len(node.targets) == 1 \
+                and isinstance(node.targets[0], ast.Name):
+            consts[node.targets[0].id] = node.value
+    axes: Set[str] = set()
+    for node in ast.walk(tree):
+        if not isinstance(node, ast.Call):
+            continue
+        tail = dotted_name(node.func).split(".")[-1]
+        if tail not in ("Mesh", "make_mesh"):
+            continue
+        for arg in list(node.args) + [k.value for k in node.keywords]:
+            if isinstance(arg, ast.Name):
+                arg = consts.get(arg.id, arg)
+            for sub in ast.walk(arg):
+                if isinstance(sub, (ast.Tuple, ast.List)):
+                    names = _literal_axis_strings(sub)
+                    if names and len(names) == len(sub.elts):
+                        axes.update(names)
+    return axes
+
+
+def _mesh_vocabulary(tree: ast.AST, ctx: PassContext) -> Set[str]:
+    axes = set(_DEFAULT_AXES) | _axes_from_tree(tree)
+    mesh_py = Path(ctx.root) / "src" / "repro" / "launch" / "mesh.py"
+    key = str(mesh_py)
+    if key not in _mesh_axes_cache:
+        found: Set[str] = set()
+        try:
+            found = _axes_from_tree(ast.parse(mesh_py.read_text()))
+        except (OSError, SyntaxError):
+            pass
+        _mesh_axes_cache[key] = found
+    return axes | _mesh_axes_cache[key]
+
+
+def _is_pspec_call(node: ast.Call) -> bool:
+    name = dotted_name(node.func)
+    return name == "P" or name.split(".")[-1] == "PartitionSpec"
+
+
+def _pspec_entries(node: ast.Call) -> Optional[int]:
+    if node.keywords:
+        return None
+    return len(node.args)
+
+
+def _required_total(fnargs: ast.arguments):
+    req = len(fnargs.posonlyargs) + len(fnargs.args) - len(fnargs.defaults)
+    total = len(fnargs.posonlyargs) + len(fnargs.args)
+    return req, total, fnargs.vararg is not None
+
+
+def _static_ranks(fn: ast.AST) -> Dict[str, int]:
+    """name -> ndim for locals bound to literal-shape array constructors."""
+    ranks: Dict[str, int] = {}
+    for node in ast.walk(fn):
+        if not (isinstance(node, ast.Assign) and len(node.targets) == 1
+                and isinstance(node.targets[0], ast.Name)
+                and isinstance(node.value, ast.Call)):
+            continue
+        call = node.value
+        tail = dotted_name(call.func).split(".")[-1]
+        if tail not in _ARRAY_CTORS or not call.args:
+            continue
+        shape = call.args[0]
+        if tail == "arange":
+            ranks[node.targets[0].id] = 1
+        elif isinstance(shape, (ast.Tuple, ast.List)):
+            ranks[node.targets[0].id] = len(shape.elts)
+        elif isinstance(shape, ast.Constant) and isinstance(shape.value, int):
+            ranks[node.targets[0].id] = 1
+    return ranks
+
+
+def run(tree: ast.AST, src: str, path: str, ctx: PassContext) -> List[Finding]:
+    if "shard_map" not in src and "PartitionSpec" not in src \
+            and not any(c in src for c in _COLLECTIVES):
+        return []
+    findings: List[Finding] = []
+    spans = enclosing_function_ranges(tree)
+    vocab = _mesh_vocabulary(tree, ctx)
+    all_defs = [n for n in ast.walk(tree) if isinstance(n, ast.FunctionDef)]
+
+    def resolve_def(name: str, at_line: int) -> Optional[ast.FunctionDef]:
+        """The nearest def of ``name`` lexically preceding ``at_line`` —
+        the one in scope when nested fns shadow a module-level name."""
+        best = None
+        for d in all_defs:
+            if d.name == name and d.lineno <= at_line \
+                    and (best is None or d.lineno > best.lineno):
+                best = d
+        return best
+
+    # ---- collect shard_map calls + the regions their wrapped fns span ----
+    wrapped_spans: List[tuple] = []
+    sm_calls: List[ast.Call] = []
+    for node in ast.walk(tree):
+        if isinstance(node, ast.Call) \
+                and dotted_name(node.func).split(".")[-1] == "shard_map" \
+                and node.args:
+            sm_calls.append(node)
+            target = node.args[0]
+            if isinstance(target, ast.Lambda):
+                wrapped_spans.append((target.lineno,
+                                      target.end_lineno or target.lineno))
+            elif isinstance(target, ast.Name):
+                d = resolve_def(target.id, node.lineno)
+                if d is not None:
+                    wrapped_spans.append((d.lineno, d.end_lineno or d.lineno))
+
+    def kw(call: ast.Call, name: str):
+        for k in call.keywords:
+            if k.arg == name:
+                return k.value
+        return None
+
+    # ---- HL501 arity + HL503 rank ----
+    for call in sm_calls:
+        target = call.args[0]
+        fn = None
+        if isinstance(target, ast.Lambda):
+            fn = target
+        elif isinstance(target, ast.Name):
+            fn = resolve_def(target.id, call.lineno)
+        in_specs = kw(call, "in_specs")
+        n_specs = None
+        if isinstance(in_specs, (ast.Tuple, ast.List)) \
+                and not any(isinstance(e, ast.Starred)
+                            for e in in_specs.elts):
+            n_specs = len(in_specs.elts)
+        if ctx.enabled("HL501") and fn is not None and n_specs is not None:
+            req, total, has_var = _required_total(fn.args)
+            if n_specs < req or (n_specs > total and not has_var):
+                fname = getattr(target, "id", "<lambda>")
+                findings.append(Finding(
+                    "HL501", path, call.lineno, call.col_offset,
+                    f"shard_map in_specs has {n_specs} specs but "
+                    f"{fname}() takes "
+                    f"{req if req == total else f'{req}..{total}'} "
+                    f"positional args", qualname_at(spans, call.lineno)))
+        # HL503: result called in place or via a local name, with literal
+        # P(...) specs and statically-ranked array args
+        if ctx.enabled("HL503") and n_specs is not None:
+            self_fn = None
+            for start, end, _q in spans:
+                if start <= call.lineno <= end:
+                    self_fn = (start, end)
+            owner = None
+            for d in all_defs:
+                if (d.lineno, d.end_lineno or d.lineno) == self_fn:
+                    owner = d
+            ranks = _static_ranks(owner) if owner is not None else {}
+            for use in _shard_mapped_calls(tree, call, self_fn):
+                for i, arg in enumerate(use.args[:n_specs]):
+                    spec = in_specs.elts[i]
+                    if not (isinstance(spec, ast.Call)
+                            and _is_pspec_call(spec)):
+                        continue
+                    n_entries = _pspec_entries(spec)
+                    nd = ranks.get(arg.id) \
+                        if isinstance(arg, ast.Name) else None
+                    if n_entries is not None and nd is not None \
+                            and n_entries > nd:
+                        findings.append(Finding(
+                            "HL503", path, use.lineno, use.col_offset,
+                            f"in_specs[{i}] has {n_entries} partition "
+                            f"entries but argument {arg.id!r} has rank "
+                            f"{nd}", qualname_at(spans, use.lineno)))
+
+    # ---- HL502 axis names ----
+    if ctx.enabled("HL502"):
+        for node in ast.walk(tree):
+            if isinstance(node, ast.Call) and _is_pspec_call(node):
+                for arg in node.args:
+                    for name in _literal_axis_strings(arg):
+                        if name not in vocab:
+                            findings.append(Finding(
+                                "HL502", path, node.lineno, node.col_offset,
+                                f"PartitionSpec axis {name!r} is not a "
+                                f"mesh axis (known: {sorted(vocab)})",
+                                qualname_at(spans, node.lineno)))
+
+    # ---- HL504 collective binding ----
+    if ctx.enabled("HL504"):
+        for node in ast.walk(tree):
+            if not isinstance(node, ast.Call):
+                continue
+            tail = dotted_name(node.func).split(".")[-1]
+            if tail not in _COLLECTIVES:
+                continue
+            axis_nodes = list(node.args) + [k.value for k in node.keywords
+                                            if k.arg in ("axis_name",
+                                                         "axis_index_groups")
+                                            and k.arg != "axis_index_groups"]
+            names: List[str] = []
+            for a in axis_nodes:
+                names.extend(_literal_axis_strings(a))
+            if not names:
+                continue            # axis from a variable: caller-bound
+            inside = any(s <= node.lineno <= e for s, e in wrapped_spans)
+            qual = qualname_at(spans, node.lineno)
+            if not inside:
+                findings.append(Finding(
+                    "HL504", path, node.lineno, node.col_offset,
+                    f"collective {tail}(..., {names[0]!r}) is not inside "
+                    f"any function wrapped by a shard_map in this module — "
+                    f"the axis name is unbound", qual))
+            for name in names:
+                if name not in vocab:
+                    findings.append(Finding(
+                        "HL504", path, node.lineno, node.col_offset,
+                        f"collective {tail} names axis {name!r} which is "
+                        f"not a mesh axis (known: {sorted(vocab)})", qual))
+    return findings
+
+
+def _shard_mapped_calls(tree: ast.AST, sm_call: ast.Call,
+                        owner_span) -> List[ast.Call]:
+    """Call sites of ``sm_call``'s result: direct ``shard_map(...)(args)``
+    or ``fn = shard_map(...)`` followed by ``fn(args)``.  Bound-name uses
+    are restricted to the function that made the binding (``owner_span``;
+    None means module scope) so same-named bindings in sibling functions
+    don't cross-contaminate."""
+    out: List[ast.Call] = []
+    bound: Optional[str] = None
+    for node in ast.walk(tree):
+        if isinstance(node, ast.Call) and node.func is sm_call:
+            out.append(node)
+        if isinstance(node, ast.Assign) and node.value is sm_call \
+                and len(node.targets) == 1 \
+                and isinstance(node.targets[0], ast.Name):
+            bound = node.targets[0].id
+    if bound is not None:
+        for node in ast.walk(tree):
+            if isinstance(node, ast.Call) \
+                    and isinstance(node.func, ast.Name) \
+                    and node.func.id == bound \
+                    and (owner_span is None
+                         or owner_span[0] <= node.lineno <= owner_span[1]):
+                out.append(node)
+    return out

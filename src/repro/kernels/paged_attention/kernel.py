@@ -67,6 +67,12 @@ from jax.experimental.pallas import tpu as pltpu
 f32 = jnp.float32
 NEG_INF = -1e30
 
+# The pool reserves page 0 as the null page: dead grid steps, vacated
+# block-table slots, and masked appends all route there.  The serving
+# layer (block_table/kv_cache/ops) shares this constant — hornshape
+# checks the index-map clamp against it symbolically.
+NULL_PAGE = 0
+
 # (slot, kv-head) are embarrassingly parallel — megacore may split them;
 # the page axis is sequential (online-softmax carry in VMEM scratch)
 DIM_SEMANTICS = ("parallel", "parallel", "arbitrary")
@@ -83,7 +89,7 @@ def _kv_page_specs(*, pps: int, psize: int, maxp: int, D: int, length_of,
         bt = refs[0]
         pg = p * pps + j
         live = pg * psize < length_of(b, refs)
-        return jnp.where(live, bt[b, jnp.minimum(pg, maxp - 1)], 0)
+        return jnp.where(live, bt[b, jnp.minimum(pg, maxp - 1)], NULL_PAGE)
 
     def kv_map(j):
         return lambda b, h, p, *refs: (page_of(b, p, j, refs), 0, h, 0)

@@ -8,6 +8,7 @@ from typing import Optional
 import jax.numpy as jnp
 
 from repro.kernels.backend import get_backend
+from repro.kernels.paged_attention.kernel import NULL_PAGE
 from repro.kernels.paged_attention.kernel import paged_attention as _pallas
 from repro.kernels.paged_attention.kernel import \
     paged_chunk_attention as _pallas_chunk
@@ -109,7 +110,7 @@ def paged_pool_append(pool, new, block_tables, starts, chunk_lens):
     pidx = jnp.clip(pos // psize, 0, maxp - 1)
     page = jnp.take_along_axis(block_tables, pidx, axis=1)
     valid = jnp.arange(C)[None, :] < chunk_lens[:, None]
-    page = jnp.where(valid, page, 0)
+    page = jnp.where(valid, page, NULL_PAGE)
     slot = pos % psize
     return pool.at[page.reshape(-1), slot.reshape(-1)].set(
         new.reshape((B * C,) + new.shape[2:]).astype(pool.dtype))
@@ -143,7 +144,7 @@ def paged_pool_append_quant(pool, scale, new, block_tables, starts,
     pvalid = prel < maxp
     pages = jnp.take_along_axis(block_tables,
                                 jnp.clip(prel, 0, maxp - 1), axis=1)
-    pages = jnp.where(pvalid, pages, 0)                         # [B, T]
+    pages = jnp.where(pvalid, pages, NULL_PAGE)                 # [B, T]
     got = pool[pages].astype(f32) * scale[pages][:, :, None, :, None]
     # splice the chunk tokens into the gathered pages at f32
     pos = starts[:, None] + jnp.arange(C)[None, :]              # [B, C]

@@ -18,6 +18,8 @@ from typing import Callable, Dict, List, Optional
 import jax.numpy as jnp
 import numpy as np
 
+from repro.kernels.paged_attention.kernel import NULL_PAGE
+
 
 def pow2_bucket(n: int) -> int:
     """Smallest power of two >= n (jit compile-cell bucketing)."""
@@ -61,7 +63,7 @@ class BlockTableMirror:
             req = active.get(slot)
             if req is None:
                 if self._state[slot] is not None:
-                    self.host[slot] = 0       # vacated -> null page
+                    self.host[slot] = NULL_PAGE   # vacated row
                     self._state[slot] = None
                     dirty.append(slot)
                 continue
@@ -70,7 +72,7 @@ class BlockTableMirror:
                 continue
             table = pool.table(req.id)
             row = self.host[slot]
-            row[:] = 0
+            row[:] = NULL_PAGE
             row[:len(table)] = table
             self._state[slot] = state
             dirty.append(slot)

@@ -48,6 +48,8 @@ from typing import Dict, Hashable, List, Optional, Sequence, Tuple
 
 import numpy as np
 
+from repro.kernels.paged_attention.kernel import NULL_PAGE
+
 
 class PagePoolOOM(RuntimeError):
     """Raised when an allocation cannot be satisfied from the free list
@@ -617,8 +619,8 @@ class PagePool:
                 f"seq {seq_id} maps a page twice: {t}"
             for p in t:
                 refs[p] = refs.get(p, 0) + 1
-        assert 0 not in refs, "null page mapped by a sequence"
-        assert 0 not in self._free, "null page on the free list"
+        assert NULL_PAGE not in refs, "null page mapped by a sequence"
+        assert NULL_PAGE not in self._free, "null page on the free list"
         assert refs == self._ref, \
             f"refcounts out of sync with tables: {self._ref} != {refs}"
         overlap = set(refs) & set(self._free)

@@ -1,0 +1,48 @@
+"""Compliant twin of violation_donation.py — hornlint MUST stay silent."""
+from functools import partial
+
+import jax
+import jax.experimental.pallas as pl
+import jax.numpy as jnp
+
+
+def _step(state, batch):
+    return state + batch
+
+
+def rebind_idiom(state, batch):
+    step = jax.jit(_step, donate_argnums=(0,))
+    state = step(state, batch)                        # rebinding is clean
+    return state
+
+
+def metadata_after_donate(state, batch):
+    step = jax.jit(_step, donate_argnums=(0,))
+    new_state = step(state, batch)
+    assert new_state.shape == state.shape             # metadata reads allowed
+    return new_state
+
+
+def loop_with_rebind(state, batches):
+    @partial(jax.jit, donate_argnums=(0,))
+    def tick(s, b):
+        return s + b
+
+    for b in batches:
+        state = tick(state, b)
+    return state
+
+
+def _alias_kernel(x_ref, o_ref):
+    o_ref[...] = x_ref[...] * 2.0
+
+
+def alias_in_range(x):
+    return pl.pallas_call(
+        _alias_kernel,
+        grid=(4,),
+        in_specs=[pl.BlockSpec((8,), lambda i: (i,))],
+        out_specs=pl.BlockSpec((8,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((32,), jnp.float32),
+        input_output_aliases={0: 0},
+    )(x)

@@ -1,0 +1,57 @@
+"""Compliant twin of the shape_violation_* fixtures — ``hornshape`` MUST
+prove every obligation here (exit 0): in-bounds windows, exact output
+coverage, and a null-page-guarded, width-clamped block-table gather."""
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+HORNSHAPE = {"entries": [
+    {"fn": "identity", "label": "exact-coverage",
+     "args": [{"array": [16]}]},
+    {"fn": "guarded_gather", "label": "clamped-gather",
+     "args": [{"array": [2, 16]}, {"array": [8, 4]},
+              {"table": "bt", "shape": [2, 4], "range": [0, 7]},
+              {"table": "lengths", "shape": [2], "range": [0, 16]}],
+     "null_page": ["bt", 0]},
+]}
+
+
+def _copy(x_ref, o_ref):
+    o_ref[...] = x_ref[...]
+
+
+def identity(x):
+    return pl.pallas_call(
+        _copy, grid=(4,),
+        in_specs=[pl.BlockSpec((4,), lambda i: (i,))],
+        out_specs=pl.BlockSpec((4,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((16,), jnp.float32),
+    )(x)
+
+
+def _gather(bt_ref, len_ref, x_ref, p_ref, o_ref):
+    o_ref[...] = x_ref[...] + p_ref[...]
+
+
+def guarded_gather(x, pool, bt, lengths):
+    # dead steps route to the null page, live steps clamp to the table
+    # width — the same contract the paged-attention kernels carry
+    def page_of(b, p, bt, lengths):
+        live = p * 4 < lengths[b]
+        return jnp.where(live, bt[b, jnp.minimum(p, 3)], 0)
+
+    return pl.pallas_call(
+        _gather,
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=2,
+            grid=(2, 4),
+            in_specs=[
+                pl.BlockSpec((1, 4), lambda b, p, bt, ln: (b, p)),
+                pl.BlockSpec((1, 4),
+                             lambda b, p, bt, ln: (page_of(b, p, bt, ln), 0)),
+            ],
+            out_specs=pl.BlockSpec((1, 4), lambda b, p, bt, ln: (b, p)),
+        ),
+        out_shape=jax.ShapeDtypeStruct((2, 16), jnp.float32),
+    )(bt, lengths, x, pool)

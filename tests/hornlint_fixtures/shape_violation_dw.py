@@ -1,0 +1,26 @@
+"""Seeded hornshape violation: double-write (HS003) — two grid steps
+land on the same output block outside any declared accumulator carry.
+``hornshape`` MUST exit nonzero."""
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+HORNSHAPE = {"entries": [
+    {"fn": "doublewrite", "label": "double-write",
+     "args": [{"array": [16]}]},
+]}
+
+
+def _copy(x_ref, o_ref):
+    o_ref[...] = x_ref[...]
+
+
+def doublewrite(x):
+    # i // 2 folds four grid steps onto two output blocks: each block is
+    # written twice with no "arbitrary" carry declaration
+    return pl.pallas_call(
+        _copy, grid=(4,),
+        in_specs=[pl.BlockSpec((4,), lambda i: (i,))],
+        out_specs=pl.BlockSpec((8,), lambda i: (i // 2,)),
+        out_shape=jax.ShapeDtypeStruct((16,), jnp.float32),
+    )(x)

@@ -1,0 +1,25 @@
+"""Seeded hornshape violation: output coverage hole (HS002) — the grid
+writes only half the output blocks.  ``hornshape`` MUST exit nonzero."""
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+HORNSHAPE = {"entries": [
+    {"fn": "halfwritten", "label": "coverage-hole",
+     "args": [{"array": [8]}]},
+]}
+
+
+def _copy(x_ref, o_ref):
+    o_ref[...] = x_ref[...]
+
+
+def halfwritten(x):
+    # grid extent 2 but the output has 4 blocks: blocks 2 and 3 are
+    # never written and come back as uninitialized memory
+    return pl.pallas_call(
+        _copy, grid=(2,),
+        in_specs=[pl.BlockSpec((4,), lambda i: (i,))],
+        out_specs=pl.BlockSpec((4,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((16,), jnp.float32),
+    )(x)

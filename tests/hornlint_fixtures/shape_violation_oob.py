@@ -1,0 +1,51 @@
+"""Seeded hornshape violations: OOB window (HS001) and a broken
+null-page contract (HS005) — ``hornshape`` MUST exit nonzero here."""
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+HORNSHAPE = {"entries": [
+    {"fn": "shifted", "label": "oob-shift",
+     "args": [{"array": [16]}]},
+    {"fn": "unclamped_gather", "label": "oob-gather",
+     "args": [{"array": [2, 16]}, {"array": [8, 4]},
+              {"table": "bt", "shape": [2, 4], "range": [0, 7]}],
+     "null_page": ["bt", 0]},
+]}
+
+
+def _copy(x_ref, o_ref):
+    o_ref[...] = x_ref[...]
+
+
+def shifted(x):
+    # index map reads one block past the array on the last grid step
+    return pl.pallas_call(
+        _copy, grid=(4,),
+        in_specs=[pl.BlockSpec((4,), lambda i: (i + 1,))],
+        out_specs=pl.BlockSpec((4,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((16,), jnp.float32),
+    )(x)
+
+
+def _gather(bt_ref, x_ref, p_ref, o_ref):
+    o_ref[...] = x_ref[...] + p_ref[...]
+
+
+def unclamped_gather(x, pool, bt):
+    # block-table gather with neither the dead-step null-page guard nor
+    # the min-clamp to the table width: violates the NULL_PAGE contract
+    return pl.pallas_call(
+        _gather,
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=1,
+            grid=(2, 4),
+            in_specs=[
+                pl.BlockSpec((1, 4), lambda b, p, bt: (b, p)),
+                pl.BlockSpec((1, 4), lambda b, p, bt: (bt[b, p], 0)),
+            ],
+            out_specs=pl.BlockSpec((1, 4), lambda b, p, bt: (b, p)),
+        ),
+        out_shape=jax.ShapeDtypeStruct((2, 16), jnp.float32),
+    )(bt, x, pool)

@@ -1,0 +1,60 @@
+"""Seeded HL6xx violations — hornlint MUST exit nonzero on this file."""
+from functools import partial
+
+import jax
+import jax.experimental.pallas as pl
+import jax.numpy as jnp
+
+
+def _step(state, batch):
+    return state + batch
+
+
+def use_after_donate(state, batch):                   # HL601
+    step = jax.jit(_step, donate_argnums=(0,))
+    new_state = step(state, batch)
+    return new_state + state                          # stale read
+
+
+def double_donate(state, a, b):                       # HL602
+    step = jax.jit(_step, donate_argnums=(0,))
+    first = step(state, a)
+    second = step(state, b)                           # state already donated
+    return first + second
+
+
+def loop_without_rebind(state, batches):              # HL602 across iters
+    @partial(jax.jit, donate_argnums=(0,))
+    def tick(s, b):
+        return s + b
+
+    total = 0.0
+    for b in batches:
+        total = total + tick(state, b)                # never rebinds state
+    return total
+
+
+def _alias_kernel(x_ref, o_ref):
+    o_ref[...] = x_ref[...] * 2.0
+
+
+def alias_out_of_range(x):                            # HL603
+    return pl.pallas_call(
+        _alias_kernel,
+        grid=(4,),
+        in_specs=[pl.BlockSpec((8,), lambda i: (i,))],
+        out_specs=pl.BlockSpec((8,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((32,), jnp.float32),
+        input_output_aliases={3: 0},                  # only 1 input
+    )(x)
+
+
+def alias_block_mismatch(x):                          # HL603
+    return pl.pallas_call(
+        _alias_kernel,
+        grid=(4,),
+        in_specs=[pl.BlockSpec((8,), lambda i: (i,))],
+        out_specs=pl.BlockSpec((16,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((64,), jnp.float32),
+        input_output_aliases={0: 0},                  # 8 vs 16 block
+    )(x)

@@ -207,6 +207,87 @@ def test_pool_unprotected_raise_leaks():
 
 
 # ---------------------------------------------------------------------------
+# sharding contracts (HL5xx)
+# ---------------------------------------------------------------------------
+def test_sharding_fixture_fires_every_rule():
+    got = rules_of(lint_fixture("violation_sharding.py"))
+    assert got == {"HL501", "HL502", "HL503", "HL504"}
+
+
+def test_sharding_clean_twin_is_quiet():
+    assert lint_fixture("clean_sharding.py") == []
+
+
+def test_sharding_arity_counts_the_right_nested_def():
+    # two same-named nested fns: the spec count must check the one the
+    # shard_map actually wraps, not the last one defined in the file
+    f = [x for x in lint_fixture("violation_sharding.py")
+         if x.rule == "HL501"]
+    assert len(f) == 1 and "3 positional args" in f[0].message
+
+
+def test_sharding_axis_vocabulary_includes_local_mesh():
+    # clean_sharding.py's "stage" axis comes from its own Mesh(...) call
+    f = [x for x in lint_fixture("violation_sharding.py")
+         if x.rule == "HL502"]
+    assert "'modle'" in f[0].message
+
+
+def test_mesh_and_params_are_sharding_clean():
+    paths = [REPO / "src" / "repro" / "launch" / "mesh.py",
+             REPO / "src" / "repro" / "models" / "params.py"]
+    got = [f for f in lint_paths(paths, root=REPO)
+           if f.rule.startswith("HL5")]
+    assert got == []
+
+
+# ---------------------------------------------------------------------------
+# donation / aliasing (HL6xx)
+# ---------------------------------------------------------------------------
+def test_donation_fixture_fires_every_rule():
+    got = rules_of(lint_fixture("violation_donation.py"))
+    assert got == {"HL601", "HL602", "HL603"}
+
+
+def test_donation_clean_twin_is_quiet():
+    assert lint_fixture("clean_donation.py") == []
+
+
+def test_donation_rebind_loop_is_clean():
+    src = textwrap.dedent("""\
+        import jax
+
+        def train(state, batches):
+            step = jax.jit(lambda s, b: s + b, donate_argnums=(0,))
+            for b in batches:
+                state = step(state, b)
+            return state
+    """)
+    assert lint_source(src) == []
+
+
+def test_donation_cross_iteration_use_flags():
+    src = textwrap.dedent("""\
+        import jax
+
+        def train(state, batches):
+            step = jax.jit(lambda s, b: s + b, donate_argnums=(0,))
+            outs = []
+            for b in batches:
+                outs.append(step(state, b))
+            return outs
+    """)
+    assert rules_of(lint_source(src)) == {"HL602"}
+
+
+def test_real_step_factories_are_donation_clean():
+    steps = REPO / "src" / "repro" / "core" / "steps.py"
+    got = [f for f in lint_paths([steps], root=REPO)
+           if f.rule.startswith("HL6")]
+    assert got == []
+
+
+# ---------------------------------------------------------------------------
 # baseline round-trip + CLI exit codes
 # ---------------------------------------------------------------------------
 def test_baseline_round_trip(tmp_path):
@@ -241,15 +322,28 @@ def test_fingerprint_survives_line_drift():
 
 
 @pytest.mark.parametrize("name", ["violation_retrace.py", "violation_sync.py",
-                                  "violation_pallas.py", "violation_pool.py"])
+                                  "violation_pallas.py", "violation_pool.py",
+                                  "violation_sharding.py",
+                                  "violation_donation.py"])
 def test_cli_nonzero_on_violation_fixture(name):
     assert hornlint.main([str(FIXTURES / name), "--baseline", "none"]) == 1
 
 
 @pytest.mark.parametrize("name", ["clean_retrace.py", "clean_sync.py",
-                                  "clean_pallas.py", "clean_pool.py"])
+                                  "clean_pallas.py", "clean_pool.py",
+                                  "clean_sharding.py", "clean_donation.py"])
 def test_cli_zero_on_clean_fixture(name):
     assert hornlint.main([str(FIXTURES / name), "--baseline", "none"]) == 0
+
+
+def test_cli_github_annotations(capsys):
+    rc = hornlint.main([str(FIXTURES / "violation_sharding.py"),
+                        "--baseline", "none", "--github"])
+    assert rc == 1
+    out = capsys.readouterr().out
+    ann = [ln for ln in out.splitlines() if ln.startswith("::error ")]
+    assert ann and all("file=" in ln and "line=" in ln
+                       and ",title=hornlint HL5" in ln for ln in ann)
 
 
 def test_cli_bad_invocation():
@@ -262,14 +356,16 @@ def test_rule_catalogue_is_complete():
     assert {"HL101", "HL102", "HL103", "HL104", "HL105",
             "HL201", "HL202",
             "HL301", "HL302", "HL303", "HL304",
-            "HL401", "HL402"} <= got
+            "HL401", "HL402",
+            "HL501", "HL502", "HL503", "HL504",
+            "HL601", "HL602", "HL603"} <= got
 
 
 # ---------------------------------------------------------------------------
 # the repo gates itself
 # ---------------------------------------------------------------------------
 def test_repo_lints_clean_against_committed_baseline():
-    rc = hornlint.main([str(REPO / "src"),
+    rc = hornlint.main([str(REPO / "src"), str(REPO / "benchmarks"),
                         "--baseline", str(hornlint.DEFAULT_BASELINE),
                         "--root", str(REPO)])
     assert rc == 0

@@ -1,0 +1,232 @@
+"""hornshape tests: the symbolic domain is sound on hand-checked facts,
+every committed kernel geometry proves its BlockSpec/grid obligations
+(symbolically, with brute-force agreement), the seeded shape fixtures are
+rejected with concrete counterexample grid points, the compliant twin
+proves clean, and the runtime cross-check is quiet at a sane serving
+geometry.
+"""
+from pathlib import Path
+
+import pytest
+
+from repro.analysis import hornshape
+from repro.analysis.blockspec_verify import (Geometry, Operand, brute_force,
+                                             verify)
+from repro.analysis.symbolic import (bounds, congruence, concrete_all,
+                                     free_vars, prove, s_max, s_min, seq,
+                                     sym, var)
+
+FIXTURES = Path(__file__).parent / "hornlint_fixtures"
+REPO = Path(__file__).resolve().parents[1]
+
+
+# ---------------------------------------------------------------------------
+# symbolic domain
+# ---------------------------------------------------------------------------
+def test_bounds_affine_cancellation():
+    g = var("g")
+    env = {"g": (0, 7)}
+    # 3g - g + 2 = 2g + 2: exact interval, not the naive [2-7, 23]
+    assert bounds(3 * g - g + 2, env) == (2, 16)
+    assert bounds(g - g, env) == (0, 0)
+
+
+def test_bounds_floordiv_min_max():
+    g = var("g")
+    env = {"g": (0, 9)}
+    assert bounds(g // 2, env) == (0, 4)
+    assert bounds(s_min(g, 5), env) == (0, 5)
+    assert bounds(s_max(g, 5), env) == (5, 9)
+
+
+def test_congruence_tracks_strides():
+    g = var("g")
+    env = {"g": (0, 7)}
+    m, r = congruence(4 * g + 2, env)
+    assert m == 4 and r == 2
+    # (4g + 2) % 2 == 0 exactly
+    assert congruence((4 * g + 2) % 2, env) == (0, 0)
+
+
+def test_prove_three_valued():
+    g = var("g")
+    env = {"g": (0, 3)}
+    assert prove(g <= 3, env) is True
+    assert prove(g > 3, env) is False
+    assert prove(g > 1, env) is None          # depends on g
+    # congruence refutation: 4g + 2 is never divisible by 4
+    assert prove((4 * g + 2) % 4 == 0, env) is False
+
+
+def test_concrete_enumeration_is_exact():
+    g = var("g")
+    vals = concrete_all((g + 1) // 2, {"g": 5})
+    assert vals == frozenset({3})
+
+
+def test_structural_equality_helper():
+    g = var("g")
+    assert seq(g + 1, g + 1)
+    assert not seq(g + 1, g + 2)
+    assert free_vars(g + var("h") * 2) == {"g", "h"}
+
+
+# ---------------------------------------------------------------------------
+# the committed kernels prove
+# ---------------------------------------------------------------------------
+def test_all_kernels_prove():
+    results = hornshape.check_kernels(REPO)
+    assert len(results) >= 8          # every registry entry produced a report
+    for rel, rep in results:
+        assert rep.ok, f"{rel} {rep.geometry.name}: {rep.findings}"
+        assert rep.proved_symbolically() > 0, \
+            f"{rel} {rep.geometry.name} fell back to enumeration everywhere"
+
+
+def test_kernel_verdicts_match_brute_force():
+    # ground truth: concrete enumeration over every grid point agrees with
+    # the symbolic verdict on every shared obligation
+    for rel, rep in hornshape.check_kernels(REPO):
+        bf = brute_force(rep.geometry)
+        for key, truth in bf.items():
+            got = rep.verdicts.get(key)
+            if got is not None:
+                assert got == truth, \
+                    f"{rel} {rep.geometry.name} {key}: " \
+                    f"symbolic={got!r} brute-force={truth!r}"
+
+
+def test_null_page_constant_is_hoisted():
+    from repro.kernels.paged_attention.kernel import NULL_PAGE
+    assert NULL_PAGE == 0
+    # the registry run checks the clamp contract against it
+    results = hornshape.check_kernels(REPO)
+    paged = [rep for rel, rep in results if "paged_attention" in rel]
+    assert any(("null_page",) in rep.verdicts for rep in paged)
+
+
+# ---------------------------------------------------------------------------
+# seeded fixtures
+# ---------------------------------------------------------------------------
+def _fixture_findings(name):
+    reports = hornshape.check_file(FIXTURES / name)
+    return [f for rep in reports for f in rep.findings]
+
+
+def test_oob_fixture_rejected_with_counterexample():
+    findings = _fixture_findings("shape_violation_oob.py")
+    rules = {f.rule for f in findings}
+    assert "HS001" in rules and "HS005" in rules
+    oob = next(f for f in findings if f.rule == "HS001")
+    assert "counterexample grid point" in oob.message
+    assert "(g0=3)" in oob.message
+
+
+def test_hole_fixture_rejected():
+    findings = _fixture_findings("shape_violation_hole.py")
+    assert {f.rule for f in findings} == {"HS002"}
+    assert "never written" in findings[0].message
+
+
+def test_double_write_fixture_rejected():
+    findings = _fixture_findings("shape_violation_dw.py")
+    assert {f.rule for f in findings} == {"HS003"}
+    assert "written by both" in findings[0].message
+
+
+def test_clean_fixture_proves():
+    reports = hornshape.check_file(FIXTURES / "shape_clean.py")
+    assert all(rep.ok for rep in reports)
+    assert all(rep.proved_symbolically() == len(rep.verdicts)
+               for rep in reports)
+
+
+def test_cli_exit_codes(capsys):
+    assert hornshape.main([str(FIXTURES / "shape_violation_oob.py")]) == 1
+    assert hornshape.main([str(FIXTURES / "shape_clean.py")]) == 0
+    capsys.readouterr()
+
+
+def test_cli_json_shape(capsys):
+    rc = hornshape.main([str(FIXTURES / "shape_violation_hole.py"),
+                         "--json"])
+    assert rc == 1
+    import json
+    doc = json.loads(capsys.readouterr().out)
+    assert doc["ok"] is False
+    (res,) = doc["results"]
+    assert res["grid"] == [2]
+    assert res["findings"][0]["rule"] == "HS002"
+
+
+# ---------------------------------------------------------------------------
+# direct Geometry API (no interpreter in the loop)
+# ---------------------------------------------------------------------------
+def _geom(grid, out_map, *, nblocks=4, bs=4, semantics=None):
+    return Geometry(
+        name="unit", grid=grid,
+        in_operands=[Operand("in0", (nblocks * bs,), "float32", (bs,),
+                             lambda *g: (g[0],), None)],
+        out_operands=[Operand("out0", (nblocks * bs,), "float32", (bs,),
+                              out_map, None)],
+        dimension_semantics=semantics)
+
+
+def test_accumulator_carry_is_not_a_double_write():
+    # out map ignores the (arbitrary) reduction dim: legal carry pattern
+    g = Geometry(
+        name="carry", grid=(4, 3),
+        in_operands=[Operand("in0", (16, 6), "float32", (4, 2),
+                             lambda i, k: (i, k), None)],
+        out_operands=[Operand("out0", (16,), "float32", (4,),
+                              lambda i, k: (i,), None)],
+        dimension_semantics=("parallel", "arbitrary"))
+    rep = verify(g)
+    assert rep.ok
+    # the same revisit declared "parallel" is flagged
+    g2 = Geometry(
+        name="carry-bad", grid=(4, 3),
+        in_operands=g.in_operands, out_operands=g.out_operands,
+        dimension_semantics=("parallel", "parallel"))
+    rep2 = verify(g2)
+    assert {f.rule for f in rep2.findings} == {"HS003"}
+
+
+def test_permuted_output_map_proves():
+    g = Geometry(
+        name="permute", grid=(2, 3),
+        in_operands=[Operand("in0", (2, 3), "float32", (1, 1),
+                             lambda b, c: (b, c), None)],
+        out_operands=[Operand("out0", (3, 2), "float32", (1, 1),
+                              lambda b, c: (c, b), None)])
+    rep = verify(g)
+    assert rep.ok
+
+
+def test_alias_shape_mismatch_is_hs004():
+    g = Geometry(
+        name="alias", grid=(4,),
+        in_operands=[Operand("in0", (16,), "float32", (4,),
+                             lambda i: (i,), None)],
+        out_operands=[Operand("out0", (16,), "bfloat16", (4,),
+                              lambda i: (i,), None)],
+        input_output_aliases={0: 0})
+    rep = verify(g)
+    assert any(f.rule == "HS004" for f in rep.findings)
+
+
+# ---------------------------------------------------------------------------
+# runtime twin
+# ---------------------------------------------------------------------------
+def test_crosscheck_quiet_at_serving_geometry():
+    alerts = hornshape.crosscheck_paged_geometry(
+        batch=4, kv_heads=2, head_dim=16, page_size=4, num_pages=32,
+        max_pages=8, pages_per_step=2)
+    assert alerts == []
+
+
+def test_crosscheck_quiet_quantized():
+    alerts = hornshape.crosscheck_paged_geometry(
+        batch=2, kv_heads=2, head_dim=8, page_size=4, num_pages=16,
+        max_pages=4, quantized=True)
+    assert alerts == []

@@ -1,0 +1,89 @@
+"""Property test: the symbolic verifier's verdicts match brute-force
+concrete enumeration for randomly generated kernel geometries — no false
+proofs (a symbolically-proved obligation the enumeration refutes) and no
+false alarms (a symbolic refutation the enumeration proves).
+
+Requires ``hypothesis`` (skipped where the toolchain image lacks it —
+the deterministic agreement check in test_hornshape.py still runs the
+same oracle over every committed kernel geometry).
+"""
+import pytest
+
+hypothesis = pytest.importorskip("hypothesis")
+from hypothesis import HealthCheck, given, settings, strategies as st
+
+from repro.analysis.blockspec_verify import (Geometry, Operand, brute_force,
+                                             verify)
+from repro.analysis.symbolic import s_max, s_min, sym
+
+
+@st.composite
+def geometries(draw):
+    rank = draw(st.integers(1, 3))
+    grid = tuple(draw(st.integers(1, 4)) for _ in range(rank))
+    ndim = draw(st.integers(1, 2))
+    bs = tuple(draw(st.integers(1, 3)) for _ in range(ndim))
+    nblocks = tuple(draw(st.integers(1, 4)) for _ in range(ndim))
+    shape = tuple(b * n for b, n in zip(bs, nblocks))
+    # affine index expression per output dim, optionally clamped into
+    # range (clamped dims are in-bounds by construction; unclamped ones
+    # exercise the OOB and coverage checks)
+    coeffs = [tuple(draw(st.integers(-2, 3)) for _ in range(rank))
+              for _ in range(ndim)]
+    consts = [draw(st.integers(-2, 3)) for _ in range(ndim)]
+    clamped = [draw(st.booleans()) for _ in range(ndim)]
+    use_floordiv = [draw(st.booleans()) for _ in range(ndim)]
+
+    def index_map(*gs):
+        out = []
+        for d in range(ndim):
+            e = sym(consts[d])
+            for c, g in zip(coeffs[d], gs):
+                e = e + c * g
+            if use_floordiv[d]:
+                e = e // 2
+            if clamped[d]:
+                e = s_max(s_min(e, nblocks[d] - 1), 0)
+            out.append(e)
+        return tuple(out)
+
+    in_map = lambda *gs: tuple(gs[:1])      # noqa: E731 — trivially safe
+    geom = Geometry(
+        name="prop", grid=grid,
+        in_operands=[Operand("in0", (grid[0] * 2,), "float32", (2,),
+                             in_map, None)],
+        out_operands=[Operand("out0", shape, "float32", bs,
+                              index_map, None)])
+    return geom
+
+
+@settings(max_examples=80, deadline=None,
+          suppress_health_check=[HealthCheck.too_slow])
+@given(geometries())
+def test_symbolic_verdicts_agree_with_enumeration(geom):
+    rep = verify(geom)
+    truth = brute_force(geom)
+    for key, expected in truth.items():
+        got = rep.verdicts.get(key)
+        if got is None:
+            continue                  # obligation not discharged (HS006)
+        assert got == expected, (
+            f"{key}: symbolic verdict {got!r} != enumerated {expected!r} "
+            f"for grid={geom.grid} map "
+            f"(proved symbolically: {rep.methods.get(key)})")
+
+
+@settings(max_examples=40, deadline=None,
+          suppress_health_check=[HealthCheck.too_slow])
+@given(geometries())
+def test_no_false_proofs(geom):
+    # stronger framing of the same oracle: anything the prover discharged
+    # *symbolically* must hold under exhaustive enumeration
+    rep = verify(geom)
+    truth = brute_force(geom)
+    for key, method in rep.methods.items():
+        if method != "symbolic" or key not in truth:
+            continue
+        if isinstance(truth[key], bool):
+            assert rep.verdicts[key] == truth[key], \
+                f"false {'proof' if rep.verdicts[key] else 'alarm'} at {key}"
